@@ -1,0 +1,218 @@
+"""Analytic per-cell FLOP/byte model — the roofline's compute & memory terms.
+
+Why analytic: XLA's ``cost_analysis()`` counts a ``lax.scan`` body ONCE (not
+× trip count; verified in tests/test_dryrun_parse.py), so for scanned-layer
+models its flops/bytes are misleading. The collective term stays MEASURED
+(loop-aware HLO parse in launch/dryrun.py); compute/memory come from this
+model, which counts exactly what our implementation executes:
+
+  * attention: full S×S rectangle for "attn"/"global" (our flash path does
+    not skip the causal upper triangle — a documented 2x waste, see §Perf),
+    (W+blk)×S for local/chunked windows, S_ctx per token for decode;
+  * MoE: capacity-dispatched expert FFNs (capacity_factor overhead included)
+    + always-on shared expert + router;
+  * mamba2 SSD: conv + intra-chunk (Q-square) + state path + projections;
+  * train = fwd × (1 + 2 + 1 remat-refwd) = 4× fwd flops (remat on);
+  * bytes: parameter traffic (fwd/refwd/bwd reads, grad+param+moment
+    writes/reads at their dtypes) + activation carries + logits + KV/state
+    traffic — a first-order HBM model, per device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+
+BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def _layer_kinds(cfg: ModelConfig):
+    return list(cfg.scan_unit) * cfg.resolved_units + list(cfg.tail)
+
+
+def _attn_ctx(kind: str, cfg: ModelConfig, S: int, mode: str) -> float:
+    """Average context length attended per query token (as executed)."""
+    base = kind.removesuffix("_moe")
+    if mode == "decode":
+        if base == "local":
+            return min(cfg.window, S)
+        if base == "chunked":
+            return min(cfg.chunk_size, S)
+        return S
+    blk_q = cfg.attn_blk_q
+    if base == "local":
+        return min(cfg.window + blk_q, S)
+    if base == "chunked":
+        if S <= cfg.chunk_size:  # degenerates to causal (triangular skip)
+            return min((S + 2 * cfg.attn_blk_kv) / 2, S)
+        return min(cfg.chunk_size + blk_q, S)
+    if cfg.causal:
+        # triangular block skip (lax.cond in attention.py): executed context
+        # per token averages (S + 2*blk_kv)/2
+        return min((S + 2 * cfg.attn_blk_kv) / 2, S)
+    return S  # bidirectional encoder: full rectangle
+
+
+def flops_forward(cfg: ModelConfig, S: int, B: int, mode: str) -> float:
+    """Global forward FLOPs for S tokens x B sequences (mode: train/prefill)
+    or B single tokens against S context (mode: decode)."""
+    T = B if mode == "decode" else B * S
+    dm, hd = cfg.d_model, cfg.head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    total = 0.0
+    for kind in _layer_kinds(cfg):
+        base = kind.removesuffix("_moe")
+        if base == "mamba2":
+            s = cfg.ssm
+            d_inner = s.expand * dm
+            nh = d_inner // s.head_dim
+            conv_dim = d_inner + 2 * s.n_groups * s.d_state
+            d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + nh
+            total += 2 * T * dm * d_in_proj  # in_proj
+            total += 2 * T * conv_dim * s.d_conv  # depthwise conv
+            Q = 1 if mode == "decode" else min(s.chunk, S)
+            # SSD: CB scores + intra apply + state build + state apply
+            total += 2 * T * Q * s.n_groups * s.d_state  # C·B^T
+            total += 2 * T * Q * nh * s.head_dim  # (CB⊙L)·dx
+            total += 2 * 2 * T * nh * s.head_dim * s.d_state  # states in+out
+            total += 2 * T * d_inner * dm  # out_proj
+            continue
+        # attention block
+        ctx = _attn_ctx(kind, cfg, S, mode)
+        total += 2 * T * dm * (H + 2 * Hkv) * hd  # qkv proj
+        total += 2 * 2 * T * ctx * H * hd  # scores + pv
+        total += 2 * T * H * hd * dm  # out proj
+        # ffn
+        if kind.endswith("_moe") and cfg.moe is not None:
+            m = cfg.moe
+            nmat = 3  # gated
+            total += 2 * T * dm * m.n_experts  # router
+            total += 2 * T * dm * m.d_ff_expert * nmat * m.capacity_factor  # routed
+            total += 2 * T * dm * (m.d_ff_expert * m.n_shared) * nmat  # shared
+        elif cfg.moe is not None:  # dense layer of a MoE arch
+            total += 2 * T * dm * cfg.moe.d_ff_dense * 3
+        elif cfg.d_ff:
+            nmat = 3 if cfg.activation in ("swiglu", "geglu") else 2
+            total += 2 * T * dm * cfg.d_ff * nmat
+    # embed/unembed
+    total += 2 * T * dm * cfg.vocab_size  # logits
+    return total
+
+
+def param_count(cfg: ModelConfig) -> tuple[float, float]:
+    """(total, active) parameters — analytic, matches init_params to ~1%."""
+    dm, hd = cfg.d_model, cfg.head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    total = active = 0.0
+
+    def add(n, act=None):
+        nonlocal total, active
+        total += n
+        active += n if act is None else act
+
+    for kind in _layer_kinds(cfg):
+        base = kind.removesuffix("_moe")
+        if base == "mamba2":
+            s = cfg.ssm
+            d_inner = s.expand * dm
+            nh = d_inner // s.head_dim
+            conv_dim = d_inner + 2 * s.n_groups * s.d_state
+            add(dm * (2 * d_inner + 2 * s.n_groups * s.d_state + nh))
+            add(conv_dim * (s.d_conv + 1) + 3 * nh + d_inner)
+            add(d_inner * dm)
+            continue
+        if base == "shared_attn":
+            continue  # counted once below
+        add(dm * (H + 2 * Hkv) * hd + H * hd * dm)
+        if kind.endswith("_moe") and cfg.moe is not None:
+            m = cfg.moe
+            e = 3 * dm * m.d_ff_expert
+            add(dm * m.n_experts)  # router
+            add(m.n_experts * e, act=m.top_k * e)
+            add(3 * dm * m.d_ff_expert * m.n_shared)
+        elif cfg.moe is not None:
+            add(3 * dm * cfg.moe.d_ff_dense)
+        elif cfg.d_ff:
+            nmat = 3 if cfg.activation in ("swiglu", "geglu") else 2
+            add(nmat * dm * cfg.d_ff)
+    kinds = _layer_kinds(cfg)
+    if "shared_attn" in kinds:
+        add(dm * (H + 2 * Hkv) * hd + H * hd * dm)
+        nmat = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        add(nmat * dm * cfg.d_ff)
+    add(cfg.vocab_size * dm)  # embed
+    if not cfg.tie_embeddings and cfg.frontend != "audio":
+        add(cfg.vocab_size * dm)  # lm_head
+    if cfg.frontend == "audio":
+        add(cfg.frontend_dim * dm + dm * cfg.vocab_size)
+    return total, active
+
+
+def cell_model(cfg: ModelConfig, tcfg: TrainConfig, shape: ShapeConfig,
+               n_devices: int, mesh_model: int = 16) -> dict:
+    """Per-device analytic flops + HBM bytes for one cell."""
+    S, B = shape.seq_len, shape.global_batch
+    mode = shape.kind
+    total_p, active_p = param_count(cfg)
+    pb = BYTES[cfg.param_dtype]
+    ob = BYTES[tcfg.optimizer_dtype]
+    cb = BYTES[cfg.compute_dtype]
+    # how many ways weights are split for HBM-read purposes
+    if mode in ("prefill", "decode") and cfg.serve_param_layout == "replicated":
+        w_shards = 1 if cfg.dp_over_model else mesh_model  # TP-only (or none)
+    else:
+        w_shards = n_devices
+
+    fwd = flops_forward(cfg, S, B, "prefill" if mode == "train" else mode)
+    if mode == "train":
+        flops = fwd * (4.0 if cfg.remat else 3.0)  # fwd + bwd(2x) (+ refwd)
+    else:
+        flops = fwd
+    flops_dev = flops / n_devices
+
+    # ---- HBM bytes (per device, first order) -------------------------------
+    T = B if mode == "decode" else B * S
+    n_layers = cfg.n_layers
+    act_unit = (T / n_devices * min(16, n_devices)) if False else T  # simple: global T
+    if mode == "train":
+        passes = 3 if cfg.remat else 2  # weight reads: fwd, refwd, bwd
+        wbytes = total_p * (passes * pb + 2 * pb + 4 * ob + 2 * ob) / n_devices
+        # activations: carry in/out per layer (3 passes) + logits f32 2x
+        abytes = (T * cfg.d_model * cb * 6 * n_layers) / n_devices
+        abytes += (T * cfg.vocab_size * 4 * 2) / n_devices
+    elif mode == "prefill":
+        wbytes = total_p * pb / w_shards
+        abytes = (T * cfg.d_model * cb * 4 * n_layers) / n_devices
+        abytes += (B * cfg.vocab_size * 4) / n_devices  # last-pos logits only
+        # KV cache writes
+        kv = sum(
+            min(_attn_ctx(k, cfg, S, "decode"), S) for k in _layer_kinds(cfg)
+            if k.removesuffix("_moe") not in ("mamba2",)
+        )
+        abytes += B * kv * 2 * cfg.n_kv_heads * cfg.head_dim * cb / n_devices
+    else:  # decode
+        wbytes = total_p * pb / w_shards  # every weight read once per token
+        kv = sum(
+            min(_attn_ctx(k, cfg, S, "decode"), S) for k in _layer_kinds(cfg)
+            if k.removesuffix("_moe") not in ("mamba2",)
+        )
+        abytes = B * kv * 2 * cfg.n_kv_heads * cfg.head_dim * cb / n_devices
+        if cfg.ssm is not None:
+            d_inner = cfg.ssm.expand * cfg.d_model
+            nh = d_inner // cfg.ssm.head_dim
+            n_mamba = sum(1 for k in _layer_kinds(cfg) if k == "mamba2")
+            abytes += (B * nh * cfg.ssm.head_dim * cfg.ssm.d_state * 4 * 2 *
+                       n_mamba) / n_devices
+        abytes += B * cfg.vocab_size * 4 / n_devices
+
+    model_flops = (6.0 if mode == "train" else 2.0) * active_p * T / n_devices
+    return {
+        "flops_dev": flops_dev,
+        "bytes_dev": wbytes + abytes,
+        "weight_bytes_dev": wbytes,
+        "act_bytes_dev": abytes,
+        "model_flops_dev": model_flops,
+        "total_params": total_p,
+        "active_params": active_p,
+    }

@@ -1,0 +1,92 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb driver: lower+compile ONE cell with config overrides and
+report the roofline terms + memory + collective breakdown.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch llama4-maverick-400b-a17b \
+        --shape train_4k --set embed_table_spec=dm_data logits_dtype=bfloat16 \
+        --tag mav_embed_fix
+
+Each run appends a JSON line to results/hillclimb.jsonl — the §Perf iteration
+log is assembled from these records.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--set", nargs="*", default=[], help="model cfg overrides k=v")
+    ap.add_argument("--tset", nargs="*", default=[], help="train cfg overrides k=v")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--out", default="results/hillclimb.jsonl")
+    args = ap.parse_args()
+
+    from benchmarks.analytic import cell_model
+    from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+    from repro.configs import SHAPES, get_bundle
+    from repro.launch.compile import lower_cell
+    from repro.launch.dryrun import parse_collectives
+    from repro.launch.mesh import make_production_mesh
+
+    bundle = get_bundle(args.arch)
+    m_over = dict(parse_override(s) for s in args.set)
+    t_over = dict(parse_override(s) for s in args.tset)
+    mcfg = dataclasses.replace(bundle.model, **m_over)
+    tcfg = dataclasses.replace(bundle.train, **t_over)
+    bundle = dataclasses.replace(bundle, model=mcfg, train=tcfg)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "pod2"))
+
+    t0 = time.time()
+    lowered = lower_cell(bundle, shape, mesh)
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    coll = parse_collectives(compiled.as_text())
+    model = cell_model(mcfg, tcfg, shape, int(mesh.devices.size))
+    t_comp = model["flops_dev"] / PEAK_FLOPS
+    t_mem = model["bytes_dev"] / HBM_BW
+    t_coll = coll["total_bytes"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    frac = (model["model_flops_dev"] / PEAK_FLOPS) / max(terms.values())
+
+    rec = {
+        "tag": args.tag, "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+        "overrides": {**m_over, **{f"train.{k}": v for k, v in t_over.items()}},
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom, "roofline_fraction": frac,
+        "temp_gib": ma.temp_size_in_bytes / 2**30,
+        "collective_per_type": coll["per_type_bytes"],
+        "collective_counts": coll["counts"],
+        "compile_s": round(compile_s, 1),
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Kernel microbenchmarks: CPU production path (jnp oracle) timings + Pallas
+interpret-mode validation cost. On TPU the ops.py dispatcher switches to the
+compiled Pallas kernels; the dry-run roofline covers their cost model."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.kernels import ops, ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    n, d, H, M = 4096, 64, 256, 32
+    levels = jax.random.randint(key, (n, d), 0, M + 1)
+    folded = jax.random.normal(jax.random.fold_in(key, 1), (H, d, M + 1))
+    weights = jax.random.normal(jax.random.fold_in(key, 2), (n, d))
+
+    proj = jax.jit(lambda l, f: ops.alsh_project(l, f))
+    proj_w = jax.jit(lambda l, f, w: ops.alsh_project(l, f, w))
+    out = [
+        row("kernel_alsh_project_data", time_fn(proj, levels, folded),
+            f"n={n},d={d},H={H},M={M}"),
+        row("kernel_alsh_project_query", time_fn(proj_w, levels, folded, weights),
+            "weighted"),
+    ]
+
+    nd, b, dd = 65536, 64, 128
+    data = jax.random.normal(jax.random.fold_in(key, 3), (nd, dd))
+    q = jax.random.normal(jax.random.fold_in(key, 4), (b, dd))
+    w = jax.random.normal(jax.random.fold_in(key, 5), (b, dd))
+    scan = jax.jit(lambda: ops.wl1_scan(data, q, w))
+    out.append(row("kernel_wl1_scan", time_fn(scan),
+                   f"n={nd},b={b},d={dd} ({nd*b*dd*3/1e9:.1f} GOP)"))
+
+    pts = jax.random.normal(jax.random.fold_in(key, 6), (b, 512, dd))
+    rer = jax.jit(lambda: ops.wl1_rerank(pts, q, w))
+    out.append(row("kernel_wl1_rerank", time_fn(rer), f"b={b},C=512,d={dd}"))
+    return out

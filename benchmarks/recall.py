@@ -1,0 +1,42 @@
+"""Recall vs approximation budget: both ALSH families at matched candidate
+budgets against the exact scan. derived = recall@10 per configuration."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import BoundedSpace, IndexConfig, build_index, query_index
+from repro.distance import brute_force_nn
+
+
+def run():
+    n, d, M, b, k = 20_000, 16, 16, 32, 10
+    key = jax.random.PRNGKey(0)
+    space = BoundedSpace(0.0, 1.0, float(M))
+    data = jax.random.uniform(jax.random.fold_in(key, 0), (n, d))
+    q = jax.random.uniform(jax.random.fold_in(key, 1), (b, d))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (b, d))) + 0.2
+    _, bf_ids = brute_force_nn(data, q, w, k=k)
+
+    out = []
+    for family, K, L, W in (("theta", 10, 16, 4.0), ("theta", 12, 32, 4.0),
+                            ("l2", 8, 32, 24.0)):
+        cfg = IndexConfig(d=d, M=M, K=K, L=L, family=family, W=W,
+                          max_candidates=256, space=space)
+        idx = build_index(jax.random.fold_in(key, 3), data, cfg)
+        res = query_index(idx, q, w, cfg, k=k)
+        recall = np.mean([
+            len(set(np.asarray(res.ids[i])) & set(np.asarray(bf_ids[i]))) / k
+            for i in range(b)
+        ])
+        us = time_fn(lambda: query_index(idx, q, w, cfg, k=k), iters=3) / b
+        frac = float(jnp.mean(res.n_candidates)) / n
+        out.append(row(f"recall_{family}_K{K}_L{L}", us,
+                       f"recall@{k}={recall:.2f},cand_frac={frac:.3f}"))
+    # exact-scan reference line
+    us_bf = time_fn(lambda: brute_force_nn(data, q, w, k=k), iters=3) / b
+    out.append(row("recall_exact_scan", us_bf, "recall@10=1.00,cand_frac=1.0"))
+    return out

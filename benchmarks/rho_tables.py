@@ -1,0 +1,41 @@
+"""Theorem 4/5 complexity tables: rho = log P1 / log P2 over (R1/R2, w-scale,
+family) grids. Sublinearity requires rho < 1 everywhere; derived = max rho.
+
+(The paper proves rho < 1 for any R1 < R2; this table quantifies HOW sublinear
+each regime is — the theta family wins broadly, the l2 family is competitive
+only when weights sit near 1 — see DESIGN.md.)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import theory
+
+
+def _grid(family: str):
+    d, M, W = 16, 32, 16.0
+    rows = []
+    for wscale in (0.25, 1.0, 4.0):
+        w = jnp.full((d,), wscale)
+        rmax = float(M * jnp.sum(jnp.abs(w)))
+        for f1, f2 in ((0.01, 0.1), (0.05, 0.25), (0.1, 0.5)):
+            r = float(theory.rho(jnp.asarray(f1 * rmax), jnp.asarray(f2 * rmax),
+                                 M, d, w, family=family, W=W))
+            rows.append((wscale, f1, f2, r))
+    return rows
+
+
+def run():
+    out = []
+    for family in ("theta", "l2"):
+        us = time_fn(lambda: _grid(family), iters=2, warmup=1)
+        rows = _grid(family)
+        worst = max(r for *_a, r in rows)
+        best = min(r for *_a, r in rows)
+        out.append(row(f"rho_table_{family}", us,
+                       f"rho_range=[{best:.3f},{worst:.3f}]<1"))
+        assert worst < 1.0, (family, rows)
+    return out

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper claim (the paper is a theory
+paper — no experimental tables — so benchmarks validate its equations and
+complexity claims; see DESIGN.md §1 "Validation targets").
+
+    PYTHONPATH=src python -m benchmarks.run [--only collision,...]
+
+Prints ``name,us_per_call,derived`` CSV. The roofline rows summarize the
+compiled dry-run artifacts if present (run repro.launch.dryrun first).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "collision",  # Eq 25/27 Monte-Carlo validation
+    "rho_tables",  # Thm 4/5 rho < 1 tables
+    "odtrick",  # §4.2.3 O(d) trick equivalence + speedup
+    "sublinear_fit",  # empirical n^rho_hat scaling
+    "recall",  # recall@10 vs exact scan
+    "multiprobe_bench",  # beyond-paper: probes-for-tables trade
+    "kernels_bench",  # kernel microbenchmarks
+    "roofline",  # dry-run roofline summaries (if results exist)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated module list")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception as e:
+            failed.append(name)
+            print(f"{name},NaN,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark modules failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Empirical sublinearity: candidate work per query vs n, fitted exponent.
+
+The paper's claim is O(n^rho d log n) query time. On CPU wall-time is noisy,
+so the primary metric is the candidate fraction examined (the n-dependent
+work term); derived = fitted exponent rho_hat of candidates ~ n^rho_hat,
+which must be < 1 for the same (K, L).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import BoundedSpace, IndexConfig, build_index, query_index
+
+
+def run():
+    d, M, b = 16, 16, 32
+    cfg = IndexConfig(d=d, M=M, K=12, L=16, family="theta",
+                      max_candidates=256, space=BoundedSpace(0.0, 1.0, float(M)))
+    key = jax.random.PRNGKey(0)
+    ns = [2_000, 8_000, 32_000]
+    cands = []
+    us_q = 0.0
+    for i, n in enumerate(ns):
+        data = jax.random.uniform(jax.random.fold_in(key, i), (n, d))
+        idx = build_index(jax.random.fold_in(key, 10 + i), data, cfg)
+        q = jax.random.uniform(jax.random.fold_in(key, 20 + i), (b, d))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 30 + i), (b, d))) + 0.2
+        res = query_index(idx, q, w, cfg, k=10)
+        cands.append(float(jnp.mean(res.n_candidates)))
+        if n == ns[-1]:
+            us_q = time_fn(lambda: query_index(idx, q, w, cfg, k=10), iters=3) / b
+
+    # least-squares fit of log(cands) = rho_hat * log(n) + c
+    lx = np.log(ns)
+    ly = np.log(np.maximum(cands, 1.0))
+    rho_hat = float(np.polyfit(lx, ly, 1)[0])
+    return [
+        row("sublinear_candidates_fit", us_q,
+            f"rho_hat={rho_hat:.3f}<1,cands={[round(c) for c in cands]},ns={ns}"),
+    ]

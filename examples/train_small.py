@@ -1,0 +1,81 @@
+"""End-to-end training driver: train a ~100M-param qwen3-family model on the
+synthetic LM stream with the full production stack (AdamW, remat, microbatch
+accumulation, async checkpointing, restart-safe data).
+
+    PYTHONPATH=src python examples/train_small.py             # ~20M smoke (fast)
+    PYTHONPATH=src python examples/train_small.py --full      # ~100M, few hundred steps
+
+The loss should fall well below the unigram entropy of the stream within the
+first hundred steps (the stream has learnable structure; see data/pipeline).
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import ModelConfig, TrainConfig, get_bundle
+from repro.configs.base import ArchBundle
+from repro.data.pipeline import DataConfig
+from repro.runtime.fault import train_loop
+
+
+def small_qwen(full: bool) -> ModelConfig:
+    if full:  # ~100M-param backbone (plus embeddings)
+        return dataclasses.replace(
+            get_bundle("qwen3-8b").model,
+            n_layers=12, n_units=12, d_model=768, n_heads=12, n_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=8192, param_dtype="float32",
+            compute_dtype="float32", remat=False,
+        )
+    return dataclasses.replace(
+        get_bundle("qwen3-8b").model,
+        n_layers=4, n_units=4, d_model=384, n_heads=6, n_kv_heads=2,
+        head_dim=64, d_ff=1024, vocab_size=4096, param_dtype="float32",
+        compute_dtype="float32", remat=False,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_small")
+    args = ap.parse_args()
+
+    mcfg = small_qwen(args.full)
+    steps = args.steps or (300 if args.full else 60)
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=20, total_steps=steps,
+                       microbatch=1)
+    bundle = ArchBundle(arch_id="train-small", model=mcfg, train=tcfg)
+    dcfg = DataConfig(seq_len=256, global_batch=8)
+
+    n_params = sum(
+        x.size for x in jax.tree.leaves(
+            jax.eval_shape(lambda: __import__("repro.models", fromlist=["models"])
+                           .init_params(jax.random.PRNGKey(0), mcfg))
+        )
+    )
+    print(f"[train_small] {n_params/1e6:.1f}M params, {steps} steps, "
+          f"seq 256 x batch 8")
+
+    t0 = time.time()
+    losses = []
+
+    def log(step, m):
+        losses.append(m["loss"])
+        if step % 10 == 0 or step == 1:
+            print(f"  step {step:4d}  loss {m['loss']:.4f}  "
+                  f"({(time.time()-t0)/step:.2f}s/step)")
+
+    train_loop(bundle, dcfg, steps, args.ckpt_dir, ckpt_every=50,
+               async_ckpt=True, on_metrics=log)
+    first = sum(losses[:10]) / 10
+    last = sum(losses[-10:]) / 10
+    print(f"[train_small] loss {first:.3f} -> {last:.3f} "
+          f"({'LEARNING' if last < first - 0.3 else 'check config'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Feature-weighted kNN classification — the paper's motivating application
+([3, 19]: per-query feature weighting for kNN classifiers).
+
+    PYTHONPATH=src python examples/weighted_knn_classify.py
+
+Synthetic task: 8-class Gaussian blobs in 24-D where only a per-class-known
+subset of features is informative; the rest are noise. A weighted-Manhattan
+kNN with weights = estimated feature importance (signal-to-noise per
+dimension) classifies far better than unweighted kNN — and ALSH answers the
+weighted queries sublinearly with matching accuracy.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BoundedSpace, IndexConfig, build_index, query_index
+from repro.distance import brute_force_nn
+
+
+def make_blobs(key, n, d, n_classes, informative):
+    kc, kx, kn = jax.random.split(key, 3)
+    centers = jax.random.uniform(kc, (n_classes, d), minval=0.2, maxval=0.8)
+    labels = jax.random.randint(kx, (n,), 0, n_classes)
+    x = centers[labels]
+    noise = jax.random.normal(kn, (n, d))
+    scale = jnp.where(jnp.arange(d) < informative, 0.03, 0.35)  # noisy tail dims
+    return jnp.clip(x + noise * scale[None, :], 0.0, 1.0), labels
+
+
+def knn_accuracy(ids, train_labels, true_labels, k):
+    votes = np.asarray(train_labels)[np.asarray(ids)]
+    pred = np.array([np.bincount(v[v >= 0] if (v >= 0).any() else [0]).argmax()
+                     for v in votes])
+    return float(np.mean(pred == np.asarray(true_labels)))
+
+
+def main():
+    n, d, M, k, n_classes, informative = 30_000, 24, 32, 15, 8, 8
+    key = jax.random.PRNGKey(7)
+    X, y = make_blobs(jax.random.fold_in(key, 0), n, d, n_classes, informative)
+    Q, yq = make_blobs(jax.random.fold_in(key, 1), 256, d, n_classes, informative)
+
+    # per-dimension importance weights (signal-to-noise estimate)
+    within_var = jnp.stack([jnp.var(X[y == c], axis=0) for c in range(n_classes)]).mean(0)
+    total_var = jnp.var(X, axis=0)
+    wvec = jnp.clip((total_var / (within_var + 1e-6)) - 1.0, 0.05, 50.0)
+    W = jnp.broadcast_to(wvec, Q.shape)
+    ones = jnp.ones_like(Q)
+
+    print(f"== {n} train / {len(Q)} test, {d}-D, {informative} informative dims")
+
+    _, ids_unw = brute_force_nn(X, Q, ones, k=k)
+    acc_unw = knn_accuracy(ids_unw, y, yq, k)
+    _, ids_w = brute_force_nn(X, Q, W, k=k)
+    acc_w = knn_accuracy(ids_w, y, yq, k)
+    print(f"== exact kNN accuracy: unweighted {acc_unw:.3f}  ->  weighted {acc_w:.3f}")
+
+    cfg = IndexConfig(d=d, M=M, K=12, L=32, family="theta",
+                      max_candidates=256, space=BoundedSpace(0.0, 1.0, float(M)))
+    idx = build_index(jax.random.fold_in(key, 2), X, cfg)
+    t0 = time.time()
+    res = query_index(idx, Q, W, cfg, k=k)
+    jax.block_until_ready(res.dists)
+    acc_alsh = knn_accuracy(res.ids, y, yq, k)
+    cand = float(jnp.mean(res.n_candidates))
+    print(f"== ALSH weighted kNN: accuracy {acc_alsh:.3f} in {time.time()-t0:.2f}s, "
+          f"examining {cand/n:.1%} of the database per query")
+    print("== (weights ride with the query -- no reindexing when importance changes)")
+
+
+if __name__ == "__main__":
+    main()

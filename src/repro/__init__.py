@@ -1,0 +1,17 @@
+"""repro — sublinear-time NNS over generalized weighted Manhattan distance.
+
+A production-grade JAX framework reproducing and extending:
+
+    Hu & Li, "Sublinear Time Nearest Neighbor Search over Generalized
+    Weighted Manhattan Distance", 2021.
+
+Public API surface (stable):
+    repro.core        — ALSH transforms, hash families, theory, index
+    repro.distance    — d_w^l1 / d_w^l2 reference distances + brute force NN
+    repro.kernels     — Pallas TPU kernels (ops wrappers fall back to jnp on CPU)
+    repro.models      — assigned LM architectures
+    repro.configs     — per-architecture configs (``--arch <id>``)
+    repro.launch      — mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

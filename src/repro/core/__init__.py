@@ -1,0 +1,64 @@
+"""The paper's primary contribution: ALSH for NNS over d_w^l1.
+
+  transforms     — Obs 1 discretization, unary coding, P / Q_w maps (Eq 19-21)
+  hash_families  — L2-LSH + SimHash with the §4.2.3 O(d) projection trick
+  theory         — Eq 4/6/25/27 collision probabilities, rho, (K, L) planning
+  index          — Theorem-1 multi-table index (sorted-key CSR, static probes)
+  multiprobe     — beyond-paper: probe perturbation sequences (fewer tables)
+"""
+
+from repro.core.transforms import (
+    BoundedSpace,
+    discretize,
+    discretization_slack,
+    transform_P,
+    transform_Q,
+    unary_code,
+    wl1_via_mips,
+)
+from repro.core.hash_families import (
+    LSHParams,
+    PrefixTables,
+    hash_data,
+    hash_query,
+    make_prefix_tables,
+    project_data,
+    project_query,
+)
+from repro.core.theory import (
+    IndexPlan,
+    collision_prob_l2,
+    collision_prob_theta,
+    plan_index,
+    rho,
+    success_probability,
+)
+from repro.core.index import ALSHIndex, IndexConfig, QueryResult, build_index, query_index
+
+__all__ = [
+    "BoundedSpace",
+    "discretize",
+    "discretization_slack",
+    "transform_P",
+    "transform_Q",
+    "unary_code",
+    "wl1_via_mips",
+    "LSHParams",
+    "PrefixTables",
+    "hash_data",
+    "hash_query",
+    "make_prefix_tables",
+    "project_data",
+    "project_query",
+    "IndexPlan",
+    "collision_prob_l2",
+    "collision_prob_theta",
+    "plan_index",
+    "rho",
+    "success_probability",
+    "ALSHIndex",
+    "IndexConfig",
+    "QueryResult",
+    "build_index",
+    "query_index",
+]

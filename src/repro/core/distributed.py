@@ -1,0 +1,119 @@
+"""Distributed ALSH service: row-sharded index, replicated queries,
+hierarchical top-k merge — the paper's workload at cluster scale.
+
+Sharding contract (mesh axes ("pod","data","model")):
+
+  * database rows: disjointly partitioned over ALL devices — each device
+    builds a complete local index over its n_local rows (hash tables are
+    valid per-shard because the (R1,R2)-NNS guarantee is closed under
+    disjoint union: the global NN lives in exactly one shard).
+  * queries: replicated (or batch-sharded for throughput serving).
+  * merge: local exact top-k per shard, then a hierarchical merge — sorted
+    concat + re-top-k along "model", then "data", then "pod". Two-hop
+    merging moves k·devices_per_hop entries per link instead of k·devices,
+    cutting cross-pod DCN bytes by the pod fan-in (see EXPERIMENTS §Perf).
+
+Implemented with shard_map over the mesh; every collective is explicit
+(jax.lax.all_gather over one named axis at a time).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import hash_families as hf
+from repro.core import transforms
+from repro.core.index import ALSHIndex, IndexConfig, build_index, query_index
+
+
+class ShardedQueryResult(NamedTuple):
+    dists: jax.Array  # (b, k) global ascending
+    ids: jax.Array  # (b, k) global ids (shard_offset + local id)
+    n_candidates: jax.Array  # (b,) summed over shards
+
+
+def build_local_indexes(key, data_global: jax.Array, cfg: IndexConfig, mesh: Mesh):
+    """data_global (n, d) row-sharded over all mesh axes -> per-shard ALSHIndex.
+
+    All shards share the SAME hash tables (key is broadcast) so query hashing
+    is computed once and is valid against every shard's tables.
+    """
+    n = data_global.shape[0]
+    axes = tuple(mesh.axis_names)
+    data_sharded = jax.device_put(data_global, NamedSharding(mesh, P(axes, None)))
+
+    def local_build(data_local):
+        return build_index(key, data_local, cfg)
+
+    fn = shard_map(
+        local_build,
+        mesh=mesh,
+        in_specs=P(axes, None),
+        out_specs=P(axes, None),  # leading axis of every index leaf is stacked per shard
+        check_rep=False,
+    )
+    # NOTE: build_index's leaves have mixed leading dims; to keep specs simple
+    # the sharded service stores the index leaves with a per-shard leading
+    # batch dim via vmap-style stacking. We instead build one index per shard
+    # lazily inside the query shard_map (tables are deterministic given key).
+    return data_sharded
+
+
+def sharded_query(
+    key,
+    data_sharded: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig,
+    mesh: Mesh,
+    k: int = 10,
+    merge_hierarchical: bool = True,
+):
+    """One-shot build+query under shard_map (used by tests/benchmarks on small
+    CPU meshes; the serve launcher caches the built index between calls)."""
+    axes = tuple(mesh.axis_names)
+    n_local = data_sharded.shape[0] // mesh.devices.size
+
+    def local(data_local, q, w):
+        idx = build_index(key, data_local, cfg)
+        res = query_index(idx, q, w, cfg, k=k)
+        # globalize ids: offset by shard rank
+        rank = jnp.zeros((), jnp.int32)
+        mul = 1
+        for ax in reversed(axes):
+            rank = rank + jax.lax.axis_index(ax) * mul
+            mul *= jax.lax.axis_size(ax)
+        gids = jnp.where(res.ids >= 0, res.ids + rank * n_local, -1)
+        d, i, nc = res.dists, gids, res.n_candidates
+
+        def merge_axis(d, i, nc, ax):
+            dg = jax.lax.all_gather(d, ax, axis=0)  # (g, b, k)
+            ig = jax.lax.all_gather(i, ax, axis=0)
+            g, b, kk = dg.shape
+            dg = jnp.moveaxis(dg, 0, 1).reshape(b, g * kk)
+            ig = jnp.moveaxis(ig, 0, 1).reshape(b, g * kk)
+            neg, sel = jax.lax.top_k(-dg, k)
+            return -neg, jnp.take_along_axis(ig, sel, axis=1), jax.lax.psum(nc, ax)
+
+        if merge_hierarchical:
+            for ax in reversed(axes):  # model -> data -> pod
+                d, i, nc = merge_axis(d, i, nc, ax)
+        else:  # flat merge across the whole mesh at once (baseline)
+            d, i, nc = merge_axis(d, i, nc, axes)
+        return d, i, nc
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axes, None), P(), P()),
+        out_specs=(P(), P(), P()),
+        check_rep=False,
+    )
+    d, i, nc = fn(data_sharded, queries, weights)
+    return ShardedQueryResult(dists=d, ids=i, n_candidates=nc)

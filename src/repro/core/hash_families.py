@@ -1,0 +1,233 @@
+"""Paper §2.1 + §4.2: LSH families and the O(d) projection trick (§4.2.3).
+
+The ALSH families are
+
+  f(x) = h(P(x))       for data     (no weights available at index time)
+  g(x) = h(Q_w(x))     for queries  (weights folded in at query time)
+
+with h either the p-stable L2 hash (Eq 3) or the SimHash sign hash (Eq 5).
+Both need the Gaussian projection  a^T P(o)  /  a^T Q_w(q)  over the 2Md-dim
+transformed vectors. §4.2.3 shows the projection collapses to a table lookup:
+
+  preprocess a (length 2Md, viewed as (2d, M) rows) into a' (2d, M+1):
+     rows 0..d-1   : suffix sums   a'[i, j] = sum_{k>=j} a[i, k],  a'[i, M] = 0
+     rows d..2d-1  : prefix sums   a'[i, 0] = 0, a'[i, j] = sum_{k<j} a[i, k]
+  then    a^T P(o)   = sum_i ( a'[i, o_i] + a'[d+i, o_i] )
+          a^T Q_w(q) = sum_i w_i ( a'[i, q_i] + a'[d+i, q_i] )
+
+(0-indexed here; the paper's Eq 28 is 1-indexed.) Because data and query share
+the lookup index, we FOLD the two halves into a single table
+
+  b'[i, m] = a'[i, m] + a'[d+i, m]           # (d, M+1), "folded table"
+
+so hashing is ONE gather + (weighted) sum per coordinate. On TPU the gather is
+reformulated as a one-hot MXU contraction (see repro/kernels/alsh_project) —
+bit-identical results, dense-matmul speed. This module holds the jnp reference
+path; `repro.kernels.ops` provides the Pallas production path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "LSHParams",
+    "PrefixTables",
+    "make_prefix_tables",
+    "naive_projection_vector",
+    "project_data",
+    "project_query",
+    "l2_hash",
+    "sign_hash",
+    "hash_data",
+    "hash_query",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LSHParams:
+    """Static configuration of one ALSH family instance.
+
+    Attributes:
+      d: original dimensionality.
+      M: lattice resolution (levels are in {0..M}).
+      n_hashes: total hash functions H = K * L.
+      family: "l2" (Eq 3, integer codes) or "theta" (Eq 5, sign bits).
+      W: bucket width for the l2 family (paper's user constant ``w`` — renamed
+         to avoid clashing with the weight vector).
+    """
+
+    d: int
+    M: int
+    n_hashes: int
+    family: Literal["l2", "theta"] = "theta"
+    W: float = 4.0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PrefixTables:
+    """The preprocessed projection state a' of §4.2.3 (folded form).
+
+    folded: (H, d, M+1) — b'[h, i, m] = suffix_cos[h, i, m] + prefix_sin[h, i, m]
+    offsets: (H,) — the uniform offset b ~ U[0, W] for the l2 family (zeros for theta).
+    """
+
+    folded: jax.Array
+    offsets: jax.Array
+
+    def tree_flatten(self):
+        return (self.folded, self.offsets), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_hashes(self) -> int:
+        return self.folded.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.folded.shape[1]
+
+    @property
+    def M(self) -> int:
+        return self.folded.shape[2] - 1
+
+
+def naive_projection_vector(a_rows: jax.Array) -> jax.Array:
+    """Reassemble the flat 2Md Gaussian vector ``a`` from its (2d, M) row view.
+
+    Test-only: used to check the O(d) trick against the naive O(Md) inner
+    product with the explicit P/Q vectors. Layout must match transforms:
+    P = (cos-block rows 0..d-1 ; sin-block rows d..2d-1), each row M entries.
+    """
+    return a_rows.reshape(-1)
+
+
+def _prefix_tables_from_rows(a_rows: jax.Array) -> jax.Array:
+    """Eq 28 (0-indexed) for one hash: (2d, M) -> folded (d, M+1)."""
+    d2, M = a_rows.shape
+    d = d2 // 2
+    cos_rows, sin_rows = a_rows[:d], a_rows[d:]
+    # suffix sums, with a trailing 0 column:  a'[i, j] = sum_{k >= j} a[i, k]
+    zeros = jnp.zeros((d, 1), a_rows.dtype)
+    suffix = jnp.concatenate(
+        [jnp.cumsum(cos_rows[:, ::-1], axis=1)[:, ::-1], zeros], axis=1
+    )
+    # prefix sums, with a leading 0 column:   a'[d+i, j] = sum_{k < j} a[d+i, k]
+    prefix = jnp.concatenate([zeros, jnp.cumsum(sin_rows, axis=1)], axis=1)
+    return suffix + prefix  # folded b' (d, M+1)
+
+
+def make_prefix_tables(key: jax.Array, params: LSHParams, dtype=jnp.float32) -> PrefixTables:
+    """Draw H Gaussian projections and preprocess them per §4.2.3 + folding."""
+    k_a, k_b = jax.random.split(key)
+    a = jax.random.normal(k_a, (params.n_hashes, 2 * params.d, params.M), dtype=dtype)
+    folded = jax.vmap(_prefix_tables_from_rows)(a)
+    if params.family == "l2":
+        offsets = jax.random.uniform(
+            k_b, (params.n_hashes,), dtype=dtype, minval=0.0, maxval=params.W
+        )
+    else:
+        offsets = jnp.zeros((params.n_hashes,), dtype)
+    return PrefixTables(folded=folded, offsets=offsets)
+
+
+def project_data(levels: jax.Array, tables: PrefixTables, impl: str = "auto") -> jax.Array:
+    """a^T P(o) for a batch of data points — §4.2.3, 2d-1 additions per hash.
+
+    Args:
+      levels: (n, d) int32 lattice points in {0..M}.
+      tables: PrefixTables with folded (H, d, M+1).
+      impl: "gather" | "onehot" | "auto" (auto → kernels.ops dispatch).
+
+    Returns:
+      (n, H) float projections.
+    """
+    if impl == "auto":
+        from repro.kernels import ops  # local import: kernels depend on core types
+
+        return ops.alsh_project(levels, tables.folded, weights=None)
+    if impl == "onehot":
+        return _project_onehot(levels, tables.folded, None)
+    return _project_gather(levels, tables.folded, None)
+
+
+def project_query(
+    levels: jax.Array, w: jax.Array, tables: PrefixTables, impl: str = "auto"
+) -> jax.Array:
+    """a^T Q_w(q): the asymmetric (weighted) projection — 2d-1 adds + d muls."""
+    if impl == "auto":
+        from repro.kernels import ops
+
+        return ops.alsh_project(levels, tables.folded, weights=w)
+    if impl == "onehot":
+        return _project_onehot(levels, tables.folded, w)
+    return _project_gather(levels, tables.folded, w)
+
+
+def _project_gather(levels, folded, weights):
+    """Reference: per-coordinate gather + reduce. levels (n, d); folded (H, d, M+1)."""
+    # picked[n, h, i] = folded[h, i, levels[n, i]]
+    picked = jnp.take_along_axis(
+        folded[None],  # (1, H, d, M+1)
+        levels[:, None, :, None].astype(jnp.int32),  # (n, 1, d, 1)
+        axis=3,
+    )[..., 0]  # (n, H, d)
+    if weights is not None:
+        picked = picked * weights[:, None, :]
+    return jnp.sum(picked, axis=-1)  # (n, H)
+
+
+def _project_onehot(levels, folded, weights):
+    """TPU-native: one-hot contraction — same math on the MXU."""
+    M1 = folded.shape[-1]
+    onehot = jax.nn.one_hot(levels, M1, dtype=folded.dtype)  # (n, d, M+1)
+    if weights is not None:
+        onehot = onehot * weights[..., None]
+    # (n, d*(M+1)) @ (d*(M+1), H)
+    n = levels.shape[0]
+    lhs = onehot.reshape(n, -1)
+    rhs = jnp.transpose(folded, (1, 2, 0)).reshape(-1, folded.shape[0])
+    return lhs @ rhs
+
+
+def l2_hash(projections: jax.Array, tables: PrefixTables, W: float) -> jax.Array:
+    """Eq 3: h(x) = floor((a^T x + b) / W) — integer bucket codes."""
+    return jnp.floor((projections + tables.offsets[None, :]) / W).astype(jnp.int32)
+
+
+def sign_hash(projections: jax.Array) -> jax.Array:
+    """Eq 5: h(x) = 1[a^T x >= 0] — SimHash bits."""
+    return (projections >= 0).astype(jnp.int32)
+
+
+def hash_data(
+    levels: jax.Array, tables: PrefixTables, params: LSHParams, impl: str = "auto"
+) -> jax.Array:
+    """f(o) = h(P(o)) for a batch: (n, d) -> (n, H) int codes."""
+    proj = project_data(levels, tables, impl=impl)
+    if params.family == "l2":
+        return l2_hash(proj, tables, params.W)
+    return sign_hash(proj)
+
+
+def hash_query(
+    levels: jax.Array,
+    w: jax.Array,
+    tables: PrefixTables,
+    params: LSHParams,
+    impl: str = "auto",
+) -> jax.Array:
+    """g(q) = h(Q_w(q)) for a batch: (b, d) + (b, d) weights -> (b, H) int codes."""
+    proj = project_query(levels, w, tables, impl=impl)
+    if params.family == "l2":
+        return l2_hash(proj, tables, params.W)
+    return sign_hash(proj)

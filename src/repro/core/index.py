@@ -1,0 +1,215 @@
+"""The ALSH index: Theorem-1 construction as a TPU/XLA-native data structure.
+
+Classical LSH indexes are pointer-chasing hash maps. On TPU we need static
+shapes and sort-friendly primitives, so each of the L tables is stored as a
+*sorted key column*:
+
+  build:  codes (n, K) --combine--> keys (n,)  --argsort--> (sorted_keys, perm)
+  query:  key --searchsorted--> [start, end)   --bounded gather--> candidate ids
+
+Combining K codes into one int32 key:
+  - theta family (bits): exact bit-packing for K <= 31 — zero spurious collisions.
+  - l2 family (unbounded ints): random odd-multiplier mixing (universal-style);
+    spurious collisions only ADD candidates — the exact d_w^l1 re-rank keeps
+    correctness, the candidate budget keeps cost bounded.
+
+The probe path retrieves at most ``max_candidates`` per table (static C),
+dedupes across tables by sort, then re-ranks exactly with the wl1 kernel.
+All static-shape, jit/vmap/shard_map-compatible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hash_families as hf
+from repro.core import transforms
+from repro.core.theory import IndexPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Static geometry of an ALSH index."""
+
+    d: int
+    M: int
+    K: int  # hashes per table
+    L: int  # tables
+    family: str = "theta"  # "theta" | "l2"
+    W: float = 4.0
+    max_candidates: int = 64  # per-table probe budget C
+    space: transforms.BoundedSpace = transforms.BoundedSpace(0.0, 1.0, 32.0)
+
+    @property
+    def n_hashes(self) -> int:
+        return self.K * self.L
+
+    @property
+    def lsh_params(self) -> hf.LSHParams:
+        return hf.LSHParams(
+            d=self.d, M=self.M, n_hashes=self.K * self.L, family=self.family, W=self.W
+        )
+
+    @classmethod
+    def from_plan(cls, d: int, M: int, plan: IndexPlan, **kw) -> "IndexConfig":
+        return cls(d=d, M=M, K=plan.K, L=plan.L, **kw)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ALSHIndex:
+    """Built index state (a pytree — crosses jit/shard_map boundaries)."""
+
+    tables: hf.PrefixTables  # folded projection tables (H, d, M+1)
+    mixers: jax.Array  # (L, K) int32 key combiners
+    sorted_keys: jax.Array  # (L, n) int32 — per-table sorted bucket keys
+    perm: jax.Array  # (L, n + C) int32 — point ids by key order, padded with n
+    data: jax.Array  # (n, d) float — original points (exact re-rank)
+    levels: jax.Array  # (n, d) int32 — lattice points (hash oracle/debug)
+
+    def tree_flatten(self):
+        return (
+            (self.tables, self.mixers, self.sorted_keys, self.perm, self.data, self.levels),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[0]
+
+
+class QueryResult(NamedTuple):
+    dists: jax.Array  # (b, k) ascending d_w^l1 (inf where fewer than k found)
+    ids: jax.Array  # (b, k) point ids (-1 where invalid)
+    n_candidates: jax.Array  # (b,) unique candidates examined — sublinearity metric
+
+
+def _combine_codes(codes_lk: jax.Array, mixers: jax.Array, family: str, K: int) -> jax.Array:
+    """(..., L, K) int codes -> (..., L) int32 keys."""
+    if family == "theta" and K <= 31:
+        shifts = (1 << jnp.arange(K, dtype=jnp.int32))[None, :]
+        return jnp.sum(codes_lk.astype(jnp.int32) * shifts, axis=-1)
+    mixed = codes_lk.astype(jnp.int32) * mixers  # wrapping int32 mul
+    return jnp.sum(mixed, axis=-1)
+
+
+def _keys_for(
+    levels: jax.Array,
+    weights: jax.Array | None,
+    index_tables: hf.PrefixTables,
+    cfg: IndexConfig,
+    mixers: jax.Array,
+    impl: str = "auto",
+) -> jax.Array:
+    """Hash points/queries to per-table keys: (b, d)[, (b, d)w] -> (b, L)."""
+    params = cfg.lsh_params
+    if weights is None:
+        codes = hf.hash_data(levels, index_tables, params, impl=impl)  # (b, H)
+    else:
+        codes = hf.hash_query(levels, weights, index_tables, params, impl=impl)
+    codes = codes.reshape(*codes.shape[:-1], cfg.L, cfg.K)
+    return _combine_codes(codes, mixers, cfg.family, cfg.K)
+
+
+def build_index(
+    key: jax.Array,
+    data: jax.Array,
+    cfg: IndexConfig,
+    impl: str = "auto",
+) -> ALSHIndex:
+    """Preprocess the database: hash every point, sort each table by key.
+
+    O(H d n) hashing (the §4.2.3 trick) + L sorts of n keys.
+    """
+    k_tab, k_mix = jax.random.split(key)
+    tables = hf.make_prefix_tables(k_tab, cfg.lsh_params, dtype=data.dtype)
+    mixers = (
+        jax.random.randint(k_mix, (cfg.L, cfg.K), 1, jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
+        | 1
+    )  # odd multipliers
+    levels = transforms.discretize(data, cfg.space)
+    keys_ln = _keys_for(levels, None, tables, cfg, mixers, impl=impl).T  # (L, n)
+    perm = jnp.argsort(keys_ln, axis=1).astype(jnp.int32)  # (L, n)
+    sorted_keys = jnp.take_along_axis(keys_ln, perm, axis=1)
+    n = data.shape[0]
+    pad = jnp.full((cfg.L, cfg.max_candidates), n, dtype=jnp.int32)
+    perm = jnp.concatenate([perm, pad], axis=1)  # (L, n + C) — safe window gather
+    return ALSHIndex(
+        tables=tables,
+        mixers=mixers,
+        sorted_keys=sorted_keys,
+        perm=perm,
+        data=data,
+        levels=levels,
+    )
+
+
+def _probe_one_table(sorted_keys_row, perm_row, qkey, C: int):
+    """One table probe: sorted lookup + bounded candidate window."""
+    start = jnp.searchsorted(sorted_keys_row, qkey, side="left")
+    end = jnp.searchsorted(sorted_keys_row, qkey, side="right")
+    pos = start + jnp.arange(C, dtype=jnp.int32)
+    ids = perm_row[pos]  # perm_row padded with n → in-bounds
+    valid = pos < end
+    return jnp.where(valid, ids, perm_row.shape[0])  # invalid → large sentinel
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "impl"))
+def query_index(
+    index: ALSHIndex,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig,
+    k: int = 1,
+    impl: str = "auto",
+) -> QueryResult:
+    """Batched ALSH query: probe L tables, dedupe, exact re-rank, top-k.
+
+    Args:
+      queries: (b, d) float query points.
+      weights: (b, d) float per-query weight vectors (the paper's w — may be negative).
+      k: neighbours to return.
+    """
+    from repro.kernels import ops
+
+    b, d = queries.shape
+    n = index.n
+    C = cfg.max_candidates
+    qlevels = transforms.discretize(queries, cfg.space)
+    qkeys = _keys_for(qlevels, weights, index.tables, cfg, index.mixers, impl=impl)  # (b, L)
+
+    # probe all (table, query) pairs — vmap over tables, then queries
+    probe = jax.vmap(
+        jax.vmap(_probe_one_table, in_axes=(0, 0, 0, None)), in_axes=(None, None, 0, None)
+    )
+    cand = probe(index.sorted_keys, index.perm, qkeys, C)  # (b, L, C), sentinel = n+C pad id
+    cand = jnp.minimum(cand, n)  # unify sentinels at n
+    cand = cand.reshape(b, cfg.L * C)
+
+    # dedupe: sort ids; runs of equal ids keep their first occurrence
+    cand = jnp.sort(cand, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((b, 1), bool), cand[:, 1:] != cand[:, :-1]], axis=1
+    )
+    valid = (cand < n) & first
+    n_candidates = jnp.sum(valid, axis=1)
+
+    # exact re-rank with d_w^l1 (Pallas-backed)
+    safe_ids = jnp.minimum(cand, n - 1)
+    pts = index.data[safe_ids]  # (b, LC, d)
+    dists = ops.wl1_rerank(pts, queries, weights)  # (b, LC)
+    dists = jnp.where(valid, dists, jnp.inf)
+    neg, pos_idx = jax.lax.top_k(-dists, k)
+    out_ids = jnp.take_along_axis(cand, pos_idx, axis=1)
+    out_dists = -neg
+    out_ids = jnp.where(jnp.isfinite(out_dists), out_ids, -1)
+    return QueryResult(dists=out_dists, ids=out_ids, n_candidates=n_candidates)

@@ -1,0 +1,126 @@
+"""Paper theory: collision probabilities (Eq 4/6/25/27), rho (Thm 4/5), (K, L) selection.
+
+Everything here is closed-form and differentiable; benchmarks/collision.py
+Monte-Carlo-validates these curves against the actual hash implementations,
+and benchmarks/rho_tables.py reproduces the paper's complexity claims
+(rho < 1 => sublinear query time, Theorem 1).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.stats import norm
+
+
+def p_l2(r: jax.Array, W: float) -> jax.Array:
+    """Eq 4 — collision probability of the p-stable L2 hash at l2 distance r."""
+    r = jnp.asarray(r, jnp.float64 if jax.config.x64_enabled else jnp.float32)
+    c = W / r
+    return 1.0 - 2.0 * norm.cdf(-c) - 2.0 / (jnp.sqrt(2.0 * jnp.pi) * c) * (
+        1.0 - jnp.exp(-(c**2) / 2.0)
+    )
+
+
+def p_theta(r: jax.Array) -> jax.Array:
+    """Eq 6 — collision probability of SimHash at angular distance r."""
+    return 1.0 - r / jnp.pi
+
+
+def l2_distance_from_wl1(r: jax.Array, M: int, d: int, w: jax.Array) -> jax.Array:
+    """Eq 24: ||P(o) - Q_w(q)||_2 as a function of r = d_w^l1(o, q).
+
+    = sqrt( M (d + sum w_i^2) - 2 (M sum w_i - r) ).
+    """
+    sw = jnp.sum(w, axis=-1)
+    sw2 = jnp.sum(w * w, axis=-1)
+    return jnp.sqrt(M * (d + sw2) - 2.0 * (M * sw - r))
+
+
+def angular_distance_from_wl1(r: jax.Array, M: int, d: int, w: jax.Array) -> jax.Array:
+    """Eq 26: angle between P(o) and Q_w(q) as a function of r = d_w^l1(o, q)."""
+    sw = jnp.sum(w, axis=-1)
+    sw2 = jnp.sum(w * w, axis=-1)
+    cosang = (M * sw - r) / (M * jnp.sqrt(d * sw2))
+    return jnp.arccos(jnp.clip(cosang, -1.0, 1.0))
+
+
+def collision_prob_l2(r: jax.Array, M: int, d: int, w: jax.Array, W: float) -> jax.Array:
+    """Eq 25 — collision probability of (d_w^l1, l2)-ALSH at weighted-L1 distance r."""
+    return p_l2(l2_distance_from_wl1(r, M, d, w), W)
+
+
+def collision_prob_theta(r: jax.Array, M: int, d: int, w: jax.Array) -> jax.Array:
+    """Eq 27 — collision probability of (d_w^l1, theta)-ALSH at weighted-L1 distance r."""
+    return p_theta(angular_distance_from_wl1(r, M, d, w))
+
+
+def rho(
+    R1: jax.Array,
+    R2: jax.Array,
+    M: int,
+    d: int,
+    w: jax.Array,
+    family: str = "theta",
+    W: float = 4.0,
+) -> jax.Array:
+    """Thm 4/5: rho = log P(R1) / log P(R2) — the sublinearity exponent (< 1)."""
+    if family == "l2":
+        p1 = collision_prob_l2(R1, M, d, w, W)
+        p2 = collision_prob_l2(R2, M, d, w, W)
+    else:
+        p1 = collision_prob_theta(R1, M, d, w)
+        p2 = collision_prob_theta(R2, M, d, w)
+    return jnp.log(p1) / jnp.log(p2)
+
+
+class IndexPlan(NamedTuple):
+    """Derived index geometry from LSH theory (Theorem 1 construction)."""
+
+    K: int  # concatenated hashes per table: collision prob p^K
+    L: int  # number of tables: L ~ n^rho for >= 1 - 1/e success
+    rho: float
+    P1: float
+    P2: float
+
+
+def plan_index(
+    n: int,
+    R1: float,
+    R2: float,
+    M: int,
+    d: int,
+    w_scale: float = 1.0,
+    family: str = "theta",
+    W: float = 4.0,
+    max_K: int = 32,
+    max_L: int = 256,
+) -> IndexPlan:
+    """Pick (K, L) per Theorem 1 for a worst-case weight magnitude profile.
+
+    The weights are query-time data, so the plan is made for a *reference*
+    weight profile (all-|w_scale| vector); theory.py exposes the exact rho for
+    any concrete ``w`` so callers can re-plan per workload. Success probability
+    per query is >= 1 - (1 - P1^K)^L (≈ 1 - 1/e at L = ceil(P1^-K)).
+    """
+    w = jnp.full((d,), float(w_scale))
+    if family == "l2":
+        P1 = float(collision_prob_l2(jnp.asarray(R1), M, d, w, W))
+        P2 = float(collision_prob_l2(jnp.asarray(R2), M, d, w, W))
+    else:
+        P1 = float(collision_prob_theta(jnp.asarray(R1), M, d, w))
+        P2 = float(collision_prob_theta(jnp.asarray(R2), M, d, w))
+    if not (0.0 < P2 < P1 < 1.0):
+        raise ValueError(f"degenerate collision probs P1={P1} P2={P2}; widen (R1, R2)")
+    r = math.log(P1) / math.log(P2)
+    K = max(1, min(max_K, math.ceil(math.log(n) / math.log(1.0 / P2))))
+    L = max(1, min(max_L, math.ceil(P1 ** (-K))))
+    return IndexPlan(K=K, L=L, rho=r, P1=P1, P2=P2)
+
+
+def success_probability(plan: IndexPlan) -> float:
+    """P[some table collides with an R1-near neighbour] = 1 - (1 - P1^K)^L."""
+    return 1.0 - (1.0 - plan.P1**plan.K) ** plan.L

@@ -1,0 +1,99 @@
+"""Paper §3–§4.1: discretization, unary coding, and the asymmetric transforms.
+
+Pipeline (paper Observation 1 + Steps 1, 2):
+
+  real space [Ml, Mu]^d --shift--> [0, Mu-Ml]^d --u_t--> lattice {0..M}^d
+      --unary v(.)--> {0,1}^{Md}  --cos/sin (Obs 2)--> MIPS instance
+
+with the closed forms (all verified by tests/test_transforms.py):
+
+  P(o)   = ( 1 - v(o) ; v(o) )                 in {0,1}^{2Md}      (Eq 19)
+  Q_w(q) = ( I(w) * (1 - v(q)) ; I(w) * v(q) ) in R^{2Md}          (Eq 20)
+  d_w^l1(o, q) = M * sum_i(w_i) - <P(o), Q_w(q)>                   (Eq 21)
+  ||P(o)||_2^2   = M * d                                           (Eq 22)
+  ||Q_w(q)||_2^2 = M * sum_i(w_i^2)                                (Eq 23)
+
+Note ``cos(pi/2 * bit) = 1 - bit`` and ``sin(pi/2 * bit) = bit`` for bits, so
+the trigonometric construction collapses to complement/identity of the unary
+code — the explicit materialization below exists for testing and for the naive
+O(Md) baseline; production hashing NEVER materializes these vectors (see
+hash_families.py for the paper's §4.2.3 O(d) trick).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BoundedSpace(NamedTuple):
+    """The bounded box [lo, hi]^d the data/queries live in (paper §3)."""
+
+    lo: float
+    hi: float
+    t: float  # discretization resolution; M = floor((hi - lo) * t)
+
+    @property
+    def M(self) -> int:
+        return int((self.hi - self.lo) * self.t)  # floor for positive operands
+
+
+def discretize(x: jax.Array, space: BoundedSpace) -> jax.Array:
+    """Observation 1: u_t(x) = floor((x - lo) * t), clipped to {0..M}.
+
+    The clip guards against floating-point round-up at the upper boundary
+    (e.g. hi * t = M + ulp); interior points are untouched.
+    """
+    levels = jnp.floor((x - space.lo) * space.t).astype(jnp.int32)
+    return jnp.clip(levels, 0, space.M)
+
+
+def discretization_slack(w: jax.Array, space: BoundedSpace) -> jax.Array:
+    """Observation 1 threshold slack: |R' - R/t| <= sum_i |w_i| / t.
+
+    An (R1, R2)-guarantee on the lattice transfers to
+    (R1' , R2') = ((R1 - slack*t)/t, (R2 + slack*t)/t) on the box.
+    """
+    return jnp.sum(jnp.abs(w), axis=-1) / space.t
+
+
+def unary_code(levels: jax.Array, M: int) -> jax.Array:
+    """Step 1: v(x) — per-coordinate unary code. (..., d) int -> (..., d, M) {0,1}.
+
+    Unary(x_i) = x_i ones followed by (M - x_i) zeros.
+    """
+    iota = jnp.arange(M, dtype=levels.dtype)
+    return (iota[None, :] < levels[..., :, None]).astype(jnp.float32)
+
+
+def transform_P(levels: jax.Array, M: int) -> jax.Array:
+    """Eq 19: P(o) = (cos~(pi/2 v(o)) ; sin~(pi/2 v(o))) = (1 - v(o) ; v(o)).
+
+    (..., d) int levels -> (..., 2*M*d) float. Reference implementation —
+    O(Md) memory, used by tests and the naive baseline only.
+    """
+    v = unary_code(levels, M)  # (..., d, M)
+    flat = v.reshape(*v.shape[:-2], -1)  # (..., d*M) — concat over coords
+    return jnp.concatenate([1.0 - flat, flat], axis=-1)
+
+
+def transform_Q(levels: jax.Array, w: jax.Array, M: int) -> jax.Array:
+    """Eq 20: Q_w(q) = (I(w) ⊙ (1 - v(q)) ; I(w) ⊙ v(q)).
+
+    I(w) repeats each w_i M times (matching the unary blocks).
+    """
+    v = unary_code(levels, M)  # (..., d, M)
+    wv = w[..., :, None] * v  # weighted unary blocks
+    wc = w[..., :, None] * (1.0 - v)
+    flat_wv = wv.reshape(*wv.shape[:-2], -1)
+    flat_wc = wc.reshape(*wc.shape[:-2], -1)
+    return jnp.concatenate([flat_wc, flat_wv], axis=-1)
+
+
+def wl1_via_mips(levels_o: jax.Array, levels_q: jax.Array, w: jax.Array, M: int) -> jax.Array:
+    """Eq 21 evaluated literally: M*sum(w) - <P(o), Q_w(q)>. Test oracle."""
+    P = transform_P(levels_o, M)
+    Q = transform_Q(levels_q, w, M)
+    return M * jnp.sum(w, axis=-1) - jnp.sum(P * Q, axis=-1)

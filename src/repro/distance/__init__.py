@@ -1,0 +1,8 @@
+from repro.distance.wl1 import (
+    wl1_distance,
+    wl2_distance,
+    brute_force_nn,
+    pairwise_wl1,
+)
+
+__all__ = ["wl1_distance", "wl2_distance", "brute_force_nn", "pairwise_wl1"]

@@ -1,0 +1,70 @@
+"""Reference generalized weighted distances (paper Eq. 2).
+
+``d_w^l1(o, q) = sum_i w_i |o_i - q_i|``   (generalized weighted Manhattan)
+``d_w^l2(o, q) = sum_i w_i (o_i - q_i)^2`` (generalized weighted square Euclidean)
+
+Weights arrive *with the query* and may be negative — these are plain
+reductions, used as the exactness oracle for every approximate path in the
+framework (ALSH probes re-rank their candidates with ``wl1_distance``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wl1_distance(o: jax.Array, q: jax.Array, w: jax.Array) -> jax.Array:
+    """Generalized weighted Manhattan distance.
+
+    Args:
+      o: data points, shape ``(..., d)``.
+      q: query point(s), broadcastable to ``o`` — typically ``(d,)`` or ``(b, 1, d)``.
+      w: weight vector(s), same broadcast rules as ``q``.
+
+    Returns:
+      distances with shape ``broadcast(o, q).shape[:-1]``.
+    """
+    return jnp.sum(w * jnp.abs(o - q), axis=-1)
+
+
+def wl2_distance(o: jax.Array, q: jax.Array, w: jax.Array) -> jax.Array:
+    """Generalized weighted square Euclidean distance (comparison baseline)."""
+    diff = o - q
+    return jnp.sum(w * diff * diff, axis=-1)
+
+
+def pairwise_wl1(O: jax.Array, Q: jax.Array, W: jax.Array) -> jax.Array:
+    """All-pairs weighted Manhattan: ``O (n, d)``, ``Q (b, d)``, ``W (b, d)`` -> ``(b, n)``."""
+    return jnp.sum(W[:, None, :] * jnp.abs(O[None, :, :] - Q[:, None, :]), axis=-1)
+
+
+def brute_force_nn(
+    data: jax.Array,
+    q: jax.Array,
+    w: jax.Array,
+    k: int = 1,
+    distance: str = "wl1",
+) -> tuple[jax.Array, jax.Array]:
+    """Exact k-NN by linear scan — the O(nd) baseline the paper improves on.
+
+    Args:
+      data: ``(n, d)`` database.
+      q: ``(d,)`` or ``(b, d)`` queries.
+      w: weights, same shape as ``q``.
+      k: neighbours to return.
+      distance: ``"wl1"`` or ``"wl2"``.
+
+    Returns:
+      ``(dists, ids)`` each ``(k,)`` or ``(b, k)``, ascending by distance.
+    """
+    fn = wl1_distance if distance == "wl1" else wl2_distance
+    squeeze = q.ndim == 1
+    qb = jnp.atleast_2d(q)
+    wb = jnp.atleast_2d(w)
+    d = fn(data[None, :, :], qb[:, None, :], wb[:, None, :])  # (b, n)
+    neg_top, ids = jax.lax.top_k(-d, k)
+    dists = -neg_top
+    if squeeze:
+        return dists[0], ids[0]
+    return dists, ids

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  alsh_project — §4.2.3 O(d) hash projection as a one-hot MXU contraction
+  wl1_distance — exact d_w^l1 scan / re-rank (VPU)
+
+``ops`` holds the jit'd dispatch wrappers (TPU → Pallas, CPU → jnp oracle);
+``ref`` holds the pure-jnp oracles every kernel is validated against.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

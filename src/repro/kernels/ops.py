@@ -1,0 +1,69 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+Production call sites go through these. Dispatch policy:
+
+  * TPU backend          -> compiled Pallas kernels.
+  * CPU/other backends   -> pure-jnp oracles from ref.py (fast XLA-CPU code);
+                            tests separately exercise the Pallas bodies with
+                            interpret=True to validate them on CPU.
+
+Override with ``force="pallas" | "ref" | "interpret"`` for benchmarking.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import alsh_project as _proj
+from repro.kernels import ref as _ref
+from repro.kernels import wl1_distance as _wl1
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def alsh_project(
+    levels: jax.Array,
+    folded: jax.Array,
+    weights: jax.Array | None = None,
+    force: str | None = None,
+) -> jax.Array:
+    """§4.2.3 hash projection: (n, d) levels × (H, d, M+1) tables -> (n, H)."""
+    mode = force or ("pallas" if _on_tpu() else "ref")
+    if mode == "pallas":
+        return _proj.alsh_project_pallas(levels, folded, weights)
+    if mode == "interpret":
+        return _proj.alsh_project_pallas(levels, folded, weights, interpret=True)
+    return _ref.alsh_project(levels, folded, weights)
+
+
+def wl1_scan(
+    data: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    force: str | None = None,
+) -> jax.Array:
+    """Exact brute-force scan: (n, d) × (b, d) -> (b, n)."""
+    mode = force or ("pallas" if _on_tpu() else "ref")
+    if mode == "pallas":
+        return _wl1.wl1_scan_pallas(data, queries, weights)
+    if mode == "interpret":
+        return _wl1.wl1_scan_pallas(data, queries, weights, interpret=True)
+    return _ref.wl1_scan(data, queries, weights)
+
+
+def wl1_rerank(
+    pts: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    force: str | None = None,
+) -> jax.Array:
+    """Candidate re-rank: (b, C, d) × (b, d) -> (b, C)."""
+    mode = force or ("pallas" if _on_tpu() else "ref")
+    if mode == "pallas":
+        return _wl1.wl1_rerank_pallas(pts, queries, weights)
+    if mode == "interpret":
+        return _wl1.wl1_rerank_pallas(pts, queries, weights, interpret=True)
+    return _ref.wl1_rerank(pts, queries, weights)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: tests sweep shapes/dtypes and
+``assert_allclose`` the Pallas kernels (interpret=True on CPU) against these.
+They are also the CPU production fallback used by ops.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def alsh_project(
+    levels: jax.Array, folded: jax.Array, weights: jax.Array | None = None
+) -> jax.Array:
+    """§4.2.3 projection oracle: gather + (weighted) reduce.
+
+    Args:
+      levels: (n, d) int32 lattice points in {0..M}.
+      folded: (H, d, M+1) float folded prefix tables b'.
+      weights: optional (n, d) float query weights (None = data side).
+
+    Returns:
+      (n, H) float: proj[n, h] = sum_i w[n, i] * folded[h, i, levels[n, i]].
+    """
+    picked = jnp.take_along_axis(
+        folded[None],  # (1, H, d, M+1)
+        levels[:, None, :, None].astype(jnp.int32),  # (n, 1, d, 1)
+        axis=3,
+    )[..., 0]  # (n, H, d)
+    if weights is not None:
+        picked = picked * weights[:, None, :].astype(picked.dtype)
+    return jnp.sum(picked, axis=-1)
+
+
+def wl1_scan(data: jax.Array, queries: jax.Array, weights: jax.Array) -> jax.Array:
+    """Brute-force weighted-Manhattan scan oracle.
+
+    data (n, d), queries (b, d), weights (b, d) -> (b, n).
+    """
+    return jnp.sum(
+        weights[:, None, :] * jnp.abs(data[None, :, :] - queries[:, None, :]), axis=-1
+    )
+
+
+def wl1_rerank(pts: jax.Array, queries: jax.Array, weights: jax.Array) -> jax.Array:
+    """Candidate re-rank oracle.
+
+    pts (b, C, d), queries (b, d), weights (b, d) -> (b, C).
+    """
+    return jnp.sum(
+        weights[:, None, :] * jnp.abs(pts - queries[:, None, :]), axis=-1
+    )

@@ -1,0 +1,107 @@
+"""AOT lowering of every (arch × shape × mesh) cell — shared by the dry-run,
+the roofline pass, and the real launchers.
+
+Everything is abstract: ShapeDtypeStruct inputs, eval_shape-derived state
+trees, sanitized NamedShardings. ``.lower()`` proves the program + sharding
+is coherent; ``.compile()`` proves SPMD partitioning succeeds and yields
+memory/cost analyses. No arrays are ever allocated at production size.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs.base import ArchBundle, ShapeConfig
+from repro.launch import specs as input_specs
+from repro.models.sharding import sanitize_spec_tree, set_policy, use_mesh
+from repro.runtime.serve_step import make_decode_step, make_prefill_step
+from repro.runtime.train_step import (
+    batch_pytree_specs,
+    init_train_state,
+    make_train_step,
+    train_state_specs,
+)
+
+
+def _to_shardings(mesh: Mesh, spec_tree, shape_tree):
+    clean = sanitize_spec_tree(spec_tree, shape_tree, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), clean, is_leaf=lambda s: isinstance(s, P)
+    )
+
+
+def abstract_train_state(bundle: ArchBundle):
+    return jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), bundle.model, bundle.train)
+    )
+
+
+def abstract_params(bundle: ArchBundle):
+    return jax.eval_shape(lambda: models.init_params(jax.random.PRNGKey(0), bundle.model))
+
+
+def lower_cell(bundle: ArchBundle, shape: ShapeConfig, mesh: Mesh):
+    """Lower one cell's step function on the given mesh. Returns jax.stages.Lowered."""
+    mcfg, tcfg = bundle.model, bundle.train
+    serve_fsdp = not (
+        shape.kind in ("prefill", "decode") and mcfg.serve_param_layout == "replicated"
+    )
+    set_policy(dp_over_model=mcfg.dp_over_model, fsdp=serve_fsdp)
+    try:
+        return _lower_cell_inner(bundle, shape, mesh)
+    finally:
+        set_policy()
+
+
+def _lower_cell_inner(bundle: ArchBundle, shape: ShapeConfig, mesh: Mesh):
+    mcfg, tcfg = bundle.model, bundle.train
+    with use_mesh(mesh):
+        if shape.kind == "train":
+            state_shapes = abstract_train_state(bundle)
+            batch = input_specs.train_batch(mcfg, shape.global_batch, shape.seq_len)
+            state_sh = _to_shardings(mesh, train_state_specs(mcfg, tcfg), state_shapes)
+            batch_sh = _to_shardings(mesh, batch_pytree_specs(batch), batch)
+            step = make_train_step(mcfg, tcfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            return jitted.lower(state_shapes, batch)
+
+        params_shapes = abstract_params(bundle)
+        params_sh = _to_shardings(mesh, models.param_specs(mcfg), params_shapes)
+
+        if shape.kind == "prefill":
+            batch = input_specs.prefill_batch(mcfg, shape.global_batch, shape.seq_len)
+            batch_sh = _to_shardings(mesh, batch_pytree_specs(batch), batch)
+            step = make_prefill_step(mcfg)
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
+            return jitted.lower(params_shapes, batch)
+
+        # decode: one new token against a cache of shape.seq_len
+        batch = input_specs.decode_batch(mcfg, shape.global_batch, shape.seq_len - 1)
+        caches_shapes = jax.eval_shape(
+            lambda: models.init_caches(shape.global_batch, shape.seq_len, mcfg)
+        )
+        caches_sh = _to_shardings(mesh, models.cache_specs(mcfg), caches_shapes)
+        from repro.models.sharding import BATCH
+
+        batch_sh = _to_shardings(
+            mesh, {"token": P(BATCH), "pos": P(BATCH)}, batch
+        )
+        step = make_decode_step(mcfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(params_sh, batch_sh, caches_sh),
+            out_shardings=(None, None, caches_sh),
+            donate_argnums=(2,),
+        )
+        return jitted.lower(params_shapes, batch, caches_shapes)

@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (arch × shape × mesh) cell.
+
+512 placeholder host devices are forced ABOVE (before any jax import — jax
+locks the device count on first init). For each runnable cell this driver:
+
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the cell's step (train_step / prefill / decode) with sanitized
+     NamedShardings over abstract inputs,
+  3. compiles it (SPMD partitioning must succeed = the distribution config
+     is coherent),
+  4. records memory_analysis(), cost_analysis(), and the per-type collective
+     byte totals parsed from the optimized HLO,
+
+into results/dryrun/<arch>__<shape>__<mesh>.json (resumable: existing
+results are skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh pod1
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+HW = {  # TPU v5e-class constants used by the roofline pass
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?(?P<type>[a-z0-9]+)\[(?P<dims>[\d,]*)\]"
+    r".*?\s(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+WHILE_RE = re.compile(r"\swhile\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+CONST_RE = re.compile(r"constant\((\d+)\)")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """HLO text -> {computation_name: [lines]}."""
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = COMP_HEADER_RE.match(line) or COMP_HEADER_RE.match(stripped)
+        if m and stripped.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _line_collective_bytes(line: str):
+    """(op, traffic_bytes) for a collective line, else None.
+
+    Traffic model (ring algorithms, group size g, result bytes R):
+      all-gather ≈ R; all-reduce ≈ 2R; reduce-scatter ≈ R*g (input = g*R);
+      all-to-all ≈ R; collective-permute ≈ R.
+    """
+    m = COLLECTIVE_RE.search(line)
+    if not m:
+        return None
+    dt = m.group("type")
+    if dt not in DTYPE_BYTES:
+        return None
+    nbytes = DTYPE_BYTES[dt]
+    for d in [int(x) for x in m.group("dims").split(",") if x]:
+        nbytes *= d
+    g = 1
+    gm = GROUPS_RE.search(line)
+    if gm:
+        g = int(gm.group(2))
+    op = m.group("op")
+    factor = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": float(g),
+              "all-to-all": 1.0, "collective-permute": 1.0}[op]
+    return op, nbytes * factor
+
+
+def _trip_count(cond_lines: list) -> int:
+    """Loop bound heuristic: the max integer constant in the while condition
+    (jax.lax.scan lowers to while with `compare(iv, constant(N)), LT`)."""
+    best = 1
+    for line in cond_lines:
+        for c in CONST_RE.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """LOOP-AWARE per-device link-traffic estimate per collective type.
+
+    cost_analysis()/flat text both count a scan body once; here each while
+    body's collectives are multiplied by its trip count (nested loops
+    compose multiplicatively). Validated against n_units scaling in
+    tests/test_dryrun_parse.py.
+    """
+    comps = _split_computations(hlo_text)
+    # per-computation local costs + call edges
+    local = {name: {} for name in comps}
+    edges = {name: [] for name in comps}  # (child, multiplier)
+    for name, lines in comps.items():
+        for line in lines:
+            got = _line_collective_bytes(line)
+            if got:
+                op, b = got
+                key = (op,)
+                local[name][op] = local[name].get(op, 0.0) + b
+                local[name][f"n_{op}"] = local[name].get(f"n_{op}", 0) + 1
+            wm = WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                edges[name].append((body, trips))
+            elif " call(" in line or " conditional(" in line:
+                for cm in re.finditer(r"(?:to_apply|branch_computations)=\{?%?([\w\.\-]+)", line):
+                    edges[name].append((cm.group(1), 1))
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def total(name: str):
+        acc = dict(local.get(name, {}))
+        for child, mult in edges.get(name, []):
+            sub = total(child)
+            for k, v in sub.items():
+                acc[k] = acc.get(k, 0) + v * mult
+        return acc
+
+    # entry computation: the one not called by anyone (fallback: max cost)
+    called = {c for es in edges.values() for c, _ in es}
+    entries = [n for n in comps if n not in called]
+    agg = {}
+    for e in entries:
+        for k, v in total(e).items():
+            agg[k] = agg.get(k, 0) + v
+    per_type = {k: v for k, v in agg.items() if not k.startswith("n_")}
+    counts = {k[2:]: int(v) for k, v in agg.items() if k.startswith("n_")}
+    return {
+        "per_type_bytes": per_type,
+        "counts": counts,
+        "total_bytes": float(sum(per_type.values())),
+    }
+
+
+def optimized_overrides(arch_id: str, shape_kind: str) -> dict:
+    """The beyond-paper lever set per (arch, cell kind) — see EXPERIMENTS §Perf.
+
+    train/prefill: pure-FSDP layout (model axis = extra DP) + explicit
+    EP shard_map for MoE archs. decode: replicated serving layout for dense
+    archs that fit (<~10B); MoE archs keep the 2-D expert sharding (replicated
+    experts would need 48 GB/device on maverick).
+    """
+    moe = arch_id.startswith("llama4")
+    if shape_kind in ("train", "prefill"):
+        over = {"dp_over_model": True}
+        if moe:
+            over["moe_impl"] = "a2a_shardmap"
+        return over
+    if not moe:
+        return {"serve_param_layout": "replicated", "param_dtype": "bfloat16"}
+    return {}
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str, out_dir: str, force: bool,
+             optimized: bool = False):
+    import dataclasses
+
+    import jax
+
+    from repro.configs import SHAPES, get_bundle
+    from repro.launch.compile import lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    out_path = os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_name}.json")
+    if os.path.exists(out_path) and not force:
+        print(f"[skip] {out_path} exists")
+        return True
+
+    bundle = get_bundle(arch_id)
+    if optimized and shape_name in SHAPES:
+        over = optimized_overrides(arch_id, SHAPES[shape_name].kind)
+        if over:
+            bundle = dataclasses.replace(
+                bundle, model=dataclasses.replace(bundle.model, **over)
+            )
+    if shape_name in bundle.shape_skips:
+        rec = {
+            "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+            "status": "skipped", "reason": bundle.shape_skips[shape_name],
+        }
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"[skip-cell] {arch_id} x {shape_name}: {rec['reason']}")
+        return True
+
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "mesh_shape": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "n_devices": int(mesh.devices.size),
+        "kind": shape.kind, "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+    }
+    t0 = time.time()
+    try:
+        lowered = lower_cell(bundle, shape, mesh)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            rec[k] = int(getattr(ma, k, 0) or 0)
+        ca = compiled.cost_analysis() or {}
+        rec["flops"] = float(ca.get("flops", 0.0))
+        rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        rec["utilization_ops"] = {
+            k: v for k, v in ca.items() if k in ("transcendentals",)
+        }
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+        rec["status"] = "ok"
+        print(
+            f"[ok] {arch_id} x {shape_name} x {mesh_name}: "
+            f"flops/dev={rec['flops']:.3e} bytes/dev={rec['bytes_accessed']:.3e} "
+            f"coll={rec['collectives']['total_bytes']:.3e}B "
+            f"temp={rec['temp_size_in_bytes']/2**30:.2f}GiB "
+            f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)"
+        )
+    except Exception as e:  # record and continue — failures are bugs to fix
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch_id} x {shape_name} x {mesh_name}: {rec['error'][:300]}")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec.get("status") in ("ok", "skipped")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--mesh", default=None, choices=[None, "pod1", "pod2"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the EXPERIMENTS §Perf lever set per cell")
+    args = ap.parse_args()
+    if args.optimized and args.out == "results/dryrun":
+        args.out = "results/dryrun_opt"
+
+    from repro.configs import SHAPES, list_archs
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["pod1", "pod2"]
+
+    ok = True
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                ok &= run_cell(arch, shape, mesh, args.out, args.force,
+                               optimized=args.optimized)
+    print("DRYRUN", "PASS" if ok else "FAIL")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Serving launcher — two modes:
+
+  ALSH vector-search service (the paper's workload):
+    python -m repro.launch.serve --mode alsh [--n 100000 --d 64 --batches 4]
+
+  LM decode service with optional ALSH retrieval augmentation:
+    python -m repro.launch.serve --mode lm --arch gemma3-1b --reduced --retrieval
+
+Both run real batched requests on local devices; the production mesh path is
+exercised by the dry-run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+
+def serve_alsh(args):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.paper_alsh import ALSHServiceConfig
+    from repro.core import build_index, query_index
+    from repro.distance import brute_force_nn
+
+    svc = ALSHServiceConfig(
+        n_per_shard=args.n, d=args.d, K=args.K, L=args.L,
+        query_batch=args.query_batch, topk=args.topk,
+    )
+    cfg = svc.index_config
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(jax.random.fold_in(key, 1), (svc.n_per_shard, svc.d))
+    t0 = time.time()
+    idx = build_index(jax.random.fold_in(key, 2), data, cfg)
+    jax.block_until_ready(idx.sorted_keys)
+    print(f"[alsh] built index over n={svc.n_per_shard} d={svc.d} "
+          f"K={cfg.K} L={cfg.L} in {time.time()-t0:.2f}s")
+
+    for b in range(args.batches):
+        kq = jax.random.fold_in(key, 100 + b)
+        q = jax.random.uniform(kq, (svc.query_batch, svc.d))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(kq, 1), (svc.query_batch, svc.d))) + 0.1
+        t0 = time.time()
+        res = query_index(idx, q, w, cfg, k=svc.topk)
+        jax.block_until_ready(res.dists)
+        dt = time.time() - t0
+        # spot-check recall on the first 16 queries
+        bf_d, bf_i = brute_force_nn(data, q[:16], w[:16], k=svc.topk)
+        rec = np.mean([
+            len(set(np.asarray(res.ids[i])) & set(np.asarray(bf_i[i]))) / svc.topk
+            for i in range(16)
+        ])
+        print(f"[alsh] batch {b}: {svc.query_batch} queries in {dt*1e3:.1f} ms "
+              f"({dt/svc.query_batch*1e6:.1f} us/query) "
+              f"cand_frac={float(jnp.mean(res.n_candidates))/svc.n_per_shard:.4f} "
+              f"recall@{svc.topk}~{rec:.2f}")
+
+
+def serve_lm(args):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import models
+    from repro.configs import RetrievalConfig, get_bundle, reduced_model
+    from repro.runtime import retrieval as rt
+    from repro.runtime.serve_step import make_decode_step, make_prefill_step
+
+    bundle = get_bundle(args.arch)
+    mcfg = reduced_model(bundle.model) if args.reduced else bundle.model
+    rcfg = None
+    if args.retrieval:
+        rcfg = RetrievalConfig(datastore_size=4096, d_key=16, K=6, L=8, topk=4)
+
+    key = jax.random.PRNGKey(0)
+    params = models.init_params(key, mcfg)
+    B, S, gen = args.batch, args.prompt_len, args.gen_len
+    prompt = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, mcfg.vocab_size)
+
+    prefill = jax.jit(make_prefill_step(mcfg, cache_len=S + gen))
+    decode = jax.jit(make_decode_step(mcfg, rcfg))
+    retr_state = None
+    if rcfg is not None:
+        retr_state = rt.build_datastore(jax.random.fold_in(key, 2), mcfg.d_model,
+                                        mcfg.vocab_size, rcfg)
+
+    t0 = time.time()
+    logits, caches = prefill(params, {"tokens": prompt})
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    print(f"[lm] prefill B={B} S={S} in {time.time()-t0:.2f}s "
+          f"(retrieval={'on' if rcfg else 'off'})")
+
+    out = [tok]
+    t0 = time.time()
+    for i in range(gen):
+        batch = {"token": tok, "pos": jnp.full((B,), S + i, jnp.int32)}
+        if rcfg is None:
+            _, tok, caches = decode(params, batch, caches)
+        else:
+            _, tok, caches = decode(params, batch, caches, retr_state)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"[lm] generated {gen} tokens x {B} seqs in {dt:.2f}s "
+          f"({dt/gen*1e3:.1f} ms/step); sample: {[int(t[0]) for t in out[:8]]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["alsh", "lm"], default="alsh")
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--retrieval", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--n", type=int, default=65536)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--K", type=int, default=12)
+    ap.add_argument("--L", type=int, default=32)
+    ap.add_argument("--query-batch", type=int, default=256)
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--batches", type=int, default=3)
+    args = ap.parse_args()
+    if args.mode == "alsh":
+        serve_alsh(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Input builders: concrete batches (smoke/examples) and ShapeDtypeStruct
+stand-ins (dry-run) for every (arch × shape-kind) cell.
+
+The modality frontends are stubs by assignment: [audio] provides precomputed
+frame embeddings, [vlm] provides precomputed patch embeddings + M-RoPE grids.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def _mk(shape, dtype, concrete: bool, fill=0):
+    if not concrete:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if fill == "iota":
+        size = int(np.prod(shape))
+        return jnp.arange(size, dtype=dtype).reshape(shape) % 97
+    return jnp.full(shape, fill, dtype)
+
+
+def train_batch(cfg: ModelConfig, batch: int, seq: int, concrete: bool = False) -> dict:
+    if cfg.frontend == "audio":
+        return {
+            "frames": _mk((batch, seq, cfg.frontend_dim), jnp.float32, concrete, 0.1),
+            "targets": _mk((batch, seq), jnp.int32, concrete, "iota"),
+            "mask": _mk((batch, seq), jnp.bool_, concrete, True),
+        }
+    if cfg.frontend == "vision":
+        nv = min(cfg.n_vision_tokens, seq // 2)  # clamp for tiny test seqs
+        s_text = seq - nv
+        return {
+            "tokens": _mk((batch, s_text), jnp.int32, concrete, "iota"),
+            "patches": _mk((batch, nv, cfg.frontend_dim), jnp.float32, concrete, 0.1),
+            "positions": _mk((3, batch, seq), jnp.int32, concrete, "iota"),
+        }
+    return {"tokens": _mk((batch, seq), jnp.int32, concrete, "iota")}
+
+
+def prefill_batch(cfg: ModelConfig, batch: int, seq: int, concrete: bool = False) -> dict:
+    b = train_batch(cfg, batch, seq, concrete)
+    b.pop("targets", None)
+    b.pop("mask", None)
+    return b
+
+
+def decode_batch(cfg: ModelConfig, batch: int, pos_value: int, concrete: bool = False) -> dict:
+    return {
+        "token": _mk((batch,), jnp.int32, concrete, 1),
+        "pos": _mk((batch,), jnp.int32, concrete, pos_value),
+    }

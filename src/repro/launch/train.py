@@ -1,0 +1,71 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs REAL steps on the local device(s) (CPU here; identical code path on a
+TPU slice — the mesh just gets bigger via --mesh production). For cluster
+bring-up the dry-run (``repro.launch.dryrun``) validates every cell first.
+
+Fault tolerance is on by default: resumes from the newest committed
+checkpoint in --ckpt-dir; checkpoints every --ckpt-every steps (async).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true", help="tiny smoke config")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--grad-compression", default=None, choices=[None, "bf16", "int8_ef"])
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_bundle, reduced_model
+    from repro.data.pipeline import DataConfig
+    from repro.runtime.fault import train_loop
+
+    bundle = get_bundle(args.arch)
+    mcfg = reduced_model(bundle.model) if args.reduced else bundle.model
+    tcfg = dataclasses.replace(
+        bundle.train,
+        microbatch=args.microbatch,
+        grad_compression=args.grad_compression,
+        total_steps=args.steps,
+        **({"learning_rate": args.lr} if args.lr else {}),
+    )
+    bundle = dataclasses.replace(bundle, model=mcfg, train=tcfg)
+    dcfg = DataConfig(seq_len=args.seq_len, global_batch=args.global_batch)
+
+    print(f"[train] arch={args.arch} reduced={args.reduced} steps={args.steps} "
+          f"devices={jax.device_count()}")
+    t0 = time.time()
+    losses = []
+
+    def log(step, metrics):
+        losses.append(metrics["loss"])
+        if step % 10 == 0 or step == 1:
+            print(f"  step {step:5d}  loss {metrics['loss']:.4f}  "
+                  f"gnorm {metrics['grad_norm']:.3f}  lr {metrics['lr']:.2e}  "
+                  f"({(time.time()-t0)/max(step,1):.2f}s/step)")
+
+    train_loop(
+        bundle, dcfg, args.steps, args.ckpt_dir,
+        ckpt_every=args.ckpt_every, async_ckpt=True, on_metrics=log,
+    )
+    print(f"[train] done: first-10 mean loss {sum(losses[:10])/max(len(losses[:10]),1):.4f} "
+          f"-> last-10 mean {sum(losses[-10:])/max(len(losses[-10:]),1):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Assigned LM architectures as composable JAX modules (no framework deps)."""
+
+from repro.models.model import (
+    cache_specs,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_caches,
+    init_params,
+    param_specs,
+)
+
+__all__ = [
+    "cache_specs",
+    "forward_decode",
+    "forward_prefill",
+    "forward_train",
+    "init_caches",
+    "init_params",
+    "param_specs",
+]

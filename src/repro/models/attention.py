@@ -1,0 +1,369 @@
+"""Attention: GQA/MQA, qk-norm, RoPE/M-RoPE/NoPE, full/sliding-window/chunked.
+
+Two execution paths:
+
+  * ``attn_sequence`` (train / prefill): blockwise FLASH-style attention in
+    pure JAX — outer scan over query blocks, inner scan over KV blocks with an
+    online-softmax accumulator, so peak memory is O(blk_q * blk_kv) instead of
+    O(S^2). Local ("local", window) and chunked ("chunked", llama4-iRoPE)
+    kinds slice a static KV window per query block — linear-in-S FLOPs.
+  * ``attn_decode`` (serving): one new token against a ring-buffer KV cache
+    with absolute-position tracking (`k_pos`), so full/local/chunked masking
+    is uniform: a position-predicate over cached slots.
+
+KV caches are rotated at WRITE time (k stored post-RoPE), the standard
+serving layout.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.sharding import BATCH, FSDP, TP, maybe_shard
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dm, H, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": layers.init_linear(kq, dm, H * D, dtype),
+        "wk": layers.init_linear(kk, dm, Hkv * D, dtype),
+        "wv": layers.init_linear(kv, dm, Hkv * D, dtype),
+        "wo": layers.init_linear(ko, H * D, dm, dtype, std=(H * D) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(D, dtype)
+        p["k_norm"] = layers.init_rmsnorm(D, dtype)
+    return p
+
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    p = {
+        "wq": layers.linear_specs(FSDP, TP),
+        "wk": layers.linear_specs(FSDP, TP),
+        "wv": layers.linear_specs(FSDP, TP),
+        "wo": layers.linear_specs(TP, FSDP),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rmsnorm_specs()
+        p["k_norm"] = layers.rmsnorm_specs()
+    return p
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache for one attention layer."""
+
+    k: jax.Array  # (B, C, Hkv, D) — rotated keys
+    v: jax.Array  # (B, C, Hkv, D)
+    k_pos: jax.Array  # (B, C) int32 absolute positions (-1 = empty)
+
+    @property
+    def cache_len(self) -> int:
+        return self.k.shape[1]
+
+
+def init_kv_cache(batch: int, cache_len: int, cfg: ModelConfig, dtype) -> KVCache:
+    Hkv, D = cfg.n_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, cache_len, Hkv, D), dtype),
+        v=jnp.zeros((batch, cache_len, Hkv, D), dtype),
+        k_pos=jnp.full((batch, cache_len), -1, jnp.int32),
+    )
+
+
+def cache_len_for(kind: str, cfg: ModelConfig, seq_len: int) -> int:
+    if kind == "local":
+        return min(cfg.window, seq_len)
+    if kind == "chunked":
+        return min(cfg.chunk_size, seq_len)
+    return seq_len  # full / global / global_nope / shared_attn
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+
+def _qkv(params, x, cfg: ModelConfig, positions, kind: str):
+    """Project + norm + rotate. x (B, S, dm) -> q (B,S,H,D), k/v (B,S,Hkv,D)."""
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = layers.linear(params["wq"], x).reshape(B, S, H, D)
+    k = layers.linear(params["wk"], x).reshape(B, S, Hkv, D)
+    v = layers.linear(params["wv"], x).reshape(B, S, Hkv, D)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = layers.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if kind != "global_nope":
+        theta = cfg.rope_theta
+        if kind == "local" and cfg.rope_local_theta is not None:
+            theta = cfg.rope_local_theta
+        if cfg.pos == "mrope" and positions.ndim == 3:
+            q = layers.apply_mrope(q, positions, theta, cfg.mrope_sections)
+            k = layers.apply_mrope(k, positions, theta, cfg.mrope_sections)
+        else:
+            pos2d = positions if positions.ndim == 2 else positions[0]
+            q = layers.apply_rope(q, pos2d, theta)
+            k = layers.apply_rope(k, pos2d, theta)
+    q = maybe_shard(q, BATCH, None, TP, None)
+    k = maybe_shard(k, BATCH, None, TP, None)
+    v = maybe_shard(v, BATCH, None, TP, None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) sequence attention
+# ---------------------------------------------------------------------------
+
+
+def _block_mask(kind: str, causal: bool, q_pos, k_pos, window: int, chunk: int):
+    """(..., q, k) boolean mask from absolute positions."""
+    valid = k_pos[..., None, :] >= 0
+    if causal:
+        valid &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if kind == "local":
+        valid &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    elif kind == "chunked":
+        q_chunk = q_pos // chunk
+        k_chunk = k_pos // chunk
+        valid &= k_chunk[..., None, :] == q_chunk[..., :, None]
+    return valid
+
+
+def _sdpa_blocked(q, k, v, q_pos, k_pos, cfg: ModelConfig, kind: str, blk_q: int,
+                  blk_kv: int, tri_ok: bool = False):
+    """Online-softmax attention. q (B,Sq,H,D); k/v (B,Sk,Hkv,D); pos int arrays.
+
+    Returns (B, Sq, H, D). Sq % blk_q == 0 and Sk % blk_kv == 0 (wrapper pads).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = D**-0.5
+    nq, nk = Sq // blk_q, Sk // blk_kv
+
+    # (B, nq, blk_q, Hkv, G, D) query blocks
+    qb = q.reshape(B, nq, blk_q, Hkv, G, D)
+    qpb = q_pos.reshape(B, nq, blk_q) if q_pos.ndim == 2 else q_pos.reshape(nq, blk_q)
+    kb = k.reshape(B, nk, blk_kv, Hkv, D)
+    vb = v.reshape(B, nk, blk_kv, Hkv, D)
+    kpb = k_pos.reshape(B, nk, blk_kv) if k_pos.ndim == 2 else k_pos.reshape(nk, blk_kv)
+
+    # triangular skip: for causal FULL attention, a KV block strictly above
+    # the diagonal contributes nothing — lax.cond skips its compute at
+    # runtime (differentiable; XLA conditionals truly skip on TPU). Saves
+    # ~2x attention FLOPs at long S (the analytic roofline model counts
+    # (S + 2*blk)/2 accordingly).
+    tri_skip = cfg.causal and (
+        kind in ("attn", "global", "global_nope", "shared_attn") or tri_ok
+    )
+
+    def q_block(carry, qi):
+        q_i = jax.lax.dynamic_index_in_dim(qb, qi, 1, keepdims=False)  # (B,blk_q,Hkv,G,D)
+        qp_i = jax.lax.dynamic_index_in_dim(qpb, qi, qpb.ndim - 2, keepdims=False)
+
+        def kv_compute(acc, ki):
+            m, l, o = acc
+            k_j = jax.lax.dynamic_index_in_dim(kb, ki, 1, keepdims=False)  # (B,blk_kv,Hkv,D)
+            v_j = jax.lax.dynamic_index_in_dim(vb, ki, 1, keepdims=False)
+            kp_j = jax.lax.dynamic_index_in_dim(kpb, ki, kpb.ndim - 2, keepdims=False)
+            # logits (B, Hkv, G, blk_q, blk_kv)
+            logits = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_i, k_j, preferred_element_type=jnp.float32
+            )
+            logits = logits * scale
+            mask = _block_mask(
+                kind, cfg.causal, qp_i, kp_j, cfg.window, cfg.chunk_size
+            )  # (B, blk_q, blk_kv) or (blk_q, blk_kv)
+            if mask.ndim == 2:
+                mask = mask[None]
+            logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_j.dtype), v_j,
+                            preferred_element_type=jnp.float32)
+            o_new = o * corr[..., None] + pv
+            return (m_new, l_new, o_new)
+
+        def kv_block(acc, ki):
+            if tri_skip:
+                on_or_below_diag = ki * blk_kv <= (qi + 1) * blk_q - 1
+                return (
+                    jax.lax.cond(on_or_below_diag, kv_compute,
+                                 lambda a, _ki: a, acc, ki),
+                    None,
+                )
+            return kv_compute(acc, ki), None
+
+        m0 = jnp.full((B, Hkv, G, blk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, blk_q), jnp.float32)
+        o0 = jnp.zeros((B, Hkv, G, blk_q, D), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0), jnp.arange(nk))
+        out = o / jnp.maximum(l[..., None], 1e-30)  # (B,Hkv,G,blk_q,D)
+        out = jnp.moveaxis(out, 3, 1)  # (B, blk_q, Hkv, G, D)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(nq))  # (nq, B, blk_q, Hkv, G, D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+    return out
+
+
+def _sdpa_windowed(q, k, v, q_pos, k_pos, cfg: ModelConfig, kind: str, blk_q: int):
+    """Local/chunked attention: each query block sees a static KV window.
+
+    Window span W + blk_q where W = window (local) or chunk_size (chunked) —
+    linear-in-S FLOPs, the sub-quadratic path used by long-context archs.
+    """
+    B, Sq, H, D = q.shape
+    W = cfg.window if kind == "local" else cfg.chunk_size
+    W = min(W, k.shape[1])
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = D**-0.5
+    nq = Sq // blk_q
+    span = W + blk_q
+
+    qb = q.reshape(B, nq, blk_q, Hkv, G, D)
+    qpb = q_pos.reshape(B, nq, blk_q) if q_pos.ndim == 2 else q_pos.reshape(nq, blk_q)
+
+    def q_block(carry, qi):
+        q_i = jax.lax.dynamic_index_in_dim(qb, qi, 1, keepdims=False)
+        qp_i = jax.lax.dynamic_index_in_dim(qpb, qi, qpb.ndim - 2, keepdims=False)
+        start = jnp.maximum(qi * blk_q - W, 0)
+        start = jnp.minimum(start, k.shape[1] - span)
+        k_w = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        v_w = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        kp_w = jax.lax.dynamic_slice_in_dim(k_pos, start, span, axis=k_pos.ndim - 1)
+        logits = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", q_i, k_w, preferred_element_type=jnp.float32
+        ) * scale
+        mask = _block_mask(kind, cfg.causal, qp_i, kp_w, cfg.window, cfg.chunk_size)
+        if mask.ndim == 2:
+            mask = mask[None]
+        logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.exp(logits - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        out = jnp.einsum("bhgqk,bkhd->bhgqd", (p / jnp.maximum(l, 1e-30)).astype(v_w.dtype),
+                         v_w, preferred_element_type=jnp.float32)
+        out = jnp.moveaxis(out, 3, 1)  # (B, blk_q, Hkv, G, D)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, D)
+    return out
+
+
+def attn_sequence(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    blk_q: int | None = None,
+    blk_kv: int | None = None,
+) -> jax.Array:
+    """Full-sequence attention (train/prefill). x (B, S, dm) -> (B, S, dm)."""
+    blk_q = blk_q or cfg.attn_blk_q
+    blk_kv = blk_kv or cfg.attn_blk_kv
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, x, cfg, positions, kind)
+    pos2d = positions if positions.ndim == 2 else positions[0]
+
+    blk_q = min(blk_q, S)
+    blk_kv = min(blk_kv, S)
+    pad_q = -S % blk_q
+    if pad_q:  # pad queries/keys to block multiple; padded k_pos = -1 masks them
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        pos2d = jnp.pad(pos2d, ((0, 0), (0, pad_q)), constant_values=-1)
+
+    if kind in ("local", "chunked") and k.shape[1] > (
+        (cfg.window if kind == "local" else cfg.chunk_size) + blk_q
+    ):
+        out = _sdpa_windowed(q, k, v, pos2d, pos2d, cfg, kind, blk_q)
+    else:
+        # chunked at S <= chunk_size degenerates to plain causal ⇒ the
+        # triangular block skip applies
+        tri_ok = kind == "chunked" and S <= cfg.chunk_size
+        out = _sdpa_blocked(q, k, v, pos2d, pos2d, cfg, kind, blk_q, blk_kv, tri_ok)
+    if pad_q:
+        out = out[:, :S]
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    out = layers.linear(params["wo"], out)
+    return maybe_shard(out, BATCH, None, None)
+
+
+def prefill_kv(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    cache_len: int,
+) -> KVCache:
+    """Build the layer's KV cache from a prefilled sequence (last cache_len slots)."""
+    B, S, _ = x.shape
+    _, k, v = _qkv(params, x, cfg, positions, kind)
+    pos2d = positions if positions.ndim == 2 else positions[0]
+    if S >= cache_len:
+        k = k[:, S - cache_len :]
+        v = v[:, S - cache_len :]
+        kp = pos2d[:, S - cache_len :]
+    else:
+        pad = cache_len - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = jnp.pad(pos2d, ((0, 0), (0, pad)), constant_values=-1)
+    return KVCache(k=k, v=v, k_pos=kp.astype(jnp.int32))
+
+
+def attn_decode(
+    params: dict,
+    x: jax.Array,
+    pos: jax.Array,
+    cache: KVCache,
+    cfg: ModelConfig,
+    kind: str,
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode. x (B, 1, dm); pos (B,) absolute position of the new token."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(params, x, cfg, positions=pos[:, None], kind=kind)
+    # ring-buffer write
+    slot = (pos % cache.cache_len).astype(jnp.int32)  # (B,)
+    bidx = jnp.arange(B)
+    k = cache.k.at[bidx, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[bidx, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    k_pos = cache.k_pos.at[bidx, slot].set(pos.astype(jnp.int32))
+    new_cache = KVCache(k=k, v=v, k_pos=k_pos)
+
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k, preferred_element_type=jnp.float32)
+    logits = logits * (D**-0.5)
+    mask = _block_mask(kind, True, pos[:, None], k_pos, cfg.window, cfg.chunk_size)[:, 0, :]
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H * D).astype(x.dtype)
+    out = layers.linear(params["wo"], out)
+    return out, new_cache

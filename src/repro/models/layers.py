@@ -1,0 +1,132 @@
+"""Shared neural net layers: norms, rotary embeddings, initializers.
+
+Functional style: ``init_*`` build parameter pytrees (nested dicts),
+``*_specs`` build the matching PartitionSpec pytrees, and apply functions are
+plain functions of (params, inputs). No framework dependency.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import FSDP, TP
+
+
+def truncated_normal_init(key, shape, std, dtype):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.zeros((dim,), dtype)}  # gemma-style (1 + scale) form
+
+
+def rmsnorm_specs() -> dict:
+    return {"scale": P(None)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (B, S, H, D), positions (B, S) int -> rotated x (split-half convention)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions_3d: jax.Array, theta: float, sections: tuple
+) -> jax.Array:
+    """Qwen2-VL M-RoPE. x (B, S, H, D); positions_3d (3, B, S) (t, h, w) grids.
+
+    The D/2 frequency slots are partitioned into ``sections`` (t, h, w); each
+    section rotates by its own position grid. sum(sections) == D/2.
+    """
+    D = x.shape[-1]
+    half = D // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    # build per-slot positions: (B, S, D/2)
+    sec_ids = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )  # static
+    pos_sel = jnp.take(positions_3d, sec_ids, axis=0)  # (D/2, B, S)
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1).astype(jnp.float32)  # (B, S, D/2)
+    angles = pos_sel * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": truncated_normal_init(key, (vocab, d_model), 0.02, dtype)}
+
+
+def embed_specs() -> dict:
+    return {"table": P(TP, FSDP)}  # vocab over model axis, d_model over data (FSDP)
+
+
+def embed(params: dict, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    """logits = x @ table^T (tied); callers may cast/softcap."""
+    table = params["table"].astype(x.dtype)
+    return jax.lax.dot_general(
+        x, table, (((x.ndim - 1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, std: float | None = None) -> dict:
+    std = std if std is not None else d_in**-0.5
+    return {"w": truncated_normal_init(key, (d_in, d_out), std, dtype)}
+
+
+def linear_specs(spec_in, spec_out) -> dict:
+    return {"w": P(spec_in, spec_out)}
+
+
+def linear(params: dict, x: jax.Array) -> jax.Array:
+    return x @ params["w"].astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

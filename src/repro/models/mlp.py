@@ -1,0 +1,43 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU, tensor-parallel over d_ff."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.sharding import BATCH, FSDP, TP, maybe_shard
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": layers.init_linear(k1, d_model, d_ff, dtype),
+        "w_down": layers.init_linear(k2, d_ff, d_model, dtype, std=d_ff**-0.5),
+    }
+    if activation in ("swiglu", "geglu"):
+        p["w_gate"] = layers.init_linear(k3, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_specs(activation: str) -> dict:
+    p = {
+        "w_up": layers.linear_specs(FSDP, TP),
+        "w_down": layers.linear_specs(TP, FSDP),
+    }
+    if activation in ("swiglu", "geglu"):
+        p["w_gate"] = layers.linear_specs(FSDP, TP)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, activation: str) -> jax.Array:
+    up = layers.linear(params["w_up"], x)
+    if activation == "swiglu":
+        h = jax.nn.silu(layers.linear(params["w_gate"], x)) * up
+    elif activation == "geglu":
+        h = jax.nn.gelu(layers.linear(params["w_gate"], x), approximate=True) * up
+    else:  # gelu
+        h = jax.nn.gelu(up, approximate=True)
+    h = maybe_shard(h, BATCH, None, TP)
+    return layers.linear(params["w_down"], h)

@@ -1,0 +1,540 @@
+"""Model assembly: heterogeneous layer patterns under scan, three run modes.
+
+Layer patterns: ``cfg.scan_unit`` is a tuple of layer kinds repeated
+``n_units`` times (stacked params, jax.lax.scan over units — one traced copy
+of the unit body regardless of depth) followed by an explicit ``tail``.
+Kinds:
+
+  attn / local / global / chunked / global_nope  — attention block (+ MLP)
+     ... with "_moe" suffix → MoE FFN instead of dense MLP
+  mamba2        — Mamba2 SSD block (no separate FFN, mamba-stack style)
+  shared_attn   — attention + MLP with weights SHARED across occurrences
+                  (zamba2); per-occurrence KV caches remain distinct.
+
+Run modes:
+  forward_train   — full-sequence forward + next-token (or masked) CE loss
+  forward_prefill — full-sequence forward, returns per-layer caches + logits
+  forward_decode  — one token against the caches
+
+Params are nested dicts; ``param_specs`` mirrors the exact tree with
+PartitionSpecs (FSDP over "data", TP/EP over "model").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES
+from repro.models import attention, layers, mlp, moe, ssm
+from repro.models.sharding import BATCH, FSDP, TP, maybe_shard
+
+
+def _compute_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _is_attn(kind: str) -> bool:
+    return kind.split("_moe")[0] in ("attn", "local", "global", "chunked", "global_nope")
+
+
+def _attn_kind(kind: str) -> str:
+    return kind.removesuffix("_moe")
+
+
+def _is_moe(kind: str) -> bool:
+    return kind.endswith("_moe")
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype) -> dict:
+    """Params for one layer of the given kind (shared_attn → empty marker)."""
+    if kind == "shared_attn":
+        return {}
+    if kind == "mamba2":
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": layers.init_rmsnorm(cfg.d_model, dtype),
+            "mamba": ssm.init_mamba2(k1, cfg, cfg.ssm, dtype),
+        }
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": layers.init_rmsnorm(cfg.d_model, dtype),
+        "attn": attention.init_attention(k1, cfg, dtype),
+        "ln2": layers.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if _is_moe(kind):
+        p["ffn"] = moe.init_moe(k2, cfg, cfg.moe, dtype)
+    else:
+        d_ff = cfg.moe.d_ff_dense if (cfg.moe is not None) else cfg.d_ff
+        p["ffn"] = mlp.init_mlp(k2, cfg.d_model, d_ff, cfg.activation, dtype)
+    return p
+
+
+def _block_specs(kind: str, cfg: ModelConfig) -> dict:
+    if kind == "shared_attn":
+        return {}
+    if kind == "mamba2":
+        return {
+            "ln1": layers.rmsnorm_specs(),
+            "mamba": ssm.mamba2_specs(cfg, cfg.ssm),
+        }
+    p = {
+        "ln1": layers.rmsnorm_specs(),
+        "attn": attention.attention_specs(cfg),
+        "ln2": layers.rmsnorm_specs(),
+    }
+    if _is_moe(kind):
+        p["ffn"] = moe.moe_specs(cfg.moe, impl=cfg.moe_impl)
+    else:
+        p["ffn"] = mlp.mlp_specs(cfg.activation)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    cfg.validate()
+    dtype = _param_dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+
+    # --- embedding / frontend ------------------------------------------------
+    if cfg.frontend == "audio":
+        params["frontend_proj"] = layers.init_linear(
+            keys[0], cfg.frontend_dim, cfg.d_model, dtype
+        )
+        params["head"] = layers.init_linear(keys[1], cfg.d_model, cfg.vocab_size, dtype)
+    else:
+        params["embed"] = layers.init_embed(keys[0], cfg.vocab_size, cfg.d_model, dtype)
+        if cfg.frontend == "vision":
+            params["vision_proj"] = layers.init_linear(
+                keys[2], cfg.frontend_dim, cfg.d_model, dtype
+            )
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.init_linear(
+                keys[3], cfg.d_model, cfg.vocab_size, dtype, std=0.02
+            )
+
+    # --- stacked scan units ---------------------------------------------------
+    n_units = cfg.resolved_units
+
+    def unit_init(ukey):
+        ks = jax.random.split(ukey, len(cfg.scan_unit))
+        return {
+            f"p{i}": _init_block(ks[i], kind, cfg, dtype)
+            for i, kind in enumerate(cfg.scan_unit)
+        }
+
+    if n_units:
+        unit_keys = jax.random.split(keys[4], n_units)
+        params["units"] = jax.vmap(unit_init)(unit_keys)
+
+    if cfg.tail:
+        tks = jax.random.split(keys[5], len(cfg.tail))
+        params["tail"] = {
+            f"p{i}": _init_block(tks[i], kind, cfg, dtype)
+            for i, kind in enumerate(cfg.tail)
+        }
+
+    if "shared_attn" in cfg.scan_unit or "shared_attn" in cfg.tail:
+        params["shared_block"] = _init_block(keys[6], "attn", cfg, dtype)
+
+    params["ln_f"] = layers.init_rmsnorm(cfg.d_model, dtype)
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    cfg.validate()
+    specs: dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        specs["frontend_proj"] = layers.linear_specs(None, FSDP)
+        specs["head"] = layers.linear_specs(FSDP, TP)
+    else:
+        if cfg.embed_table_spec == "dm_data":
+            # perf lever: vocab replicated, d_model FSDP-sharded — the token
+            # gather stays local (no SPMD "replicate-then-reshard" fallback)
+            specs["embed"] = {"table": P(None, FSDP)}
+        else:
+            specs["embed"] = layers.embed_specs()
+        if cfg.frontend == "vision":
+            specs["vision_proj"] = layers.linear_specs(None, FSDP)
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = layers.linear_specs(FSDP, TP)
+
+    def unit_specs():
+        return {
+            f"p{i}": _block_specs(kind, cfg) for i, kind in enumerate(cfg.scan_unit)
+        }
+
+    if cfg.resolved_units:
+        # stacked along a leading (n_units) axis — prepend None to every spec
+        specs["units"] = jax.tree.map(
+            lambda s: P(None, *s), unit_specs(),
+            is_leaf=lambda s: isinstance(s, P),
+        )
+    if cfg.tail:
+        specs["tail"] = {
+            f"p{i}": _block_specs(kind, cfg) for i, kind in enumerate(cfg.tail)
+        }
+    if "shared_attn" in cfg.scan_unit or "shared_attn" in cfg.tail:
+        specs["shared_block"] = _block_specs("attn", cfg)
+    specs["ln_f"] = layers.rmsnorm_specs()
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block_seq(kind, bparams, shared, x, positions, cfg: ModelConfig):
+    """Train-mode (no cache) application of one block."""
+    if kind == "shared_attn":
+        bparams, kind = shared, "attn"
+    if kind == "mamba2":
+        h = layers.rmsnorm(bparams["ln1"], x, cfg.norm_eps)
+        return x + ssm.mamba2_sequence(bparams["mamba"], h, cfg, cfg.ssm)
+    ak = _attn_kind(kind)
+    h = layers.rmsnorm(bparams["ln1"], x, cfg.norm_eps)
+    x = x + attention.attn_sequence(bparams["attn"], h, positions, cfg, ak)
+    h = layers.rmsnorm(bparams["ln2"], x, cfg.norm_eps)
+    if _is_moe(kind):
+        x = x + moe.moe_ffn(bparams["ffn"], h, cfg, cfg.moe)
+    else:
+        x = x + mlp.mlp(bparams["ffn"], h, cfg.activation)
+    return x
+
+
+def _apply_block_prefill(kind, bparams, shared, x, positions, cfg, cache_len):
+    """Like seq, but also builds this block's decode cache (cache_len slots)."""
+    if kind == "shared_attn":
+        bparams, kind = shared, "attn"
+        eff_kind = "attn"
+    else:
+        eff_kind = kind
+    if kind == "mamba2":
+        h = layers.rmsnorm(bparams["ln1"], x, cfg.norm_eps)
+        out, cache = ssm.mamba2_sequence(bparams["mamba"], h, cfg, cfg.ssm, return_cache=True)
+        return x + out, cache
+    ak = _attn_kind(eff_kind)
+    h = layers.rmsnorm(bparams["ln1"], x, cfg.norm_eps)
+    clen = attention.cache_len_for(ak, cfg, cache_len)
+    cache = attention.prefill_kv(bparams["attn"], h, positions, cfg, ak, clen)
+    x = x + attention.attn_sequence(bparams["attn"], h, positions, cfg, ak)
+    h = layers.rmsnorm(bparams["ln2"], x, cfg.norm_eps)
+    if _is_moe(kind):
+        x = x + moe.moe_ffn(bparams["ffn"], h, cfg, cfg.moe)
+    else:
+        x = x + mlp.mlp(bparams["ffn"], h, cfg.activation)
+    return x, cache
+
+
+def _apply_block_decode(kind, bparams, shared, x, pos, cache, cfg):
+    if kind == "shared_attn":
+        bparams, kind = shared, "attn"
+    if kind == "mamba2":
+        h = layers.rmsnorm(bparams["ln1"], x, cfg.norm_eps)
+        out, new_cache = ssm.mamba2_decode(bparams["mamba"], h, cache, cfg, cfg.ssm)
+        return x + out, new_cache
+    ak = _attn_kind(kind)
+    h = layers.rmsnorm(bparams["ln1"], x, cfg.norm_eps)
+    out, new_cache = attention.attn_decode(bparams["attn"], h, pos, cache, cfg, ak)
+    x = x + out
+    h = layers.rmsnorm(bparams["ln2"], x, cfg.norm_eps)
+    if _is_moe(kind):
+        x = x + moe.moe_ffn(bparams["ffn"], h, cfg, cfg.moe)
+    else:
+        x = x + mlp.mlp(bparams["ffn"], h, cfg.activation)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Backbone drivers (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _backbone_train(params, x, positions, cfg: ModelConfig):
+    shared = params.get("shared_block")
+
+    def unit_body(h, unit_p):
+        for i, kind in enumerate(cfg.scan_unit):
+            h = _apply_block_seq(kind, unit_p[f"p{i}"], shared, h, positions, cfg)
+        return h, None
+
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        unit_body = jax.checkpoint(unit_body, policy=policy)
+    if cfg.resolved_units:
+        x, _ = jax.lax.scan(unit_body, x, params["units"])
+    for i, kind in enumerate(cfg.tail):
+        x = _apply_block_seq(kind, params["tail"][f"p{i}"], shared, x, positions, cfg)
+    return layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+
+def _backbone_prefill(params, x, positions, cfg: ModelConfig, cache_len: int):
+    shared = params.get("shared_block")
+
+    def unit_body(h, unit_p):
+        caches = {}
+        for i, kind in enumerate(cfg.scan_unit):
+            h, caches[f"p{i}"] = _apply_block_prefill(
+                kind, unit_p[f"p{i}"], shared, h, positions, cfg, cache_len
+            )
+        return h, caches
+
+    caches: dict[str, Any] = {}
+    if cfg.resolved_units:
+        x, caches["units"] = jax.lax.scan(unit_body, x, params["units"])
+    if cfg.tail:
+        caches["tail"] = {}
+        for i, kind in enumerate(cfg.tail):
+            x, caches["tail"][f"p{i}"] = _apply_block_prefill(
+                kind, params["tail"][f"p{i}"], shared, x, positions, cfg, cache_len
+            )
+    return layers.rmsnorm(params["ln_f"], x, cfg.norm_eps), caches
+
+
+def _backbone_decode(params, x, pos, caches, cfg: ModelConfig):
+    shared = params.get("shared_block")
+
+    def unit_body(h, xs):
+        unit_p, unit_c = xs
+        new_c = {}
+        for i, kind in enumerate(cfg.scan_unit):
+            h, new_c[f"p{i}"] = _apply_block_decode(
+                kind, unit_p[f"p{i}"], shared, h, pos, unit_c[f"p{i}"], cfg
+            )
+        return h, new_c
+
+    new_caches: dict[str, Any] = {}
+    if cfg.resolved_units:
+        x, new_caches["units"] = jax.lax.scan(
+            unit_body, x, (params["units"], caches["units"])
+        )
+    if cfg.tail:
+        new_caches["tail"] = {}
+        for i, kind in enumerate(cfg.tail):
+            x, new_caches["tail"][f"p{i}"] = _apply_block_decode(
+                kind, params["tail"][f"p{i}"], shared, x, pos, caches["tail"][f"p{i}"], cfg
+            )
+    return layers.rmsnorm(params["ln_f"], x, cfg.norm_eps), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Inputs → hidden states
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch: dict, cfg: ModelConfig):
+    """Returns (x (B,S,dm), positions) for any modality."""
+    cdt = _compute_dtype(cfg)
+    if cfg.frontend == "audio":
+        x = layers.linear(params["frontend_proj"], batch["frames"].astype(cdt))
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    elif cfg.frontend == "vision":
+        tok_emb = layers.embed(params["embed"], batch["tokens"], cdt)
+        patches = layers.linear(params["vision_proj"], batch["patches"].astype(cdt))
+        x = jnp.concatenate([patches, tok_emb], axis=1)  # vision prefix
+        positions = batch["positions"]  # (3, B, S) M-RoPE grids
+        B, S = x.shape[:2]
+    else:
+        x = layers.embed(params["embed"], batch["tokens"], cdt)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cdt)
+    x = maybe_shard(x, BATCH, None, None)
+    return x, positions
+
+
+def _logits(params, x, cfg: ModelConfig):
+    ldt = jnp.dtype(cfg.logits_dtype)
+    if cfg.frontend == "audio":
+        out = layers.linear(params["head"], x).astype(ldt)
+    elif cfg.tie_embeddings:
+        out = layers.unembed(params["embed"], x).astype(ldt)
+    else:
+        out = layers.linear(params["lm_head"], x).astype(ldt)
+    out = layers.softcap(out, cfg.logit_softcap)
+    return maybe_shard(out, BATCH, None, TP)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def _ce_terms(params, x_slice, targets, mask, cfg):
+    """(sum nll, sum mask) for one sequence slice — logits live only here."""
+    logits = _logits(params, x_slice, cfg)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1
+    )[..., 0].astype(jnp.float32)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def forward_train(params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    """Mean loss. LM: next-token CE; audio encoder: masked-prediction CE."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    x = _backbone_train(params, x, positions, cfg)
+
+    if cfg.frontend == "audio":
+        targets = batch["targets"]  # (B, S) int32
+        mask = batch["mask"].astype(jnp.float32)  # (B, S) — masked positions
+    else:
+        tokens = batch["tokens"]
+        targets = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))  # next-token
+        mask = jnp.pad(
+            jnp.ones_like(tokens[:, 1:], jnp.float32), ((0, 0), (0, 1))
+        )
+        if cfg.frontend == "vision":
+            nv = x.shape[1] - tokens.shape[1]
+            x = x[:, nv:]  # only text positions carry LM loss
+
+    S = x.shape[1]
+    if cfg.loss_chunk and S % cfg.loss_chunk == 0 and S > cfg.loss_chunk:
+        # perf lever: chunked CE — the (B, c, V) logits tensor is transient
+        # per chunk (rematerialized in backward), never (B, S, V).
+        # The output matrix is constrained to replicated ONCE here, outside
+        # the chunk scan — otherwise its FSDP all-gather re-runs per chunk
+        # (measured +1.2s collective on qwen3-8b, see EXPERIMENTS §Perf).
+        params = dict(params)
+        if cfg.frontend == "audio":
+            params["head"] = {"w": maybe_shard(params["head"]["w"], None, None)}
+        elif cfg.tie_embeddings:
+            params["embed"] = {
+                "table": maybe_shard(params["embed"]["table"], None, None)
+            }
+        else:
+            params["lm_head"] = {"w": maybe_shard(params["lm_head"]["w"], None, None)}
+        c = cfg.loss_chunk
+        nc = S // c
+        xs = x.reshape(x.shape[0], nc, c, x.shape[-1]).swapaxes(0, 1)
+        ts = targets.reshape(targets.shape[0], nc, c).swapaxes(0, 1)
+        ms = mask.reshape(mask.shape[0], nc, c).swapaxes(0, 1)
+
+        def chunk(carry, inp):
+            xc, tc, mc = inp
+            snll, smask = jax.checkpoint(
+                lambda a, b, m: _ce_terms(params, a, b, m, cfg)
+            )(xc, tc, mc)
+            return (carry[0] + snll, carry[1] + smask), None
+
+        (nll_sum, mask_sum), _ = jax.lax.scan(chunk, (jnp.zeros(()), jnp.zeros(())),
+                                              (xs, ts, ms))
+    else:
+        nll_sum, mask_sum = _ce_terms(params, x, targets, mask, cfg)
+    return nll_sum / jnp.maximum(mask_sum, 1.0)
+
+
+def forward_prefill(params, batch: dict, cfg: ModelConfig, cache_len: int | None = None):
+    """Returns (last-position logits (B, V), caches). Encoder-only: (logits, None).
+
+    cache_len: total serving-cache slots (>= seq_len to leave decode room);
+    defaults to seq_len (the dry-run "cache of seq_len" convention).
+    """
+    x, positions = _embed_inputs(params, batch, cfg)
+    if cfg.encoder_only:
+        x = _backbone_train(params, x, positions, cfg)
+        return _logits(params, x, cfg), None
+    cache_len = cache_len or x.shape[1]
+    x, caches = _backbone_prefill(params, x, positions, cfg, cache_len)
+    logits = _logits(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, caches
+
+
+def forward_decode(params, batch: dict, caches, cfg: ModelConfig, return_hidden=False):
+    """One decode step. batch: {"token": (B,), "pos": (B,)} (+ mrope positions).
+
+    (For VLM decode, M-RoPE on generated text positions is exactly standard
+    RoPE with t=h=w=pos, so the 2D position path is used — no approximation.)
+    """
+    cdt = _compute_dtype(cfg)
+    tok = batch["token"]
+    x = layers.embed(params["embed"], tok[:, None], cdt)  # (B, 1, dm)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cdt)
+    pos = batch["pos"]
+    x, new_caches = _backbone_decode(params, x, pos, caches, cfg)
+    logits = _logits(params, x, cfg)[:, 0]  # (B, V)
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if return_hidden:
+        return logits, next_tok, new_caches, x[:, 0]
+    return logits, next_tok, new_caches
+
+
+def init_caches(batch: int, seq_len: int, cfg: ModelConfig) -> dict:
+    """Zero caches for decode-from-scratch (dry-run / serving bootstrap)."""
+    dtype = _compute_dtype(cfg)
+
+    def cache_for(kind):
+        if kind == "mamba2":
+            return ssm.init_mamba_cache(batch, cfg, cfg.ssm, dtype)
+        ak = _attn_kind(kind if kind != "shared_attn" else "attn")
+        clen = attention.cache_len_for(ak, cfg, seq_len)
+        return attention.init_kv_cache(batch, clen, cfg, dtype)
+
+    caches: dict[str, Any] = {}
+    if cfg.resolved_units:
+        unit = {f"p{i}": cache_for(k) for i, k in enumerate(cfg.scan_unit)}
+        caches["units"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.resolved_units, *a.shape)), unit
+        )
+    if cfg.tail:
+        caches["tail"] = {f"p{i}": cache_for(k) for i, k in enumerate(cfg.tail)}
+    return caches
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    """PartitionSpecs for the cache pytree (batch over data, heads over model)."""
+
+    def spec_for(kind, stacked: bool):
+        lead = (None,) if stacked else ()
+        if kind == "mamba2":
+            return ssm.MambaCache(
+                conv=P(*lead, BATCH, None, TP),
+                state=P(*lead, BATCH, TP, None, None),
+            )
+        # KV caches shard their SEQUENCE dim over "model" by default: head
+        # counts (kv=1 MQA) can't split 16 ways, the sequence always can.
+        # GSPMD lowers the seq-sharded decode attention to partial softmax +
+        # reduction (flash-decode style). "heads_model" is the alternative
+        # lever for GQA archs whose kv count divides the axis.
+        if cfg.cache_spec_mode == "heads_model":
+            return attention.KVCache(
+                k=P(*lead, BATCH, None, TP, None),
+                v=P(*lead, BATCH, None, TP, None),
+                k_pos=P(*lead, BATCH, None),
+            )
+        return attention.KVCache(
+            k=P(*lead, BATCH, TP, None, None),
+            v=P(*lead, BATCH, TP, None, None),
+            k_pos=P(*lead, BATCH, TP),
+        )
+
+    specs: dict[str, Any] = {}
+    if cfg.resolved_units:
+        specs["units"] = {
+            f"p{i}": spec_for(k, True) for i, k in enumerate(cfg.scan_unit)
+        }
+    if cfg.tail:
+        specs["tail"] = {f"p{i}": spec_for(k, False) for i, k in enumerate(cfg.tail)}
+    return specs

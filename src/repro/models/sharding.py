@@ -1,0 +1,182 @@
+"""Mesh context + logical sharding rules for the model/runtime stack.
+
+Axes: ("pod", "data", "model") — production meshes (2, 16, 16) and (16, 16)
+(the single-pod mesh has no "pod" axis; rules degrade gracefully).
+
+Design: a module-level mesh context (set by launch code). ``maybe_shard``
+applies with_sharding_constraint only when a mesh is active, so the exact same
+model code runs single-device (tests/examples) and on the production mesh
+(dry-run/train). Batch shards over ("pod", "data"); tensor-parallel dims over
+"model"; FSDP parameter sharding over "data" on a rule-selected axis.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    global _ACTIVE_MESH
+    prev, _ACTIVE_MESH = _ACTIVE_MESH, mesh
+    try:
+        yield
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def _filter_spec(spec: Sequence) -> P:
+    """Drop axis names that don't exist in the active mesh (e.g. 'pod' on 1-pod)."""
+    mesh = _ACTIVE_MESH
+    names = set(mesh.axis_names) if mesh is not None else set()
+
+    def keep(entry):
+        entry = resolve_entry(entry)
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(e for e in entry if e in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(keep(e) for e in spec))
+
+
+def sharding(*spec) -> Optional[NamedSharding]:
+    """NamedSharding for the active mesh (None if no mesh)."""
+    if _ACTIVE_MESH is None:
+        return None
+    return NamedSharding(_ACTIVE_MESH, _filter_spec(spec))
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def _sanitize_entry(mesh: Mesh, entry, dim: int):
+    """Keep a spec entry only if it divides the dim; tuples degrade greedily
+    (e.g. ("pod","data") on batch 8 with 2x16 mesh -> ("pod",))."""
+    entry = resolve_entry(entry)
+    if entry is None:
+        return None
+    if isinstance(entry, (tuple, list)):
+        kept = []
+        prod = 1
+        for e in entry:
+            if e in mesh.axis_names and dim % (prod * mesh.shape[e]) == 0:
+                kept.append(e)
+                prod *= mesh.shape[e]
+        return tuple(kept) if kept else None
+    if entry not in mesh.axis_names:
+        return None
+    return entry if dim % mesh.shape[entry] == 0 else None
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh: Optional[Mesh] = None) -> P:
+    """Shape-aware spec cleanup: drop axes that don't exist in the mesh or
+    don't divide the corresponding dim (kv=1 heads, batch=1, vocab 504...)."""
+    mesh = mesh or _ACTIVE_MESH
+    if mesh is None:
+        return P()
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    return P(*(_sanitize_entry(mesh, e, d) for e, d in zip(entries, shape)))
+
+
+def sanitize_spec_tree(spec_tree, shape_tree, mesh: Optional[Mesh] = None):
+    """Walk a (PartitionSpec pytree, shape pytree) pair and sanitize each leaf."""
+    return jax.tree.map(
+        lambda s, x: sanitize_spec(s, x.shape, mesh),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def maybe_shard(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint when a mesh is active; identity otherwise.
+
+    Shape-aware: entries that don't divide the dim are dropped, so the same
+    model code serves every (arch x shape x mesh) combination.
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    clean = sanitize_spec(P(*spec), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, clean))
+
+
+# ---------------------------------------------------------------------------
+# Canonical logical specs (referenced by model + runtime code)
+#
+# These are SENTINELS resolved against the active sharding policy at
+# constraint/lowering time, so one model codebase supports both parallelism
+# layouts:
+#   megatron  (default): batch over ("pod","data"); TP over "model"
+#   fsdp_only (dp_over_model=True): batch over ("pod","data","model") — the
+#             model axis becomes extra data parallelism; TP constraints
+#             dissolve (params replicate across "model", still ZeRO over
+#             "data"); EP stays on "model" (experts must shard somewhere).
+# ---------------------------------------------------------------------------
+
+BATCH = "@batch"
+TP = "@tp"
+FSDP = "@fsdp"
+EP = "@ep"  # expert parallelism — survives fsdp_only mode
+SEQ_SP = "@tp"  # sequence parallelism rides the tp axis
+
+_POLICY = {
+    "@batch": ("pod", "data"),
+    "@tp": "model",
+    "@fsdp": "data",
+    "@ep": "model",
+}
+
+
+def set_policy(dp_over_model: bool = False, fsdp: bool = True) -> None:
+    """Select the parallelism layout (see module docstring).
+
+    fsdp=False replicates parameters over the data axis (the serving layout:
+    weights live TP-sharded, no per-step FSDP gathers).
+    """
+    _POLICY["@batch"] = ("pod", "data", "model") if dp_over_model else ("pod", "data")
+    _POLICY["@tp"] = None if dp_over_model else "model"
+    _POLICY["@fsdp"] = "data" if fsdp else None
+
+
+def resolve_entry(entry):
+    """Sentinel -> concrete mesh-axis entry under the active policy."""
+    if isinstance(entry, str) and entry.startswith("@"):
+        return _POLICY[entry]
+    if isinstance(entry, (tuple, list)):
+        out = []
+        for e in entry:
+            r = resolve_entry(e)
+            if r is None:
+                continue
+            out.extend(r) if isinstance(r, (tuple, list)) else out.append(r)
+        return tuple(out) if out else None
+    return entry
+
+
+def batch_spec(*rest) -> tuple:
+    return (BATCH, *rest)

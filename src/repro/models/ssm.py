@@ -1,0 +1,231 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train/prefill scan +
+constant-memory single-step decode.
+
+Faithful to Dao & Gu (arXiv:2405.21060): per-head scalar decay A, grouped
+B/C (n_groups), depthwise causal conv on (x, B, C), softplus dt with bias,
+gated RMSNorm before out-projection.
+
+Chunked algorithm (chunk = Q):
+  intra:  Y_c = (C_c B_c^T ⊙ L_c) (dt_c ⊙ x_c)        — quadratic within chunk
+  states: S_c = Σ_j exp(cum_end - cum_j) dt_j B_j x_j^T — one state per chunk
+  inter:  scan over chunks: R_c = exp(Σ dA_c) R_{c-1} + S_c
+          Y_c += exp(cum) C_c R_{c-1}
+
+All recurrence math in float32; projections in the model compute dtype.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import layers
+from repro.models.sharding import BATCH, FSDP, TP, maybe_shard
+
+
+def _dims(cfg: ModelConfig, scfg: SSMConfig):
+    d_inner = scfg.expand * cfg.d_model
+    nh = d_inner // scfg.head_dim
+    conv_dim = d_inner + 2 * scfg.n_groups * scfg.d_state
+    return d_inner, nh, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, scfg: SSMConfig, dtype) -> dict:
+    d_inner, nh, conv_dim = _dims(cfg, scfg)
+    d_in_proj = 2 * d_inner + 2 * scfg.n_groups * scfg.d_state + nh
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": layers.init_linear(k1, cfg.d_model, d_in_proj, dtype),
+        "conv_w": layers.truncated_normal_init(k2, (scfg.d_conv, conv_dim), 0.2, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 1e-2, jnp.float32))),
+        "norm": layers.init_rmsnorm(d_inner, dtype),
+        "out_proj": layers.init_linear(k3, d_inner, cfg.d_model, dtype, std=d_inner**-0.5),
+    }
+
+
+def mamba2_specs(cfg: ModelConfig, scfg: SSMConfig) -> dict:
+    P = jax.sharding.PartitionSpec
+    return {
+        "in_proj": layers.linear_specs(FSDP, TP),
+        "conv_w": P(None, TP),
+        "conv_b": P(TP),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "norm": layers.rmsnorm_specs(),
+        "out_proj": layers.linear_specs(TP, FSDP),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # (B, d_conv - 1, conv_dim) last conv inputs
+    state: jax.Array  # (B, nh, head_dim, d_state) float32 SSM state
+
+
+def init_mamba_cache(batch: int, cfg: ModelConfig, scfg: SSMConfig, dtype) -> MambaCache:
+    d_inner, nh, conv_dim = _dims(cfg, scfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, scfg.d_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, nh, scfg.head_dim, scfg.d_state), jnp.float32),
+    )
+
+
+def _split_proj(proj, cfg: ModelConfig, scfg: SSMConfig):
+    d_inner, nh, _ = _dims(cfg, scfg)
+    gs = scfg.n_groups * scfg.d_state
+    z, xBC, dt = jnp.split(proj, [d_inner, d_inner + d_inner + 2 * gs], axis=-1)
+    return z, xBC, dt  # dt (…, nh)
+
+
+def _conv_sequence(xBC, params, scfg: SSMConfig, init_conv=None):
+    """Depthwise causal conv1d along seq. xBC (B, S, conv_dim)."""
+    B, S, Cd = xBC.shape
+    K = scfg.d_conv
+    if init_conv is None:
+        init_conv = jnp.zeros((B, K - 1, Cd), xBC.dtype)
+    padded = jnp.concatenate([init_conv, xBC], axis=1)  # (B, S+K-1, Cd)
+    w = params["conv_w"].astype(xBC.dtype)  # (K, Cd)
+    out = jnp.zeros_like(xBC)
+    for i in range(K):  # K is tiny (4): unrolled taps
+        out = out + padded[:, i : i + S, :] * w[i][None, None, :]
+    out = out + params["conv_b"].astype(xBC.dtype)[None, None, :]
+    return jax.nn.silu(out), padded[:, -(K - 1) :, :] if K > 1 else init_conv
+
+
+def mamba2_sequence(
+    params: dict,
+    u: jax.Array,
+    cfg: ModelConfig,
+    scfg: SSMConfig,
+    return_cache: bool = False,
+):
+    """u (B, S, dm) -> (B, S, dm) [, MambaCache]. Chunked SSD scan."""
+    B, S, dm = u.shape
+    d_inner, nh, conv_dim = _dims(cfg, scfg)
+    hd, ds, ng = scfg.head_dim, scfg.d_state, scfg.n_groups
+    Q = min(scfg.chunk, S)
+    pad = -S % Q
+    nc = (S + pad) // Q
+
+    proj = layers.linear(params["in_proj"], u)
+    z, xBC, dt = _split_proj(proj, cfg, scfg)
+    xBC, conv_tail = _conv_sequence(xBC, params, scfg)
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + ng * ds], axis=-1)
+
+    # float32 recurrence land
+    x = x.reshape(B, S, nh, hd).astype(jnp.float32)
+    Bm = Bm.reshape(B, S, ng, ds).astype(jnp.float32)
+    Cm = Cm.reshape(B, S, ng, ds).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])  # (B,S,nh)
+    A = -jnp.exp(params["A_log"])  # (nh,)
+    dA = dt * A[None, None, :]  # (B, S, nh) negative
+
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+
+    Sp = S + pad
+    xc = x.reshape(B, nc, Q, nh, hd)
+    Bc = Bm.reshape(B, nc, Q, ng, ds)
+    Cc = Cm.reshape(B, nc, Q, ng, ds)
+    dtc = dt.reshape(B, nc, Q, nh)
+    dAc = dA.reshape(B, nc, Q, nh)
+    cum = jnp.cumsum(dAc, axis=2)  # (B, nc, Q, nh) inclusive
+    total = cum[:, :, -1, :]  # (B, nc, nh)
+
+    # intra-chunk: heads share group B/C (ng==1 assumed for head broadcast)
+    CB = jnp.einsum("bcqgs,bckgs->bcqk", Cc, Bc)  # (B,nc,Q,Q) group-summed
+    # L[b,c,h,i,j] = exp(cum_i - cum_j) for i >= j
+    Lmat = jnp.exp(
+        jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :], -60.0, 0.0)
+    )  # (B,nc,Q,Q,nh)
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    W = CB[..., None] * Lmat * tri[None, None, :, :, None]  # (B,nc,Q,Q,nh)
+    dx = dtc[..., None] * xc  # (B,nc,Q,nh,hd)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", W, dx)
+
+    # chunk states: S_c[h,p,s] = sum_j exp(total - cum_j) dx_j[h,p] B_j[s]
+    decay_state = jnp.exp(jnp.clip(total[:, :, None, :] - cum, -60.0, None))  # (B,nc,Q,nh)
+    Sc = jnp.einsum("bcqh,bcqhp,bcqgs->bchps", decay_state, dx, Bc)  # (B,nc,nh,hd,ds)
+
+    # inter-chunk scan
+    def step(R, inp):
+        Sc_c, tot_c = inp  # (B,nh,hd,ds), (B,nh)
+        R_out = R  # state BEFORE this chunk
+        R_new = R * jnp.exp(jnp.clip(tot_c, -60.0, 0.0))[:, :, None, None] + Sc_c
+        return R_new, R_out
+
+    R0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    R_final, R_prevs = jax.lax.scan(
+        step,
+        R0,
+        (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    R_prev = jnp.moveaxis(R_prevs, 0, 1)  # (B,nc,nh,hd,ds) state entering chunk
+
+    decay_in = jnp.exp(jnp.clip(cum, -60.0, 0.0))  # (B,nc,Q,nh)
+    y_inter = jnp.einsum("bcqgs,bchps,bcqh->bcqhp", Cc, R_prev, decay_in)
+
+    y = (y_intra + y_inter).reshape(B, Sp, nh, hd)[:, :S]
+    y = y + params["D"][None, None, :, None] * x.reshape(B, Sp, nh, hd)[:, :S]
+    y = y.reshape(B, S, d_inner)
+
+    # gated RMSNorm + out projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps).astype(u.dtype)
+    out = layers.linear(params["out_proj"], y)
+    out = maybe_shard(out, BATCH, None, None)
+    if return_cache:
+        return out, MambaCache(conv=conv_tail.astype(u.dtype), state=R_final)
+    return out
+
+
+def mamba2_decode(
+    params: dict,
+    u: jax.Array,
+    cache: MambaCache,
+    cfg: ModelConfig,
+    scfg: SSMConfig,
+):
+    """One-token decode. u (B, 1, dm) -> (B, 1, dm), new cache. O(1) in context."""
+    B = u.shape[0]
+    d_inner, nh, conv_dim = _dims(cfg, scfg)
+    hd, ds, ng = scfg.head_dim, scfg.d_state, scfg.n_groups
+
+    proj = layers.linear(params["in_proj"], u)[:, 0]  # (B, d_in_proj)
+    z, xBC, dt = _split_proj(proj, cfg, scfg)
+
+    # conv ring buffer
+    window = jnp.concatenate([cache.conv, xBC[:, None, :]], axis=1)  # (B, K, conv_dim)
+    w = params["conv_w"].astype(xBC.dtype)
+    xBC = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(xBC.dtype)
+    xBC = jax.nn.silu(xBC)
+    new_conv = window[:, 1:, :]
+
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + ng * ds], axis=-1)
+    x = x.reshape(B, nh, hd).astype(jnp.float32)
+    Bm = Bm.reshape(B, ng, ds).astype(jnp.float32)[:, 0]  # ng == 1
+    Cm = Cm.reshape(B, ng, ds).astype(jnp.float32)[:, 0]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])  # (B, nh)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A[None, :])  # (B, nh)
+
+    dx = dt[..., None] * x  # (B, nh, hd)
+    state = cache.state * decay[:, :, None, None] + jnp.einsum("bhp,bs->bhps", dx, Bm)
+    y = jnp.einsum("bhps,bs->bhp", state, Cm) + params["D"][None, :, None] * x
+    y = y.reshape(B, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps).astype(u.dtype)
+    out = layers.linear(params["out_proj"], y)[:, None, :]
+    return out, MambaCache(conv=new_conv, state=state)

@@ -1,0 +1,21 @@
+from repro.optim.adamw import (
+    AdamWState,
+    adamw_update,
+    clip_by_global_norm,
+    compress_grads,
+    decompress_accumulate,
+    init_opt_state,
+    lr_schedule,
+    opt_state_specs,
+)
+
+__all__ = [
+    "AdamWState",
+    "adamw_update",
+    "clip_by_global_norm",
+    "compress_grads",
+    "decompress_accumulate",
+    "init_opt_state",
+    "lr_schedule",
+    "opt_state_specs",
+]

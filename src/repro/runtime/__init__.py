@@ -1,0 +1,11 @@
+from repro.runtime.train_step import TrainState, init_train_state, make_train_step, train_state_specs
+from repro.runtime.serve_step import make_decode_step, make_prefill_step
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "train_state_specs",
+    "make_decode_step",
+    "make_prefill_step",
+]

@@ -1,0 +1,130 @@
+"""Fault-tolerant training driver: checkpoint/restart, failure injection,
+straggler telemetry.
+
+The contract exercised by tests/test_fault.py:
+
+  * deterministic data (pure function of step) + committed checkpoints ⇒
+    a run killed at any step and restarted from the last COMMIT reproduces
+    the uninterrupted run exactly (bitwise on CPU).
+  * failures are injected as ``SimulatedFailure`` at arbitrary steps;
+    ``run_with_restarts`` plays the coordinator: catch, restart from disk,
+    resume. On a real cluster the coordinator is the job scheduler watching
+    heartbeats — the restart path is identical.
+
+Straggler mitigation: per-step wall-time telemetry with an EWMA + k·sigma
+outlier rule (``StragglerMonitor``). On detection the deterministic data
+pipeline lets any healthy host recompute the slow shard's batch (backup
+tasks) or the mesh be rebuilt without it (elastic): both need zero data
+re-coordination because batch(step, shard) is stateless — see data/pipeline.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro import ckpt
+from repro.configs.base import ArchBundle
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.runtime.train_step import TrainState, init_train_state, make_train_step
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (tests / chaos drills)."""
+
+
+@dataclass
+class StragglerMonitor:
+    alpha: float = 0.2
+    k_sigma: float = 3.0
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        if self.n >= 3:
+            sd = max(self.var**0.5, 1e-6)
+            if dt > self.mean + self.k_sigma * sd:
+                self.flagged.append((step, dt))
+                return True
+        delta = dt - self.mean
+        self.mean += self.alpha * delta
+        self.var = (1 - self.alpha) * (self.var + self.alpha * delta * delta)
+        self.n += 1
+        return False
+
+
+def train_loop(
+    bundle: ArchBundle,
+    dcfg: DataConfig,
+    steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 5,
+    fail_at: Optional[int] = None,
+    seed: int = 0,
+    async_ckpt: bool = False,
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+) -> TrainState:
+    """Run (or resume) training to ``steps``. Raises SimulatedFailure at
+    ``fail_at`` AFTER the step executes but BEFORE its checkpoint commits —
+    the nastiest spot."""
+    mcfg, tcfg = bundle.model, bundle.train
+    stream = SyntheticStream(dcfg, mcfg)
+    step_fn = jax.jit(make_train_step(mcfg, tcfg))
+
+    template = init_train_state(jax.random.PRNGKey(seed), mcfg, tcfg)
+    start = ckpt.latest_step(ckpt_dir)
+    if start is not None:
+        state = ckpt.restore_checkpoint(ckpt_dir, start, template)
+        step = start
+    else:
+        state = template
+        step = 0
+        ckpt.save_checkpoint(ckpt_dir, 0, state)
+
+    saver = ckpt.AsyncCheckpointer(ckpt_dir) if async_ckpt else None
+    monitor = StragglerMonitor()
+    while step < steps:
+        batch = {k: jax.numpy.asarray(v) for k, v in stream.batch(step).items()}
+        t0 = time.monotonic()
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        monitor.observe(step, time.monotonic() - t0)
+        step += 1
+        if on_metrics:
+            on_metrics(step, {k: float(v) for k, v in metrics.items()})
+        if fail_at is not None and step == fail_at:
+            raise SimulatedFailure(f"injected failure at step {step}")
+        if step % ckpt_every == 0 or step == steps:
+            if saver is not None:
+                saver.save(step, state)
+            else:
+                ckpt.save_checkpoint(ckpt_dir, step, state)
+    if saver is not None:
+        saver.wait()
+    return state
+
+
+def run_with_restarts(
+    bundle: ArchBundle,
+    dcfg: DataConfig,
+    steps: int,
+    ckpt_dir: str,
+    failures: tuple = (),
+    **kw,
+) -> TrainState:
+    """Coordinator: restart from the last commit after each injected failure."""
+    pending = list(failures)
+    while True:
+        fail_at = pending[0] if pending else None
+        try:
+            return train_loop(
+                bundle, dcfg, steps, ckpt_dir, fail_at=fail_at, **kw
+            )
+        except SimulatedFailure:
+            pending.pop(0)  # the "node" died; restart resumes from disk

@@ -1,0 +1,97 @@
+"""ALSH retrieval attachment for LM serving — the paper's technique as a
+first-class decode feature (kNN-LM-style).
+
+A datastore of (hidden-state key → next-token value) records is indexed with
+(d_w^l1, theta)-ALSH over discretized reduced keys. At each decode step the
+model's final hidden state queries the index under a per-query WEIGHT VECTOR
+(exactly the paper's setting: w rides with the query; here it defaults to
+per-dimension precision weights of the datastore but is caller-overridable),
+and the retrieved neighbours' token distribution is interpolated with the LM
+logits:  log p = logaddexp(log((1-λ) p_LM), log(λ p_kNN)).
+
+All probe compute is jit-compatible and lives inside the same XLA program as
+the decode step; the index shards over the "data" axis in the distributed
+service (see core/distributed.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RetrievalConfig
+from repro.core import BoundedSpace, IndexConfig, build_index, query_index
+from repro.core.index import ALSHIndex
+
+
+class RetrievalState(NamedTuple):
+    index: ALSHIndex
+    values: jax.Array  # (n,) int32 token ids of datastore records
+    proj: jax.Array  # (d_model, d_key) random key-reduction projection
+    default_w: jax.Array  # (d_key,) default per-dimension weights
+
+
+def index_config(rcfg: RetrievalConfig) -> IndexConfig:
+    return IndexConfig(
+        d=rcfg.d_key,
+        M=rcfg.M,
+        K=rcfg.K,
+        L=rcfg.L,
+        family=rcfg.family,
+        max_candidates=rcfg.max_candidates,
+        space=BoundedSpace(0.0, 1.0, float(rcfg.M)),
+    )
+
+
+def build_datastore(
+    key, d_model: int, vocab: int, rcfg: RetrievalConfig
+) -> RetrievalState:
+    """Synthetic datastore (examples/tests); real deployments ingest hidden
+    states from a corpus pass with the same machinery."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n = rcfg.datastore_size
+    keys = jax.random.uniform(k1, (n, rcfg.d_key))
+    values = jax.random.randint(k2, (n,), 0, vocab, dtype=jnp.int32)
+    proj = jax.random.normal(k3, (d_model, rcfg.d_key)) / (d_model**0.5)
+    # precision weights: inverse per-dim std of the datastore keys
+    w = 1.0 / (jnp.std(keys, axis=0) + 1e-3)
+    index = build_index(k4, keys, index_config(rcfg))
+    return RetrievalState(index=index, values=values, proj=proj, default_w=w)
+
+
+def reduce_key(hidden: jax.Array, state: RetrievalState) -> jax.Array:
+    """(B, d_model) hidden -> (B, d_key) in [0, 1] (sigmoid squash)."""
+    return jax.nn.sigmoid(hidden.astype(jnp.float32) @ state.proj)
+
+
+def retrieve_logits(
+    hidden: jax.Array,
+    state: RetrievalState,
+    rcfg: RetrievalConfig,
+    vocab: int,
+    weights: jax.Array | None = None,
+    temperature: float = 1.0,
+) -> jax.Array:
+    """kNN log-probs (B, V) from ALSH neighbours of the hidden state."""
+    q = reduce_key(hidden, state)
+    B = q.shape[0]
+    w = weights if weights is not None else jnp.broadcast_to(state.default_w, q.shape)
+    res = query_index(state.index, q, w, index_config(rcfg), k=rcfg.topk)
+    # softmax(-d/T) over retrieved records, scattered onto their token ids
+    valid = res.ids >= 0
+    scores = jnp.where(valid, -res.dists / temperature, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)  # (B, topk)
+    tok = jnp.where(valid, state.values[jnp.maximum(res.ids, 0)], 0)
+    pknn = jnp.zeros((B, vocab), jnp.float32)
+    pknn = pknn.at[jnp.arange(B)[:, None], tok].add(jnp.where(valid, probs, 0.0))
+    return jnp.log(pknn + 1e-20)
+
+
+def interpolate(lm_logits: jax.Array, knn_logp: jax.Array, lam: float) -> jax.Array:
+    """log((1-λ) p_LM + λ p_kNN) in a numerically stable form."""
+    lm_logp = jax.nn.log_softmax(lm_logits, axis=-1)
+    return jnp.logaddexp(
+        lm_logp + jnp.log1p(-lam), knn_logp + jnp.log(lam)
+    )

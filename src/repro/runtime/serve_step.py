@@ -1,0 +1,73 @@
+"""jit-able serving steps: prefill and decode (optionally ALSH-augmented).
+
+Sharding: batch over ("pod","data"); decode KV caches shard their SEQUENCE
+dim over "model" (uniform across archs — head counts like kv=1 MQA can't
+shard 16-way, sequence always can). GSPMD turns the seq-sharded attention
+into partial-softmax + cross-shard reduction (flash-decode-style); the
+roofline pass quantifies the collective cost per cell.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import models
+from repro.configs.base import ModelConfig, RetrievalConfig
+from repro.models.sharding import BATCH, get_mesh, sharding
+from repro.runtime import retrieval as rt
+from repro.runtime.train_step import batch_pytree_specs
+
+
+def make_prefill_step(mcfg: ModelConfig, cache_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        return models.forward_prefill(params, batch, mcfg, cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(
+    mcfg: ModelConfig,
+    rcfg: Optional[RetrievalConfig] = None,
+):
+    """decode_step(params, batch, caches [, retrieval_state]) -> (logits, tok, caches)."""
+
+    if rcfg is None:
+
+        def decode_step(params, batch, caches):
+            return models.forward_decode(params, batch, caches, mcfg)
+
+        return decode_step
+
+    def decode_step_retr(params, batch, caches, retr_state: rt.RetrievalState):
+        logits, _, new_caches, hidden = models.forward_decode(
+            params, batch, caches, mcfg, return_hidden=True
+        )
+        knn_logp = rt.retrieve_logits(
+            hidden, retr_state, rcfg, mcfg.vocab_size, weights=batch.get("retr_weights")
+        )
+        mixed = rt.interpolate(logits, knn_logp, rcfg.interp_lambda)
+        next_tok = jnp.argmax(mixed, axis=-1).astype(jnp.int32)
+        return mixed, next_tok, new_caches
+
+    return decode_step_retr
+
+
+def jit_decode_step(mcfg: ModelConfig, rcfg: Optional[RetrievalConfig] = None):
+    """jit with production shardings (params FSDP/TP, caches seq-over-model)."""
+    mesh = get_mesh()
+    step = make_decode_step(mcfg, rcfg)
+    if mesh is None:
+        return jax.jit(step)
+    pspecs = models.param_specs(mcfg)
+    cspecs = models.cache_specs(mcfg)
+    to_sh = lambda t: jax.tree.map(
+        lambda s: sharding(*s), t, is_leaf=lambda s: isinstance(s, P)
+    )
+    bspec = {"token": sharding(BATCH), "pos": sharding(BATCH)}
+    in_sh = (to_sh(pspecs), bspec, to_sh(cspecs))
+    out_sh = (None, sharding(BATCH), to_sh(cspecs))
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(2,))

@@ -1,0 +1,20 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS / device-count overrides are deliberately NOT set here — smoke
+tests and benchmarks must see the real single-device CPU. Only
+``repro/launch/dryrun.py`` (a separate process) forces 512 host devices.
+Multi-device CPU tests (shard_map / pipeline) spawn subprocesses instead.
+"""
+
+import os
+
+import jax
+import pytest
+
+# Determinism for hypothesis + jax.random interplay.
+os.environ.setdefault("JAX_PLATFORMS", "")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(20260714)

@@ -1,0 +1,94 @@
+"""§4.2.3 O(d) trick: prefix-sum projections ≡ naive 2Md inner products."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hash_families as hf
+from repro.core import transforms
+
+settings = hypothesis.settings(max_examples=25, deadline=None)
+
+
+def _naive_projection(levels, w, a_rows):
+    """a^T P(o) / a^T Q_w(q) via the explicit 2Md construction (paper's naive path).
+
+    a_rows: (2d, M) row view; flat layout must match transform_P/Q:
+    (cos-block d rows of M ; sin-block d rows of M).
+    """
+    d2, M = a_rows.shape
+    a_flat = a_rows.reshape(-1)
+    if w is None:
+        vec = transforms.transform_P(levels, M)
+    else:
+        vec = transforms.transform_Q(levels, w, M)
+    return jnp.dot(a_flat, vec)
+
+
+@settings
+@hypothesis.given(d=st.integers(1, 12), M=st.integers(1, 10), seed=st.integers(0, 2**31 - 1))
+def test_prefix_trick_matches_naive_data(d, M, seed):
+    rng = np.random.RandomState(seed)
+    a_rows = jnp.asarray(rng.randn(2 * d, M), jnp.float32)
+    folded = hf._prefix_tables_from_rows(a_rows)
+    levels = jnp.asarray(rng.randint(0, M + 1, size=(3, d)), jnp.int32)
+    got = hf._project_gather(levels, folded[None], None)[:, 0]
+    want = jax.vmap(lambda lv: _naive_projection(lv, None, a_rows))(levels)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings
+@hypothesis.given(d=st.integers(1, 12), M=st.integers(1, 10), seed=st.integers(0, 2**31 - 1))
+def test_prefix_trick_matches_naive_query(d, M, seed):
+    rng = np.random.RandomState(seed)
+    a_rows = jnp.asarray(rng.randn(2 * d, M), jnp.float32)
+    folded = hf._prefix_tables_from_rows(a_rows)
+    levels = jnp.asarray(rng.randint(0, M + 1, size=(3, d)), jnp.int32)
+    w = jnp.asarray(rng.randn(3, d), jnp.float32)
+    got = hf._project_gather(levels, folded[None], w)[:, 0]
+    want = jax.vmap(lambda lv, wv: _naive_projection(lv, wv, a_rows))(levels, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_onehot_impl_matches_gather_impl(rng):
+    d, M, H, n = 33, 17, 21, 50
+    params = hf.LSHParams(d=d, M=M, n_hashes=H, family="l2", W=3.0)
+    tables = hf.make_prefix_tables(rng, params)
+    k1, k2 = jax.random.split(rng)
+    levels = jax.random.randint(k1, (n, d), 0, M + 1)
+    w = jax.random.normal(k2, (n, d))
+    for weights in (None, w):
+        a = hf._project_gather(levels, tables.folded, weights)
+        b = hf._project_onehot(levels, tables.folded, weights)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_hash_codes_deterministic_and_asymmetric(rng):
+    """f(x) and g(x) agree iff weights are all-ones (the ALSH asymmetry)."""
+    d, M = 8, 6
+    params = hf.LSHParams(d=d, M=M, n_hashes=64, family="theta")
+    tables = hf.make_prefix_tables(rng, params)
+    levels = jax.random.randint(jax.random.fold_in(rng, 1), (4, d), 0, M + 1)
+    ones = jnp.ones((4, d))
+    f = hf.hash_data(levels, tables, params, impl="gather")
+    g1 = hf.hash_query(levels, ones, tables, params, impl="gather")
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(g1))  # w=1 ⇒ symmetric
+    w = 2.5 * ones
+    g2 = hf.hash_query(levels, w, tables, params, impl="gather")
+    # positive scaling preserves signs ⇒ same theta hashes (sanity of Eq 5)
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(g2))
+    wneg = -ones
+    g3 = hf.hash_query(levels, wneg, tables, params, impl="gather")
+    assert np.any(np.asarray(f) != np.asarray(g3))  # negation flips signs
+
+
+def test_l2_hash_bucket_width(rng):
+    params = hf.LSHParams(d=4, M=5, n_hashes=8, family="l2", W=2.0)
+    tables = hf.make_prefix_tables(rng, params)
+    proj = jnp.linspace(-10, 10, 8 * 5).reshape(5, 8)
+    codes = hf.l2_hash(proj, tables, params.W)
+    recon_low = codes * params.W - tables.offsets[None, :]
+    assert np.all(np.asarray(proj) >= np.asarray(recon_low) - 1e-5)
+    assert np.all(np.asarray(proj) < np.asarray(recon_low) + params.W + 1e-4)

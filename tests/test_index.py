@@ -1,0 +1,128 @@
+"""End-to-end ALSH index behaviour: recall, guarantee, sublinearity signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BoundedSpace, IndexConfig, build_index, query_index, plan_index
+from repro.distance import brute_force_nn, wl1_distance
+
+
+def _dataset(key, n, d):
+    return jax.random.uniform(key, (n, d))
+
+
+def test_recall_at_10_theta(rng):
+    """With a generous (K, L) budget, theta-ALSH recall@10 over positive weights is high."""
+    n, d, M = 4000, 16, 16
+    space = BoundedSpace(0.0, 1.0, float(M))
+    data = _dataset(jax.random.fold_in(rng, 0), n, d)
+    cfg = IndexConfig(
+        d=d, M=M, K=10, L=32, family="theta", max_candidates=128, space=space
+    )
+    idx = build_index(jax.random.fold_in(rng, 1), data, cfg)
+    b = 16
+    q = jax.random.uniform(jax.random.fold_in(rng, 2), (b, d))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 3), (b, d))) + 0.2
+    res = query_index(idx, q, w, cfg, k=10)
+    _, bf_ids = brute_force_nn(data, q, w, k=10)
+    recall = np.mean(
+        [len(set(np.asarray(res.ids[i])) & set(np.asarray(bf_ids[i]))) / 10 for i in range(b)]
+    )
+    assert recall >= 0.5, f"theta recall@10 = {recall}"
+    # the whole point: examined candidates << n
+    assert float(jnp.mean(res.n_candidates)) < 0.6 * n
+
+
+def test_r1_r2_nns_guarantee_l2(rng):
+    """Definition 3 behaviour for (d_w^l1, l2)-ALSH: a planted R1-near neighbour
+    is recovered with candidate fraction ≈ 0 (the sublinear regime).
+
+    NOTE the l2 variant's contrast is compressed by the residual transformed
+    distance M·Σ(1-w_i)² at r=0, so it shines when weights are near 1 and the
+    neighbour is genuinely near — exactly the (R1, R2)-NNS promise, not
+    arbitrary recall@k. (theta variant covers the broad-recall case above.)
+    """
+    n, d, M = 4000, 16, 16
+    space = BoundedSpace(0.0, 1.0, float(M))
+    data = _dataset(jax.random.fold_in(rng, 0), n, d)
+    b = 32
+    base_ids = jnp.arange(b) * 17
+    q = jnp.clip(
+        data[base_ids] + 0.003 * jax.random.normal(jax.random.fold_in(rng, 2), (b, d)), 0, 1
+    )
+    w = 1.0 + 0.02 * jax.random.normal(jax.random.fold_in(rng, 3), (b, d))
+    cfg = IndexConfig(
+        d=d, M=M, K=8, L=16, family="l2", W=8.0, max_candidates=128, space=space
+    )
+    idx = build_index(jax.random.fold_in(rng, 1), data, cfg)
+    res = query_index(idx, q, w, cfg, k=1)
+    hit = np.mean(np.asarray(res.ids[:, 0]) == np.asarray(base_ids))
+    assert hit >= 0.85, f"planted-NN hit rate = {hit}"
+    assert float(jnp.mean(res.n_candidates)) < 0.05 * n
+
+
+def test_returned_distances_are_exact(rng):
+    """Whatever ids come back, their reported distances are exact d_w^l1."""
+    n, d, M = 500, 8, 8
+    space = BoundedSpace(0.0, 1.0, float(M))
+    data = _dataset(jax.random.fold_in(rng, 10), n, d)
+    cfg = IndexConfig(d=d, M=M, K=6, L=8, max_candidates=64, space=space)
+    idx = build_index(jax.random.fold_in(rng, 11), data, cfg)
+    q = jax.random.uniform(jax.random.fold_in(rng, 12), (4, d))
+    w = jax.random.normal(jax.random.fold_in(rng, 13), (4, d))
+    res = query_index(idx, q, w, cfg, k=3)
+    for i in range(4):
+        for j in range(3):
+            pid = int(res.ids[i, j])
+            if pid < 0:
+                continue
+            want = float(wl1_distance(data[pid], q[i], w[i]))
+            np.testing.assert_allclose(float(res.dists[i, j]), want, rtol=1e-4, atol=1e-4)
+
+
+def test_self_query_finds_self(rng):
+    """A query equal to a data point with positive weights must find it (dist 0)."""
+    n, d, M = 1000, 12, 16
+    space = BoundedSpace(0.0, 1.0, float(M))
+    data = _dataset(jax.random.fold_in(rng, 20), n, d)
+    cfg = IndexConfig(d=d, M=M, K=8, L=16, max_candidates=64, space=space)
+    idx = build_index(jax.random.fold_in(rng, 21), data, cfg)
+    q = data[:8]
+    w = jnp.ones((8, d))
+    res = query_index(idx, q, w, cfg, k=1)
+    # identical point ⇒ identical lattice point ⇒ identical data-hash in every
+    # table when w > 0 keeps signs (theta family, w=1 ⇒ f == g exactly)
+    assert np.all(np.asarray(res.dists[:, 0]) <= 1e-5)
+
+
+def test_candidates_scale_sublinearly(rng):
+    """n_candidates grows visibly slower than n (the sublinearity signal)."""
+    d, M = 12, 16
+    space = BoundedSpace(0.0, 1.0, float(M))
+    cfg = IndexConfig(d=d, M=M, K=12, L=16, max_candidates=128, space=space)
+    fracs = []
+    for i, n in enumerate((1000, 8000)):
+        data = _dataset(jax.random.fold_in(rng, 30 + i), n, d)
+        idx = build_index(jax.random.fold_in(rng, 40 + i), data, cfg)
+        q = jax.random.uniform(jax.random.fold_in(rng, 50 + i), (8, d))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 60 + i), (8, d))) + 0.2
+        res = query_index(idx, q, w, cfg, k=1)
+        fracs.append(float(jnp.mean(res.n_candidates)) / n)
+    assert fracs[1] < fracs[0], f"candidate fraction should shrink with n: {fracs}"
+
+
+def test_negative_weights_supported(rng):
+    """Each w_i may be negative (paper abstract): pipeline runs and matches oracle."""
+    n, d, M = 800, 10, 8
+    space = BoundedSpace(0.0, 1.0, float(M))
+    data = _dataset(jax.random.fold_in(rng, 70), n, d)
+    cfg = IndexConfig(d=d, M=M, K=6, L=24, max_candidates=128, space=space)
+    idx = build_index(jax.random.fold_in(rng, 71), data, cfg)
+    q = jax.random.uniform(jax.random.fold_in(rng, 72), (4, d))
+    w = jax.random.normal(jax.random.fold_in(rng, 73), (4, d))  # mixed signs
+    res = query_index(idx, q, w, cfg, k=5)
+    assert res.ids.shape == (4, 5)
+    finite = np.isfinite(np.asarray(res.dists))
+    assert finite.any()

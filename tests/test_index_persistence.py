@@ -1,0 +1,27 @@
+"""ALSH index persistence: the built index (a pytree) round-trips through the
+production checkpoint machinery — build once, serve from restore."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import ckpt
+from repro.core import BoundedSpace, IndexConfig, build_index, query_index
+
+
+def test_index_checkpoint_roundtrip(rng, tmp_path):
+    n, d, M = 2000, 12, 16
+    cfg = IndexConfig(d=d, M=M, K=8, L=8, family="theta", max_candidates=64,
+                      space=BoundedSpace(0.0, 1.0, float(M)))
+    data = jax.random.uniform(jax.random.fold_in(rng, 0), (n, d))
+    idx = build_index(jax.random.fold_in(rng, 1), data, cfg)
+
+    ckpt.save_checkpoint(str(tmp_path), 0, idx)
+    idx2 = ckpt.restore_checkpoint(str(tmp_path), 0, idx)
+
+    q = jax.random.uniform(jax.random.fold_in(rng, 2), (4, d))
+    w = jnp.ones((4, d))
+    r1 = query_index(idx, q, w, cfg, k=5)
+    r2 = query_index(idx2, q, w, cfg, k=5)
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_allclose(np.asarray(r1.dists), np.asarray(r2.dists), rtol=1e-6)

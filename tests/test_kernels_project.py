@@ -1,0 +1,65 @@
+"""Pallas alsh_project kernel vs ref oracle: shape/dtype sweeps (interpret=True)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.alsh_project import alsh_project_pallas
+
+SHAPES = [
+    (1, 1, 1, 1),  # degenerate minimum
+    (7, 5, 3, 4),  # everything sub-block
+    (128, 64, 128, 32),  # exact block multiples
+    (130, 65, 129, 32),  # off-by-one over blocks
+    (64, 200, 17, 9),  # d > BD (multi-step reduction)
+    (256, 33, 1024, 5),  # many hashes
+]
+
+
+@pytest.mark.parametrize("n,d,H,M", SHAPES)
+@pytest.mark.parametrize("weighted", [False, True])
+def test_project_matches_ref(n, d, H, M, weighted):
+    key = jax.random.PRNGKey(n * 1000 + d * 100 + H + M)
+    k1, k2, k3 = jax.random.split(key, 3)
+    levels = jax.random.randint(k1, (n, d), 0, M + 1)
+    folded = jax.random.normal(k2, (H, d, M + 1), jnp.float32)
+    weights = jax.random.normal(k3, (n, d), jnp.float32) if weighted else None
+    got = alsh_project_pallas(levels, folded, weights, interpret=True)
+    want = ref.alsh_project(levels, folded, weights)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("table_dtype", [jnp.float32, jnp.bfloat16])
+def test_project_dtypes(table_dtype):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    levels = jax.random.randint(k1, (32, 16), 0, 9)
+    folded = jax.random.normal(k2, (8, 16, 9), jnp.float32).astype(table_dtype)
+    got = alsh_project_pallas(levels, folded, None, interpret=True)
+    want = ref.alsh_project(levels, folded.astype(jnp.float32), None)
+    tol = 1e-4 if table_dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+    assert got.dtype == jnp.float32  # accumulation stays f32
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    n=st.integers(1, 40),
+    d=st.integers(1, 48),
+    H=st.integers(1, 24),
+    M=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_project_property_random_shapes(n, d, H, M, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    levels = jax.random.randint(k1, (n, d), 0, M + 1)
+    folded = jax.random.normal(k2, (H, d, M + 1), jnp.float32)
+    weights = jax.random.normal(k3, (n, d), jnp.float32)
+    got = alsh_project_pallas(levels, folded, weights, interpret=True)
+    want = ref.alsh_project(levels, folded, weights)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)

@@ -1,0 +1,70 @@
+"""Multiprobe ALSH (beyond-paper): same recall from fewer tables."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BoundedSpace, IndexConfig, build_index, query_index
+from repro.core.multiprobe import query_multiprobe
+from repro.distance import brute_force_nn
+
+
+def _recall(res, bf_ids, b, k):
+    return np.mean([
+        len(set(np.asarray(res.ids[i])) & set(np.asarray(bf_ids[i]))) / k
+        for i in range(b)
+    ])
+
+
+def test_multiprobe_beats_single_probe_at_equal_tables(rng):
+    n, d, M, b, k = 4000, 16, 16, 16, 10
+    space = BoundedSpace(0.0, 1.0, float(M))
+    data = jax.random.uniform(jax.random.fold_in(rng, 0), (n, d))
+    q = jax.random.uniform(jax.random.fold_in(rng, 1), (b, d))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 2), (b, d))) + 0.2
+    _, bf_ids = brute_force_nn(data, q, w, k=k)
+
+    cfg_small = IndexConfig(d=d, M=M, K=10, L=4, family="theta",
+                            max_candidates=128, space=space)
+    idx = build_index(jax.random.fold_in(rng, 3), data, cfg_small)
+
+    r1 = _recall(query_index(idx, q, w, cfg_small, k=k), bf_ids, b, k)
+    r8 = _recall(query_multiprobe(idx, q, w, cfg_small, k=k, n_probes=8), bf_ids, b, k)
+    assert r8 > r1 + 0.1, (r1, r8)
+
+
+def test_multiprobe_matches_bigger_index(rng):
+    """L=4 with 8 probes ≈ L=16 single-probe recall (4x less index memory)."""
+    n, d, M, b, k = 4000, 16, 16, 16, 10
+    space = BoundedSpace(0.0, 1.0, float(M))
+    data = jax.random.uniform(jax.random.fold_in(rng, 10), (n, d))
+    q = jax.random.uniform(jax.random.fold_in(rng, 11), (b, d))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 12), (b, d))) + 0.2
+    _, bf_ids = brute_force_nn(data, q, w, k=k)
+
+    cfg_small = IndexConfig(d=d, M=M, K=10, L=4, family="theta",
+                            max_candidates=128, space=space)
+    cfg_big = IndexConfig(d=d, M=M, K=10, L=16, family="theta",
+                          max_candidates=128, space=space)
+    idx_small = build_index(jax.random.fold_in(rng, 13), data, cfg_small)
+    idx_big = build_index(jax.random.fold_in(rng, 13), data, cfg_big)
+
+    r_multi = _recall(query_multiprobe(idx_small, q, w, cfg_small, k=k, n_probes=8),
+                      bf_ids, b, k)
+    r_big = _recall(query_index(idx_big, q, w, cfg_big, k=k), bf_ids, b, k)
+    assert r_multi >= r_big - 0.15, (r_multi, r_big)
+
+
+def test_probe_zero_equals_single_probe(rng):
+    """n_probes=1 (no flips) must reproduce the paper's single-probe path."""
+    n, d, M = 1000, 8, 8
+    space = BoundedSpace(0.0, 1.0, float(M))
+    data = jax.random.uniform(jax.random.fold_in(rng, 20), (n, d))
+    q = jax.random.uniform(jax.random.fold_in(rng, 21), (4, d))
+    w = jnp.ones((4, d))
+    cfg = IndexConfig(d=d, M=M, K=8, L=8, family="theta",
+                      max_candidates=64, space=space)
+    idx = build_index(jax.random.fold_in(rng, 22), data, cfg)
+    r_single = query_index(idx, q, w, cfg, k=3)
+    r_multi = query_multiprobe(idx, q, w, cfg, k=3, n_probes=1)
+    np.testing.assert_array_equal(np.asarray(r_single.ids), np.asarray(r_multi.ids))

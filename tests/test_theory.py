@@ -1,0 +1,103 @@
+"""Eq 25/27 collision probabilities: Monte-Carlo vs closed form; rho < 1 (Thm 4/5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hash_families as hf
+from repro.core import theory
+from repro.distance import wl1_distance
+
+
+@pytest.mark.parametrize("family", ["theta", "l2"])
+def test_collision_probability_montecarlo(rng, family):
+    """Empirical Pr[f(o)=g(q)] over 4096 hash draws matches Eq 25/27 within 3 sigma."""
+    d, M, H, W = 6, 8, 4096, 8.0
+    params = hf.LSHParams(d=d, M=M, n_hashes=H, family=family, W=W)
+    tables = hf.make_prefix_tables(rng, params)
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(rng, 7), 3)
+    o = jax.random.randint(k1, (1, d), 0, M + 1)
+    q = jax.random.randint(k2, (1, d), 0, M + 1)
+    w = jax.random.normal(k3, (1, d))
+    f = hf.hash_data(o, tables, params, impl="gather")
+    g = hf.hash_query(q, w, tables, params, impl="gather")
+    emp = float(jnp.mean((f == g).astype(jnp.float32)))
+    r = wl1_distance(o.astype(jnp.float32), q.astype(jnp.float32), w)[0]
+    if family == "theta":
+        ana = float(theory.collision_prob_theta(r, M, d, w[0]))
+    else:
+        ana = float(theory.collision_prob_l2(r, M, d, w[0], W))
+    sigma = np.sqrt(max(ana * (1 - ana), 1e-6) / H)
+    assert abs(emp - ana) < 4 * sigma + 0.01, (emp, ana, sigma)
+
+
+@pytest.mark.parametrize("family", ["theta", "l2"])
+def test_collision_prob_monotone_decreasing(family):
+    d, M, W = 10, 16, 4.0
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (d,))) + 0.1
+    rmax = float(M * jnp.sum(w))
+    rs = jnp.linspace(0.0, rmax, 64)
+    if family == "theta":
+        ps = theory.collision_prob_theta(rs, M, d, w)
+    else:
+        ps = theory.collision_prob_l2(rs, M, d, w, W)
+    diffs = np.diff(np.asarray(ps))
+    assert np.all(diffs <= 1e-6), "collision prob must decrease with distance"
+    assert np.all((np.asarray(ps) >= -1e-6) & (np.asarray(ps) <= 1 + 1e-6))
+
+
+@pytest.mark.parametrize("family", ["theta", "l2"])
+def test_rho_below_one(family):
+    """Thm 4/5: rho = log P1 / log P2 < 1 for any R1 < R2."""
+    d, M = 12, 32
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (d,))) + 0.1
+    rmax = float(M * jnp.sum(w))
+    for f1, f2 in [(0.01, 0.1), (0.05, 0.3), (0.2, 0.6)]:
+        r = float(
+            theory.rho(
+                jnp.asarray(f1 * rmax), jnp.asarray(f2 * rmax), M, d, w, family=family, W=16.0
+            )
+        )
+        assert 0.0 < r < 1.0, (family, f1, f2, r)
+
+
+def test_plan_index_reasonable():
+    plan = theory.plan_index(n=100_000, R1=0.3, R2=2.0, M=32, d=16)
+    assert 1 <= plan.K <= 32 and 1 <= plan.L <= 256
+    assert 0 < plan.rho < 1
+    assert theory.success_probability(plan) > 0.5
+
+
+def test_eq24_consistency(rng):
+    """Eq 24: ||P(o)-Q_w(q)||_2 closed form == explicit vector computation."""
+    from repro.core import transforms
+
+    d, M = 7, 9
+    k1, k2, k3 = jax.random.split(rng, 3)
+    o = jax.random.randint(k1, (d,), 0, M + 1)
+    q = jax.random.randint(k2, (d,), 0, M + 1)
+    w = jax.random.normal(k3, (d,))
+    P = transforms.transform_P(o, M)
+    Q = transforms.transform_Q(q, w, M)
+    explicit = float(jnp.linalg.norm(P - Q))
+    r = wl1_distance(o.astype(jnp.float32), q.astype(jnp.float32), w)
+    closed = float(theory.l2_distance_from_wl1(r, M, d, w))
+    np.testing.assert_allclose(explicit, closed, rtol=1e-4)
+
+
+def test_eq26_consistency(rng):
+    from repro.core import transforms
+
+    d, M = 7, 9
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(rng, 3), 3)
+    o = jax.random.randint(k1, (d,), 0, M + 1)
+    q = jax.random.randint(k2, (d,), 0, M + 1)
+    w = jax.random.normal(k3, (d,)) + 0.01
+    P = transforms.transform_P(o, M)
+    Q = transforms.transform_Q(q, w, M)
+    cosang = float(jnp.dot(P, Q) / (jnp.linalg.norm(P) * jnp.linalg.norm(Q)))
+    explicit = float(np.arccos(np.clip(cosang, -1, 1)))
+    r = wl1_distance(o.astype(jnp.float32), q.astype(jnp.float32), w)
+    closed = float(theory.angular_distance_from_wl1(r, M, d, w))
+    np.testing.assert_allclose(explicit, closed, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,108 @@
+"""Property tests for the paper's §4.1 transforms (Eq 13, 19-24, Obs 1/2)."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import transforms
+from repro.distance import wl1_distance
+
+settings = hypothesis.settings(max_examples=40, deadline=None)
+
+
+def _levels(draw, d, M, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(0, M + 1, size=(d,)), jnp.int32)
+
+
+@settings
+@hypothesis.given(
+    d=st.integers(1, 24),
+    M=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_eq21_identity(d, M, seed):
+    """d_w^l1(o, q) == M*sum(w) - <P(o), Q_w(q)> exactly (Eq 21)."""
+    rng = np.random.RandomState(seed)
+    o = jnp.asarray(rng.randint(0, M + 1, size=(d,)), jnp.int32)
+    q = jnp.asarray(rng.randint(0, M + 1, size=(d,)), jnp.int32)
+    w = jnp.asarray(rng.randn(d), jnp.float32)
+    direct = wl1_distance(o.astype(jnp.float32), q.astype(jnp.float32), w)
+    via = transforms.wl1_via_mips(o, q, w, M)
+    np.testing.assert_allclose(direct, via, rtol=1e-4, atol=1e-4)
+
+
+@settings
+@hypothesis.given(d=st.integers(1, 24), M=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+def test_eq22_eq23_norms(d, M, seed):
+    """||P(o)||^2 = Md (data-independent) and ||Q_w(q)||^2 = M sum(w^2) (Eq 22/23)."""
+    rng = np.random.RandomState(seed)
+    o = jnp.asarray(rng.randint(0, M + 1, size=(d,)), jnp.int32)
+    q = jnp.asarray(rng.randint(0, M + 1, size=(d,)), jnp.int32)
+    w = jnp.asarray(rng.randn(d), jnp.float32)
+    P = transforms.transform_P(o, M)
+    Q = transforms.transform_Q(q, w, M)
+    np.testing.assert_allclose(float(jnp.sum(P * P)), M * d, rtol=1e-5)
+    np.testing.assert_allclose(
+        float(jnp.sum(Q * Q)), float(M * jnp.sum(w * w)), rtol=1e-4
+    )
+
+
+@settings
+@hypothesis.given(d=st.integers(1, 16), M=st.integers(1, 10), seed=st.integers(0, 2**31 - 1))
+def test_unary_code_is_binary_and_monotone(d, M, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randint(0, M + 1, size=(d,)), jnp.int32)
+    v = transforms.unary_code(x, M)
+    assert v.shape == (d, M)
+    assert set(np.unique(np.asarray(v))).issubset({0.0, 1.0})
+    # exactly x_i ones, prefix-packed
+    np.testing.assert_array_equal(np.asarray(jnp.sum(v, axis=-1), np.int32), np.asarray(x))
+    sorted_desc = np.sort(np.asarray(v), axis=-1)[:, ::-1]
+    np.testing.assert_array_equal(np.asarray(v), sorted_desc)
+
+
+@settings
+@hypothesis.given(
+    d=st.integers(1, 8),
+    t=st.floats(0.5, 64.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_observation1_slack(d, t, seed):
+    """|d_w^l1(u_t(o), u_t(q)) - t*d_w^l1(o, q)| <= sum|w| (Obs 1 inner inequality)."""
+    rng = np.random.RandomState(seed)
+    space = transforms.BoundedSpace(0.0, 1.0, t)
+    o = jnp.asarray(rng.rand(d), jnp.float32)
+    q = jnp.asarray(rng.rand(d), jnp.float32)
+    w = jnp.asarray(rng.randn(d), jnp.float32)
+    lo = transforms.discretize(o, space).astype(jnp.float32)
+    lq = transforms.discretize(q, space).astype(jnp.float32)
+    lattice = float(wl1_distance(lo, lq, w))
+    scaled = float(t * wl1_distance(o, q, w))
+    slack = float(jnp.sum(jnp.abs(w))) + 1e-4
+    assert abs(lattice - scaled) <= slack
+
+
+def test_discretize_range_and_clip():
+    space = transforms.BoundedSpace(-2.0, 3.0, 10.0)
+    M = space.M
+    assert M == 50
+    x = jnp.asarray([-2.0, 3.0, 0.0, 2.99999])
+    lv = transforms.discretize(x, space)
+    assert int(lv.min()) >= 0 and int(lv.max()) <= M
+
+
+def test_observation2_cos_sin_identity():
+    """w|o-q| = w - (cos,sin)(o) . w*(cos,sin)(q) for all bit pairs (Obs 2)."""
+    for o in (0, 1):
+        for q in (0, 1):
+            for w in (-1.7, 0.0, 2.3):
+                lhs = w * abs(o - q)
+                co, so = np.cos(np.pi / 2 * o), np.sin(np.pi / 2 * o)
+                cq, sq = np.cos(np.pi / 2 * q), np.sin(np.pi / 2 * q)
+                rhs = w - (co * w * cq + so * w * sq)
+                np.testing.assert_allclose(lhs, rhs, atol=1e-12)

@@ -6,11 +6,16 @@ complexity claims; see DESIGN.md §1 "Validation targets").
 
 Prints ``name,us_per_call,derived`` CSV. The roofline rows summarize the
 compiled dry-run artifacts if present (run repro.launch.dryrun first).
+
+The kernel rows are additionally snapshotted to ``BENCH_kernels.json``
+(cwd) — one record per row plus backend/device metadata — so successive PRs
+leave a machine-readable perf trajectory.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -26,6 +31,23 @@ MODULES = [
 ]
 
 
+def _write_kernels_json(rows, path: str = "BENCH_kernels.json") -> None:
+    import jax
+
+    payload = {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "rows": [
+            {"name": name, "us_per_call": round(us, 2), "derived": str(derived)}
+            for name, us, derived in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path} ({len(rows)} rows)", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated module list")
@@ -37,9 +59,12 @@ def main() -> None:
     for name in mods:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            for row_name, us, derived in mod.run():
+            rows = mod.run()
+            for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}")
             sys.stdout.flush()
+            if name == "kernels_bench":
+                _write_kernels_json(rows)
         except Exception as e:
             failed.append(name)
             print(f"{name},NaN,ERROR:{type(e).__name__}:{e}")

@@ -3,6 +3,8 @@
 Layout (one directory per step):
 
     <dir>/step_000123/shard_<k>.msgpack.zst   — leaf buffers owned by host k
+                                                (.msgpack.zlib when written
+                                                by the zlib fallback)
     <dir>/step_000123/COMMIT                  — written LAST (atomic rename)
 
 Restart protocol: readers only consider step dirs containing COMMIT, so a
@@ -12,7 +14,9 @@ deployments each host writes the shards it owns (``shard_id``/``addressable``
 path below); this container exercises the single-host path with identical
 on-disk format.
 
-Durability over raw speed: zstd level 3 (fast) + contiguous buffers; the
+Durability over raw speed: zstd level 3 (fast, stdlib zlib fallback when
+zstandard is unavailable — frames are distinguished by magic on restore) +
+contiguous buffers; the
 AsyncCheckpointer overlaps serialization/IO with the next training steps and
 is awaited before the step that would overwrite its data (double-buffering).
 """
@@ -30,7 +34,35 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ModuleNotFoundError:  # offline containers: fall back to stdlib zlib
+    zstd = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+# extension says what the WRITER produced (don't put zlib bytes in a .zst
+# file); the reader accepts either and double-checks by frame magic.
+_SHARD_EXTS = (".msgpack.zst", ".msgpack.zlib")
+_WRITE_EXT = _SHARD_EXTS[0] if zstd is not None else _SHARD_EXTS[1]
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 3)
+
+
+def _decompress(blob: bytes) -> bytes:
+    # dispatch on the frame magic so either writer's files restore anywhere
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with zstandard, which is not installed"
+            )
+        return zstd.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _path_str(path) -> str:
@@ -72,8 +104,8 @@ def save_checkpoint(directory: str, step: int, tree: Any, shard_id: int = 0) -> 
         for k, v in flat.items()
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstd.ZstdCompressor(level=3).compress(raw)
-    fname = os.path.join(tmp_dir, f"shard_{shard_id}.msgpack.zst")
+    comp = _compress(raw)
+    fname = os.path.join(tmp_dir, f"shard_{shard_id}{_WRITE_EXT}")
     with open(fname, "wb") as f:
         f.write(comp)
         f.flush()
@@ -104,11 +136,15 @@ def latest_step(directory: str) -> Optional[int]:
 
 def restore_checkpoint(directory: str, step: int, template: Any, shard_id: int = 0) -> Any:
     """Rebuild the pytree (structure from ``template``, data from disk)."""
-    fname = os.path.join(
-        directory, f"step_{step:09d}", f"shard_{shard_id}.msgpack.zst"
-    )
+    step_dir = os.path.join(directory, f"step_{step:09d}")
+    for ext in _SHARD_EXTS:
+        fname = os.path.join(step_dir, f"shard_{shard_id}{ext}")
+        if os.path.exists(fname):
+            break
+    else:
+        raise FileNotFoundError(f"no shard_{shard_id} file in {step_dir}")
     with open(fname, "rb") as f:
-        raw = zstd.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
 
     leaves, treedef = jax.tree_util.tree_flatten_with_path(template)

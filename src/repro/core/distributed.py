@@ -88,7 +88,7 @@ def sharded_query(
         mul = 1
         for ax in reversed(axes):
             rank = rank + jax.lax.axis_index(ax) * mul
-            mul *= jax.lax.axis_size(ax)
+            mul *= mesh.shape[ax]  # static size (lax.axis_size needs jax>=0.4.38)
         gids = jnp.where(res.ids >= 0, res.ids + rank * n_local, -1)
         d, i, nc = res.dists, gids, res.n_candidates
 

@@ -14,7 +14,16 @@ Combining K codes into one int32 key:
     correctness, the candidate budget keeps cost bounded.
 
 The probe path retrieves at most ``max_candidates`` per table (static C),
-dedupes across tables by sort, then re-ranks exactly with the wl1 kernel.
+dedupes across tables by sort, then hands the candidate *ids* to the fused
+``gather_rerank_topk`` kernel, which gathers each needed row straight from
+the (n, d) table (scalar-prefetch DMA on TPU, chunked streaming on CPU),
+re-ranks exactly with d_w^l1, and maintains the running top-k on-chip.
+
+Memory model of a query batch (b queries, P = L·C probed slots):
+  HBM traffic  = probe windows (b·P int32) + one gather of the unique
+                 candidate rows + the (b, k) result;
+  peak live    = O(b·P) ids + O(b·k) top-k — the (b, P, d) candidate tensor
+                 of the old 3-step tail is never materialized anywhere.
 All static-shape, jit/vmap/shard_map-compatible.
 """
 
@@ -163,6 +172,40 @@ def _probe_one_table(sorted_keys_row, perm_row, qkey, C: int):
     return jnp.where(valid, ids, perm_row.shape[0])  # invalid → large sentinel
 
 
+def _dedupe_candidates(cand: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """Sort candidate ids, zap duplicates/invalids to the sentinel ``n``, and
+    compact the unique ids to the front of each row.
+
+    cand: (b, P) int32 ids, entries >= n are invalid (window padding).
+    Returns ((b, P) ascending unique ids, sentinels ``n`` packed last,
+    (b,) unique-candidate counts). The compaction is what lets the fused
+    tail's chunk loop skip all-sentinel chunks — tail cost scales with the
+    number of UNIQUE candidates, not the L·C probe-slot budget.
+    """
+    cand = jnp.sort(jnp.minimum(cand, n), axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((cand.shape[0], 1), bool), cand[:, 1:] != cand[:, :-1]], axis=1
+    )
+    valid = (cand < n) & first
+    return jnp.sort(jnp.where(valid, cand, n), axis=1), jnp.sum(valid, axis=1)
+
+
+def fused_rerank_topk(
+    index: ALSHIndex,
+    cand: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+) -> QueryResult:
+    """Shared probe tail: dedupe → fused gather/re-rank/top-k (no (b, P, d)
+    candidate tensor). ``cand`` is (b, P) raw probe ids (>= n ⇒ padding)."""
+    from repro.kernels import ops
+
+    cand, n_candidates = _dedupe_candidates(cand, index.n)
+    dists, ids = ops.gather_rerank_topk(index.data, cand, queries, weights, k)
+    return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
+
+
 @partial(jax.jit, static_argnames=("cfg", "k", "impl"))
 def query_index(
     index: ALSHIndex,
@@ -172,17 +215,14 @@ def query_index(
     k: int = 1,
     impl: str = "auto",
 ) -> QueryResult:
-    """Batched ALSH query: probe L tables, dedupe, exact re-rank, top-k.
+    """Batched ALSH query: probe L tables → dedupe → fused rerank/top-k.
 
     Args:
       queries: (b, d) float query points.
       weights: (b, d) float per-query weight vectors (the paper's w — may be negative).
       k: neighbours to return.
     """
-    from repro.kernels import ops
-
     b, d = queries.shape
-    n = index.n
     C = cfg.max_candidates
     qlevels = transforms.discretize(queries, cfg.space)
     qkeys = _keys_for(qlevels, weights, index.tables, cfg, index.mixers, impl=impl)  # (b, L)
@@ -192,24 +232,4 @@ def query_index(
         jax.vmap(_probe_one_table, in_axes=(0, 0, 0, None)), in_axes=(None, None, 0, None)
     )
     cand = probe(index.sorted_keys, index.perm, qkeys, C)  # (b, L, C), sentinel = n+C pad id
-    cand = jnp.minimum(cand, n)  # unify sentinels at n
-    cand = cand.reshape(b, cfg.L * C)
-
-    # dedupe: sort ids; runs of equal ids keep their first occurrence
-    cand = jnp.sort(cand, axis=1)
-    first = jnp.concatenate(
-        [jnp.ones((b, 1), bool), cand[:, 1:] != cand[:, :-1]], axis=1
-    )
-    valid = (cand < n) & first
-    n_candidates = jnp.sum(valid, axis=1)
-
-    # exact re-rank with d_w^l1 (Pallas-backed)
-    safe_ids = jnp.minimum(cand, n - 1)
-    pts = index.data[safe_ids]  # (b, LC, d)
-    dists = ops.wl1_rerank(pts, queries, weights)  # (b, LC)
-    dists = jnp.where(valid, dists, jnp.inf)
-    neg, pos_idx = jax.lax.top_k(-dists, k)
-    out_ids = jnp.take_along_axis(cand, pos_idx, axis=1)
-    out_dists = -neg
-    out_ids = jnp.where(jnp.isfinite(out_dists), out_ids, -1)
-    return QueryResult(dists=out_dists, ids=out_ids, n_candidates=n_candidates)
+    return fused_rerank_topk(index, cand.reshape(b, cfg.L * C), queries, weights, k)

@@ -14,6 +14,13 @@ subset scores).
 
 Effect measured in benchmarks/multiprobe_bench.py: matching recall with
 4-8x fewer tables (=> 4-8x less index memory and build hashing).
+
+The probe tail is the same fused pipeline as ``query_index``
+(``core.index.fused_rerank_topk``): the (b, L·P·C) probe ids are deduped by
+sort and handed to the ``gather_rerank_topk`` kernel, which gathers candidate
+rows directly from the (n, d) table and keeps the running top-k on-chip —
+multiprobe's larger probe fan-out (P buckets per table) never materializes a
+(b, L·P·C, d) candidate tensor.
 """
 
 from __future__ import annotations
@@ -26,7 +33,13 @@ import jax.numpy as jnp
 
 from repro.core import hash_families as hf
 from repro.core import transforms
-from repro.core.index import ALSHIndex, IndexConfig, QueryResult, _probe_one_table
+from repro.core.index import (
+    ALSHIndex,
+    IndexConfig,
+    QueryResult,
+    _probe_one_table,
+    fused_rerank_topk,
+)
 from repro.kernels import ops
 
 
@@ -56,7 +69,6 @@ def query_multiprobe(
     likely buckets (query bucket + low-margin bit flips)."""
     assert cfg.family == "theta" and cfg.K <= 31
     b, d = queries.shape
-    n = index.n
     C = cfg.max_candidates
     K, L = cfg.K, cfg.L
 
@@ -88,19 +100,6 @@ def query_multiprobe(
         in_axes=(None, None, 0, None),
     )
     cand = probe(index.sorted_keys, index.perm, probe_keys, C)  # (b, L, P, C)
-    cand = jnp.minimum(cand, n).reshape(b, L * n_probes * C)
-
-    cand = jnp.sort(cand, axis=1)
-    first = jnp.concatenate([jnp.ones((b, 1), bool), cand[:, 1:] != cand[:, :-1]], axis=1)
-    valid = (cand < n) & first
-    n_candidates = jnp.sum(valid, axis=1)
-
-    safe_ids = jnp.minimum(cand, n - 1)
-    pts = index.data[safe_ids]
-    dists = ops.wl1_rerank(pts, queries, weights)
-    dists = jnp.where(valid, dists, jnp.inf)
-    neg, pos_idx = jax.lax.top_k(-dists, k)
-    out_ids = jnp.take_along_axis(cand, pos_idx, axis=1)
-    out_dists = -neg
-    out_ids = jnp.where(jnp.isfinite(out_dists), out_ids, -1)
-    return QueryResult(dists=out_dists, ids=out_ids, n_candidates=n_candidates)
+    return fused_rerank_topk(
+        index, cand.reshape(b, L * n_probes * C), queries, weights, k
+    )

@@ -57,14 +57,22 @@ def brute_force_nn(
 
     Returns:
       ``(dists, ids)`` each ``(k,)`` or ``(b, k)``, ascending by distance.
+
+    The wl1 path runs through ``kernels.ops.wl1_scan_topk`` — the streaming
+    top-k scan (Pallas on TPU, chunked jnp on CPU) that never materializes
+    the (b, n) distance matrix; wl2 keeps the direct reduction.
     """
-    fn = wl1_distance if distance == "wl1" else wl2_distance
     squeeze = q.ndim == 1
     qb = jnp.atleast_2d(q)
     wb = jnp.atleast_2d(w)
-    d = fn(data[None, :, :], qb[:, None, :], wb[:, None, :])  # (b, n)
-    neg_top, ids = jax.lax.top_k(-d, k)
-    dists = -neg_top
+    if distance == "wl1":
+        from repro.kernels import ops
+
+        dists, ids = ops.wl1_scan_topk(data, qb, wb, k)
+    else:
+        d = wl2_distance(data[None, :, :], qb[:, None, :], wb[:, None, :])  # (b, n)
+        neg_top, ids = jax.lax.top_k(-d, k)
+        dists = -neg_top
     if squeeze:
         return dists[0], ids[0]
     return dists, ids

@@ -1,10 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-  alsh_project — §4.2.3 O(d) hash projection as a one-hot MXU contraction
-  wl1_distance — exact d_w^l1 scan / re-rank (VPU)
+  alsh_project  — §4.2.3 O(d) hash projection as a one-hot MXU contraction
+  wl1_distance  — exact d_w^l1 scan / re-rank (VPU, materializing)
+  wl1_topk      — streaming top-k scan: exact k-NN without the (b, n) matrix
+  gather_rerank — fused probe tail: scalar-prefetch gather + re-rank + top-k
+                  (never materializes the (b, L·C, d) candidate tensor)
 
-``ops`` holds the jit'd dispatch wrappers (TPU → Pallas, CPU → jnp oracle);
-``ref`` holds the pure-jnp oracles every kernel is validated against.
+``ops`` holds the jit'd dispatch wrappers (TPU → Pallas, CPU → jnp fast
+path); ``ref`` holds the pure-jnp oracles every kernel is validated against.
 """
 
 from repro.kernels import ops, ref

@@ -1,0 +1,222 @@
+"""Fused ALSH probe tail: scalar-prefetch gather + exact re-rank + top-k.
+
+The unfused tail (`index.data[ids]` → wl1_rerank → lax.top_k) materializes a
+(b, L·C, d) candidate tensor in HBM and reads it straight back — for the
+standard b=64, L·C=4096, d=128 probe that is two full passes over 128 MB the
+query never needed. This kernel removes it: candidate ids are handed to
+Pallas as **scalar-prefetch** arguments (`pltpu.PrefetchScalarGridSpec`), so
+the BlockSpec index map — evaluated ahead of the grid step — points the
+pipeline's DMA engine directly at the needed `(1, d-chunk)` row of the
+(n, d) table in HBM. Each candidate's weighted |diff| partial sums accumulate
+in a scalar scratch across d-chunks; the finished distance is folded into a
+per-query VMEM top-k buffer by replace-max insertion:
+
+  grid (query i, candidate j, d-chunk kd):
+    data block  (1, BDR)  @ row  min(ids[i, j], n-1)   — the gather
+    out blocks  (1, KP)   @ i                          — running top-k
+
+Invalid candidates (padding, duplicates zapped by dedupe) carry the sentinel
+id n: the index map clamps them to a readable row and the merge step drops
+them. The buffer holds the KP (=128-aligned) smallest distances unsorted; the
+wrapper sorts the (b, KP) result and slices (b, k) — exactly the oracle's
+`ref.gather_rerank_topk` semantics ((+inf, -1) tails when fewer than k valid).
+
+The CPU production path (`gather_rerank_topk_auto`) fuses in pure jnp and
+picks its schedule by static footprint: a monolithic single-pass (one XLA
+fusion region, no inter-stage materialization) while the (b, P, d) working
+set is cache-resident, switching to `gather_rerank_topk_chunked` — a
+fori_loop over candidate chunks (gather chunk → re-rank → top-k merge) that
+keeps the live set at O(b·chunk·d) and skips all-sentinel chunks — once the
+monolith would spill.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BDR = 128  # coordinates per d-chunk (gather DMA granularity)
+KP_LANE = 128  # top-k buffer lane alignment
+
+
+def _gather_rerank_kernel(ids_ref, row_ref, q_ref, w_ref, outd_ref, outi_ref, acc_ref, *, n: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    kd = pl.program_id(2)
+    nd = pl.num_programs(2)
+
+    @pl.when((j == 0) & (kd == 0))
+    def _init_topk():
+        outd_ref[...] = jnp.full_like(outd_ref, jnp.inf)
+        outi_ref[...] = jnp.full_like(outi_ref, -1)
+
+    partial = jnp.sum(w_ref[...] * jnp.abs(row_ref[...] - q_ref[...]))  # scalar
+
+    @pl.when(kd == 0)
+    def _acc_init():
+        acc_ref[0, 0] = partial
+
+    @pl.when(kd != 0)
+    def _acc():
+        acc_ref[0, 0] += partial
+
+    @pl.when(kd == nd - 1)
+    def _merge():
+        cid = ids_ref[i, j]
+        dist = acc_ref[0, 0]
+        cur_d = outd_ref[...]  # (1, KP)
+        cur_i = outi_ref[...]
+        worst = jnp.max(cur_d)
+        slot = jnp.argmax(cur_d)  # first-occurrence ⇒ fills +inf slots in order
+
+        @pl.when((cid < n) & (dist < worst))
+        def _insert():
+            lane = jax.lax.broadcasted_iota(jnp.int32, cur_d.shape, 1)
+            put = lane == slot
+            outd_ref[...] = jnp.where(put, dist, cur_d)
+            outi_ref[...] = jnp.where(put, cid, cur_i)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def gather_rerank_topk_pallas(
+    data: jax.Array,
+    ids: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """data (n, d), ids (b, P) int32 (>= n ⇒ invalid), queries/weights (b, d)
+    -> ((b, k) ascending dists, (b, k) ids)."""
+    n, d = data.shape
+    b, P = ids.shape
+    kp = -min(k, P) % KP_LANE + min(k, P)
+    pd = -d % BDR
+    data_p = jnp.pad(data.astype(jnp.float32), ((0, 0), (0, pd)))
+    q_p = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, pd)))
+    w_p = jnp.pad(weights.astype(jnp.float32), ((0, 0), (0, pd)))
+    dp = d + pd
+    grid = (b, P, dp // BDR)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BDR), lambda i, j, kd, ids_ref: (jnp.minimum(ids_ref[i, j], n - 1), kd)),
+            pl.BlockSpec((1, BDR), lambda i, j, kd, ids_ref: (i, kd)),
+            pl.BlockSpec((1, BDR), lambda i, j, kd, ids_ref: (i, kd)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, kp), lambda i, j, kd, ids_ref: (i, 0)),
+            pl.BlockSpec((1, kp), lambda i, j, kd, ids_ref: (i, 0)),
+        ),
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
+    )
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_gather_rerank_kernel, n=n),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, kp), jnp.float32),
+            jax.ShapeDtypeStruct((b, kp), jnp.int32),
+        ),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), data_p, q_p, w_p)
+    # buffer is the kp smallest, unsorted — order + trim to k outside the kernel
+    from repro.kernels.ref import _topk_ascending
+
+    return _topk_ascending(out_d, out_i, k)
+
+
+# Above this candidate-tensor footprint (b·P·d·4 bytes) the one-shot XLA
+# fusion starts spilling LLC on CPU and the chunked streaming schedule wins
+# (measured crossover between 16 MB and 32 MB on x86; see BENCH_kernels.json).
+MONOLITH_BYTES = 24 * 1024 * 1024
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _gather_rerank_topk_monolith(
+    data: jax.Array,
+    ids: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """One-shot fused tail: same math as the oracle but inside a single jit
+    region, so XLA folds gather → re-rank → top-k into one pass with no
+    inter-stage materialization. Best schedule while the candidate tensor
+    stays cache-resident."""
+    from repro.kernels import ref
+
+    return ref.gather_rerank_topk(data, ids, queries, weights, k)
+
+
+def gather_rerank_topk_auto(
+    data: jax.Array,
+    ids: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """CPU production dispatch: pick the fused schedule by static footprint —
+    monolithic single-pass when the (b, P, d) working set fits on-chip,
+    chunked streaming (skip-capable) when it would spill."""
+    b, P = ids.shape
+    d = data.shape[1]
+    if b * P * d * 4 <= MONOLITH_BYTES:
+        return _gather_rerank_topk_monolith(data, ids, queries, weights, k)
+    return gather_rerank_topk_chunked(data, ids, queries, weights, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def gather_rerank_topk_chunked(
+    data: jax.Array,
+    ids: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+    chunk: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Pure-jnp fused tail (CPU production path): chunked gather → re-rank →
+    streaming top-k merge. Never materializes the (b, P, d) tensor.
+
+    Chunks whose every id is the invalid sentinel are skipped entirely
+    (a cheap predicate guards the gather + reduction) — with the dedupe
+    stage packing unique ids first, the loop does O(#unique) work however
+    large the L·C probe budget is."""
+    n, d = data.shape
+    b, P = ids.shape
+    pc = -P % chunk
+    ids_p = jnp.pad(ids.astype(jnp.int32), ((0, 0), (0, pc)), constant_values=n)
+    n_chunks = ids_p.shape[1] // chunk
+    q = queries.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    data_f = data.astype(jnp.float32)
+
+    def body(c, carry):
+        cid = jax.lax.dynamic_slice_in_dim(ids_p, c * chunk, chunk, axis=1)  # (b, chunk)
+        valid = cid < n
+
+        def compute(carry):
+            top_d, top_i = carry
+            pts = data_f[jnp.minimum(cid, n - 1)]  # (b, chunk, d)
+            dists = jnp.sum(w[:, None, :] * jnp.abs(pts - q[:, None, :]), axis=-1)
+            dists = jnp.where(valid, dists, jnp.inf)
+            cand_d = jnp.concatenate([top_d, dists], axis=1)
+            cand_i = jnp.concatenate([top_i, jnp.where(valid, cid, -1)], axis=1)
+            neg, sel = jax.lax.top_k(-cand_d, top_d.shape[1])
+            return -neg, jnp.take_along_axis(cand_i, sel, axis=1)
+
+        return jax.lax.cond(jnp.any(valid), compute, lambda cr: cr, carry)
+
+    kk = max(1, min(k, P))
+    top_d = jnp.full((b, kk), jnp.inf, jnp.float32)
+    top_i = jnp.full((b, kk), -1, jnp.int32)
+    top_d, top_i = jax.lax.fori_loop(0, n_chunks, body, (top_d, top_i))
+    if top_d.shape[1] < k:
+        top_d = jnp.pad(top_d, ((0, 0), (0, k - top_d.shape[1])), constant_values=jnp.inf)
+        top_i = jnp.pad(top_i, ((0, 0), (0, k - top_i.shape[1])), constant_values=-1)
+    return top_d[:, :k], jnp.where(jnp.isfinite(top_d[:, :k]), top_i[:, :k], -1)

@@ -3,11 +3,15 @@
 Production call sites go through these. Dispatch policy:
 
   * TPU backend          -> compiled Pallas kernels.
-  * CPU/other backends   -> pure-jnp oracles from ref.py (fast XLA-CPU code);
-                            tests separately exercise the Pallas bodies with
+  * CPU/other backends   -> pure-jnp implementations: the ref.py oracles for
+                            the elementwise kernels, and the *chunked
+                            streaming* variants for the fused top-k paths
+                            (same fusion, cache-sized working set); tests
+                            separately exercise the Pallas bodies with
                             interpret=True to validate them on CPU.
 
-Override with ``force="pallas" | "ref" | "interpret"`` for benchmarking.
+Override with ``force="pallas" | "ref" | "interpret" | "chunked"`` for
+benchmarking (``chunked`` only exists for the fused top-k ops).
 """
 
 from __future__ import annotations
@@ -16,8 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import alsh_project as _proj
+from repro.kernels import gather_rerank as _gr
 from repro.kernels import ref as _ref
 from repro.kernels import wl1_distance as _wl1
+from repro.kernels import wl1_topk as _topk
 
 
 def _on_tpu() -> bool:
@@ -45,7 +51,7 @@ def wl1_scan(
     weights: jax.Array,
     force: str | None = None,
 ) -> jax.Array:
-    """Exact brute-force scan: (n, d) × (b, d) -> (b, n)."""
+    """Exact brute-force scan: (n, d) × (b, d) -> (b, n) (materializing)."""
     mode = force or ("pallas" if _on_tpu() else "ref")
     if mode == "pallas":
         return _wl1.wl1_scan_pallas(data, queries, weights)
@@ -67,3 +73,46 @@ def wl1_rerank(
     if mode == "interpret":
         return _wl1.wl1_rerank_pallas(pts, queries, weights, interpret=True)
     return _ref.wl1_rerank(pts, queries, weights)
+
+
+def wl1_scan_topk(
+    data: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+    force: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming exact k-NN scan: (n, d) × (b, d) -> ((b, k), (b, k)) without
+    the (b, n) distance matrix."""
+    mode = force or ("pallas" if _on_tpu() else "chunked")
+    if mode == "pallas":
+        return _topk.wl1_scan_topk_pallas(data, queries, weights, k)
+    if mode == "interpret":
+        return _topk.wl1_scan_topk_pallas(data, queries, weights, k, interpret=True)
+    if mode == "chunked":
+        return _topk.wl1_scan_topk_chunked(data, queries, weights, k)
+    return _ref.wl1_scan_topk(data, queries, weights, k)
+
+
+def gather_rerank_topk(
+    data: jax.Array,
+    ids: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+    force: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused ALSH probe tail: (n, d) table + (b, P) candidate ids (>= n ⇒
+    invalid) -> top-k ((b, k) dists, (b, k) ids) with no materialized
+    (b, P, d) gather. CPU auto-dispatch picks monolithic vs chunked
+    streaming by candidate-tensor footprint."""
+    mode = force or ("pallas" if _on_tpu() else "auto")
+    if mode == "pallas":
+        return _gr.gather_rerank_topk_pallas(data, ids, queries, weights, k)
+    if mode == "interpret":
+        return _gr.gather_rerank_topk_pallas(data, ids, queries, weights, k, interpret=True)
+    if mode == "auto":
+        return _gr.gather_rerank_topk_auto(data, ids, queries, weights, k)
+    if mode == "chunked":
+        return _gr.gather_rerank_topk_chunked(data, ids, queries, weights, k)
+    return _ref.gather_rerank_topk(data, ids, queries, weights, k)

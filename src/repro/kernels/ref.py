@@ -52,3 +52,55 @@ def wl1_rerank(pts: jax.Array, queries: jax.Array, weights: jax.Array) -> jax.Ar
     return jnp.sum(
         weights[:, None, :] * jnp.abs(pts - queries[:, None, :]), axis=-1
     )
+
+
+def _topk_ascending(dists: jax.Array, ids: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """k smallest of (b, m) dists with aligned ids; (+inf, -1) padded past m."""
+    b, m = dists.shape
+    if m < k:
+        dists = jnp.pad(dists, ((0, 0), (0, k - m)), constant_values=jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, k - m)), constant_values=-1)
+    neg, sel = jax.lax.top_k(-dists, k)
+    out_d = -neg
+    out_i = jnp.take_along_axis(ids, sel, axis=1)
+    return out_d, jnp.where(jnp.isfinite(out_d), out_i, -1)
+
+
+def wl1_scan_topk(
+    data: jax.Array, queries: jax.Array, weights: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Exact k-NN oracle: full (b, n) scan + top-k (the materializing baseline).
+
+    data (n, d), queries (b, d), weights (b, d)
+    -> ((b, k) ascending dists, (b, k) ids; (+inf, -1) where fewer than k rows).
+    """
+    n = data.shape[0]
+    b = queries.shape[0]
+    dists = wl1_scan(data, queries, weights)
+    ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
+    return _topk_ascending(dists, ids, k)
+
+
+def gather_rerank_topk(
+    data: jax.Array,
+    ids: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused candidate-tail oracle: gather + exact d_w^l1 re-rank + top-k.
+
+    This is the (deliberately) materializing 3-step reference the fused
+    kernels are validated against: it builds the full (b, P, d) candidate
+    tensor the production path exists to avoid.
+
+    data (n, d); ids (b, P) int32 candidate ids, entries >= n are invalid
+    sentinels (padding / duplicates marked by dedupe); queries/weights (b, d)
+    -> ((b, k) ascending dists, (b, k) ids; (+inf, -1) where invalid).
+    """
+    n = data.shape[0]
+    valid = ids < n
+    pts = data[jnp.minimum(ids, n - 1)]  # (b, P, d)
+    dists = wl1_rerank(pts, queries, weights)
+    dists = jnp.where(valid, dists, jnp.inf)
+    return _topk_ascending(dists, jnp.where(valid, ids, -1).astype(jnp.int32), k)

@@ -1,6 +1,8 @@
 """Serving launcher — two modes:
 
-  ALSH vector-search service (the paper's workload):
+  ALSH vector-search service (the paper's workload), served end-to-end on
+  the fused probe pipeline (probe → dedupe → gather_rerank_topk kernels;
+  the exactness spot-check runs the streaming wl1_scan_topk baseline):
     python -m repro.launch.serve --mode alsh [--n 100000 --d 64 --batches 4]
 
   LM decode service with optional ALSH retrieval augmentation:

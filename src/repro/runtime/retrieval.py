@@ -11,7 +11,10 @@ logits:  log p = logaddexp(log((1-λ) p_LM), log(λ p_kNN)).
 
 All probe compute is jit-compatible and lives inside the same XLA program as
 the decode step; the index shards over the "data" axis in the distributed
-service (see core/distributed.py).
+service (see core/distributed.py). Neighbour lookup goes through the fused
+``query_index`` pipeline (probe → dedupe → gather_rerank_topk), so a decode
+step's retrieval never materializes a (B, L·C, d_key) candidate tensor —
+the datastore rows stream through the kernel's on-chip top-k (DESIGN.md §3).
 """
 
 from __future__ import annotations

@@ -27,7 +27,8 @@ from repro.kernels import ops, ref
 
 def _probe_candidates(key, data, queries, weights, L: int, C: int, M: int):
     """Real probe → dedupe ids for a (L, C) budget over the given table."""
-    from repro.core import BoundedSpace, IndexConfig, build_index, transforms
+    from repro.api import BoundedSpace, Index, IndexConfig
+    from repro.core import transforms
     from repro.core.index import _dedupe_candidates, _keys_for, _probe_one_table
 
     n, d = data.shape
@@ -36,7 +37,7 @@ def _probe_candidates(key, data, queries, weights, L: int, C: int, M: int):
         d=d, M=M, K=14, L=L, family="theta", max_candidates=C,
         space=BoundedSpace(0.0, 1.0, float(M)),
     )
-    idx = build_index(key, data, cfg)
+    idx = Index.build(key, data, cfg).state  # engine pytree for kernel-level rows
     qlevels = transforms.discretize(queries, cfg.space)
     qkeys = _keys_for(qlevels, weights, idx.tables, cfg, idx.mixers)
     probe = jax.vmap(

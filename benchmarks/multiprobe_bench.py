@@ -1,26 +1,17 @@
 """Beyond-paper: multiprobe ALSH — recall per table budget.
 
-derived shows recall@10 for: single-probe at L tables, multiprobe at L/4
-tables (8 probes) — the memory-for-probes trade (≈4x less index memory at
-matched recall)."""
+Both arms go through one ``Index.query`` facade; only the QuerySpec differs
+(single-probe at L tables vs multiprobe at L/4 tables, 8 probes) — the
+memory-for-probes trade (≈4x less index memory at matched recall)."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row, time_fn
-from repro.core import BoundedSpace, IndexConfig, build_index, query_index
-from repro.core.multiprobe import query_multiprobe
-from repro.distance import brute_force_nn
-
-
-def _recall(res, bf_ids, b, k):
-    return float(np.mean([
-        len(set(np.asarray(res.ids[i])) & set(np.asarray(bf_ids[i]))) / k
-        for i in range(b)
-    ]))
+from repro.api import BoundedSpace, Index, IndexConfig, QuerySpec
+from repro.distance import brute_force_nn, recall_at_k
 
 
 def run():
@@ -37,16 +28,16 @@ def run():
                            max_candidates=128, space=space)
     cfg_small = IndexConfig(d=d, M=M, K=10, L=L_small, family="theta",
                             max_candidates=128, space=space)
-    idx_full = build_index(jax.random.fold_in(key, 3), data, cfg_full)
-    idx_small = build_index(jax.random.fold_in(key, 3), data, cfg_small)
+    idx_full = Index.build(jax.random.fold_in(key, 3), data, cfg_full)
+    idx_small = Index.build(jax.random.fold_in(key, 3), data, cfg_small)
 
-    r_full = _recall(query_index(idx_full, q, w, cfg_full, k=k), bf_ids, b, k)
-    us_full = time_fn(lambda: query_index(idx_full, q, w, cfg_full, k=k), iters=3) / b
-    r_multi = _recall(query_multiprobe(idx_small, q, w, cfg_small, k=k, n_probes=8),
-                      bf_ids, b, k)
-    us_multi = time_fn(
-        lambda: query_multiprobe(idx_small, q, w, cfg_small, k=k, n_probes=8), iters=3
-    ) / b
+    single = QuerySpec(k=k)
+    multi = QuerySpec(k=k, mode="multiprobe", n_probes=8)
+
+    r_full = recall_at_k(idx_full.query(q, w, single).ids, bf_ids, k)
+    us_full = time_fn(lambda: idx_full.query(q, w, single), iters=3) / b
+    r_multi = recall_at_k(idx_small.query(q, w, multi).ids, bf_ids, k)
+    us_multi = time_fn(lambda: idx_small.query(q, w, multi), iters=3) / b
     return [
         row(f"multiprobe_single_L{L_full}", us_full, f"recall@10={r_full:.2f},mem=1.0x"),
         row(f"multiprobe_8probe_L{L_small}", us_multi,

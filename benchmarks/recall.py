@@ -1,15 +1,16 @@
 """Recall vs approximation budget: both ALSH families at matched candidate
-budgets against the exact scan. derived = recall@10 per configuration."""
+budgets against the exact scan, all through the ``repro.api`` facade
+(the exact reference is the same Index with QuerySpec(mode="exact")).
+derived = recall@10 per configuration."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row, time_fn
-from repro.core import BoundedSpace, IndexConfig, build_index, query_index
-from repro.distance import brute_force_nn
+from repro.api import BoundedSpace, Index, IndexConfig, QuerySpec
+from repro.distance import recall_at_k
 
 
 def run():
@@ -19,24 +20,27 @@ def run():
     data = jax.random.uniform(jax.random.fold_in(key, 0), (n, d))
     q = jax.random.uniform(jax.random.fold_in(key, 1), (b, d))
     w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (b, d))) + 0.2
-    _, bf_ids = brute_force_nn(data, q, w, k=k)
+
+    spec = QuerySpec(k=k)
+    exact = QuerySpec(k=k, mode="exact")
 
     out = []
+    bf_ids = None
     for family, K, L, W in (("theta", 10, 16, 4.0), ("theta", 12, 32, 4.0),
                             ("l2", 8, 32, 24.0)):
         cfg = IndexConfig(d=d, M=M, K=K, L=L, family=family, W=W,
                           max_candidates=256, space=space)
-        idx = build_index(jax.random.fold_in(key, 3), data, cfg)
-        res = query_index(idx, q, w, cfg, k=k)
-        recall = np.mean([
-            len(set(np.asarray(res.ids[i])) & set(np.asarray(bf_ids[i]))) / k
-            for i in range(b)
-        ])
-        us = time_fn(lambda: query_index(idx, q, w, cfg, k=k), iters=3) / b
+        index = Index.build(jax.random.fold_in(key, 3), data, cfg)
+        if bf_ids is None:
+            bf_ids = index.query(q, w, exact).ids
+        res = index.query(q, w, spec)
+        recall = recall_at_k(res.ids, bf_ids, k)
+        us = time_fn(lambda: index.query(q, w, spec), iters=3) / b
         frac = float(jnp.mean(res.n_candidates)) / n
         out.append(row(f"recall_{family}_K{K}_L{L}", us,
                        f"recall@{k}={recall:.2f},cand_frac={frac:.3f}"))
+        last_index = index
     # exact-scan reference line
-    us_bf = time_fn(lambda: brute_force_nn(data, q, w, k=k), iters=3) / b
+    us_bf = time_fn(lambda: last_index.query(q, w, exact), iters=3) / b
     out.append(row("recall_exact_scan", us_bf, "recall@10=1.00,cand_frac=1.0"))
     return out

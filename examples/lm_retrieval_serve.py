@@ -33,6 +33,10 @@ def main():
     params = models.init_params(key, mcfg)
     retr = rt.build_datastore(jax.random.fold_in(key, 1), mcfg.d_model,
                               mcfg.vocab_size, rcfg)
+    # the datastore is a repro.api Index — config rides with it as one bundle
+    icfg = retr.index.config
+    print(f"[serve] datastore index: n={retr.index.n} d={icfg.d} "
+          f"family={icfg.family!r} K={icfg.K} L={icfg.L}")
     B, S, G = args.batch, args.prompt_len, args.gen_len
 
     prefill = jax.jit(make_prefill_step(mcfg, cache_len=S + G))

@@ -1,41 +1,35 @@
-"""Quickstart: sublinear NNS over generalized weighted Manhattan distance.
+"""Quickstart: sublinear NNS over generalized weighted Manhattan distance,
+through the ``repro.api`` facade.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--n 50000]
 
-Builds a (d_w^l1, theta)-ALSH index over 50k points, runs weighted queries
-(weights arrive WITH the query — the paper's setting), compares against the
-exact linear scan, and prints the theory numbers (rho < 1 ⇒ sublinear).
+Builds a (d_w^l1, theta)-ALSH index over n points, runs weighted queries
+(weights arrive WITH the query — the paper's setting) under three QuerySpec
+policies (exact | single-probe | multiprobe), round-trips the index through
+self-describing save/load, and prints the theory numbers (rho < 1 ⇒
+sublinear).
 """
 
+import argparse
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    BoundedSpace,
-    IndexConfig,
-    build_index,
-    plan_index,
-    query_index,
-    rho,
-)
-from repro.distance import brute_force_nn
-
-
-def _clustered(key, n, d, n_clusters=64):
-    """Clustered data (realistic embedding-like geometry)."""
-    kc, ka, kn = jax.random.split(key, 3)
-    centers = jax.random.uniform(kc, (n_clusters, d), minval=0.15, maxval=0.85)
-    assign = jax.random.randint(ka, (n,), 0, n_clusters)
-    return jnp.clip(centers[assign] + 0.06 * jax.random.normal(kn, (n, d)), 0.0, 1.0)
+from repro.api import BoundedSpace, Index, IndexConfig, QuerySpec
+from repro.core import plan_index
+from repro.distance import recall_at_k
 
 
 def main():
-    n, d, M, k = 50_000, 16, 32, 10
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000)
+    args = ap.parse_args()
+
+    n, d, M, k = args.n, 16, 32, 10
     key = jax.random.PRNGKey(0)
-    space = BoundedSpace(0.0, 1.0, float(M))
 
     print(f"== dataset: n={n} d={d}, lattice M={M}")
     data = jax.random.uniform(jax.random.fold_in(key, 0), (n, d))
@@ -45,46 +39,56 @@ def main():
     print(f"== theory: P1={plan.P1:.3f} P2={plan.P2:.3f} rho={plan.rho:.3f} "
           f"(query time O(n^{plan.rho:.2f}) < O(n)) -> K={plan.K} L={plan.L}")
 
+    # --- one Index, owning its config ---------------------------------------
     cfg = IndexConfig(d=d, M=M, K=10, L=32, family="theta",
-                      max_candidates=512, space=space)
+                      max_candidates=512, space=BoundedSpace(0.0, 1.0, float(M)))
     t0 = time.time()
-    idx = build_index(jax.random.fold_in(key, 1), data, cfg)
-    jax.block_until_ready(idx.sorted_keys)
+    index = Index.build(jax.random.fold_in(key, 1), data, cfg)
+    jax.block_until_ready(index.state.sorted_keys)
     print(f"== built {cfg.L} tables x {cfg.K} hashes in {time.time()-t0:.2f}s "
           f"(O(d) per hash via the paper's §4.2.3 prefix trick)")
 
-    # --- weighted queries ----------------------------------------------------
+    # --- weighted queries: policy = QuerySpec value, not a code path --------
     b = 64
     q = jax.random.uniform(jax.random.fold_in(key, 2), (b, d))
     w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (b, d))) + 0.2
 
     t0 = time.time()
-    res = query_index(idx, q, w, cfg, k=k)
+    res = index.query(q, w, QuerySpec(k=k))
     jax.block_until_ready(res.dists)
     t_alsh = time.time() - t0
 
     t0 = time.time()
-    bf_d, bf_i = brute_force_nn(data, q, w, k=k)
-    jax.block_until_ready(bf_d)
+    ref = index.query(q, w, QuerySpec(k=k, mode="exact"))
+    jax.block_until_ready(ref.dists)
     t_bf = time.time() - t0
 
-    recall = np.mean([
-        len(set(np.asarray(res.ids[i])) & set(np.asarray(bf_i[i]))) / k for i in range(b)
-    ])
     cand = float(jnp.mean(res.n_candidates))
     print(f"== ALSH:  {t_alsh*1e3:7.1f} ms for {b} queries  "
           f"(examined {cand:.0f}/{n} = {cand/n:.1%} candidates/query)")
     print(f"== exact: {t_bf*1e3:7.1f} ms for {b} queries  (100% scanned)")
-    print(f"== recall@{k} = {recall:.2f}")
-    print(f"== negative weights are supported (each w_i may be <0, paper §1):")
+    print(f"== recall@{k} = {recall_at_k(res.ids, ref.ids, k):.2f}")
+
+    res_mp = index.query(q, w, QuerySpec(k=k, mode="multiprobe", n_probes=8))
+    print(f"== multiprobe (8 probes/table): recall@{k} = "
+          f"{recall_at_k(res_mp.ids, ref.ids, k):.2f} — same policy surface, "
+          f"fewer tables needed")
+
+    # --- self-describing persistence ----------------------------------------
+    with tempfile.TemporaryDirectory() as ckdir:
+        index.save(ckdir)
+        restored = Index.load(ckdir)  # directory alone — config travels along
+        r2 = restored.query(q, w, QuerySpec(k=k))
+        assert np.array_equal(np.asarray(r2.ids), np.asarray(res.ids))
+        print(f"== save/load round-trip: restored index (n={restored.n}, "
+              f"family={restored.config.family!r}) answers bit-identically")
+
+    # --- negative weights (paper abstract: each w_i may be < 0) -------------
     w_neg = jax.random.normal(jax.random.fold_in(key, 4), (b, d))
-    res_neg = query_index(idx, q, w_neg, cfg, k=k)
-    bfn_d, bfn_i = brute_force_nn(data, q, w_neg, k=k)
-    rec_neg = np.mean([
-        len(set(np.asarray(res_neg.ids[i])) & set(np.asarray(bfn_i[i]))) / k
-        for i in range(b)
-    ])
-    print(f"   recall@{k} with mixed-sign weights: {rec_neg:.2f} "
+    res_neg = index.query(q, w_neg, QuerySpec(k=k))
+    ref_neg = index.query(q, w_neg, QuerySpec(k=k, mode="exact"))
+    print(f"== mixed-sign weights: recall@{k} = "
+          f"{recall_at_k(res_neg.ids, ref_neg.ids, k):.2f} "
           f"(harder geometry: near = most-negative distance)")
 
 

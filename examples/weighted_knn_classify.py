@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BoundedSpace, IndexConfig, build_index, query_index
+from repro.api import BoundedSpace, Index, IndexConfig, QuerySpec
 from repro.distance import brute_force_nn
 
 
@@ -60,9 +60,9 @@ def main():
 
     cfg = IndexConfig(d=d, M=M, K=12, L=32, family="theta",
                       max_candidates=256, space=BoundedSpace(0.0, 1.0, float(M)))
-    idx = build_index(jax.random.fold_in(key, 2), X, cfg)
+    index = Index.build(jax.random.fold_in(key, 2), X, cfg)
     t0 = time.time()
-    res = query_index(idx, Q, W, cfg, k=k)
+    res = index.query(Q, W, QuerySpec(k=k))
     jax.block_until_ready(res.dists)
     acc_alsh = knn_accuracy(res.ids, y, yq, k)
     cand = float(jnp.mean(res.n_candidates))

@@ -6,7 +6,10 @@ A production-grade JAX framework reproducing and extending:
     Weighted Manhattan Distance", 2021.
 
 Public API surface (stable):
-    repro.core        — ALSH transforms, hash families, theory, index
+    repro.api         — THE facade: config-carrying Index, QuerySpec policies,
+                        self-describing save/load, mesh sharding
+    repro.core        — engine: ALSH transforms, hash family strategies,
+                        theory, Theorem-1 index (legacy shims live here)
     repro.distance    — d_w^l1 / d_w^l2 reference distances + brute force NN
     repro.kernels     — Pallas TPU kernels (ops wrappers fall back to jnp on CPU)
     repro.models      — assigned LM architectures

@@ -1,0 +1,42 @@
+"""repro.api — the unified Index facade over the paper's ALSH schemes.
+
+Stable public surface for building, querying, persisting, and sharding
+(d_w^l1)-ALSH indexes. One config-carrying :class:`Index`, one policy-driven
+:meth:`Index.query`, self-describing :meth:`Index.save` / :meth:`Index.load`:
+
+    from repro.api import Index, IndexConfig, QuerySpec
+
+    index = Index.build(key, data, IndexConfig(d=16, M=32, K=10, L=16))
+    res = index.query(q, w, QuerySpec(k=10))
+
+Hash families are pluggable strategy objects (``ThetaFamily``, ``L2Family``)
+registered in :mod:`repro.core.families`. The legacy free functions
+(``repro.core.build_index`` / ``query_index`` / ``query_multiprobe``) remain
+as thin shims over the same engine.
+"""
+
+from repro.api.index import Index, ShardedIndex
+from repro.api.spec import QuerySpec
+from repro.core.families import (
+    FAMILIES,
+    HashFamily,
+    L2Family,
+    ThetaFamily,
+    get_family,
+)
+from repro.core.index import IndexConfig, QueryResult
+from repro.core.transforms import BoundedSpace
+
+__all__ = [
+    "Index",
+    "ShardedIndex",
+    "QuerySpec",
+    "IndexConfig",
+    "QueryResult",
+    "BoundedSpace",
+    "HashFamily",
+    "ThetaFamily",
+    "L2Family",
+    "FAMILIES",
+    "get_family",
+]

@@ -1,0 +1,202 @@
+"""The ``repro.api`` Index facade — one object, four behaviors.
+
+The engine underneath (``repro.core``) is a pair: an ``ALSHIndex`` pytree of
+arrays and an ``IndexConfig`` of static geometry, threaded separately
+through every call. This module fuses them into a single config-carrying
+:class:`Index` so consumers (serving, retrieval, examples, benchmarks)
+never re-wire build/query/persist plumbing by hand:
+
+    index = Index.build(key, data, cfg)
+    res   = index.query(q, w, QuerySpec(k=10))                  # single-probe
+    res   = index.query(q, w, QuerySpec(k=10, mode="multiprobe"))
+    res   = index.query(q, w, QuerySpec(k=10, mode="exact"))    # oracle scan
+    index.save(dir);  index = Index.load(dir)                   # dir alone
+    sharded = index.shard(mesh); sharded.query(q, w, spec)      # cluster
+
+``Index`` is a registered pytree whose *config rides in the static treedef*:
+it crosses jit/vmap/shard_map boundaries like any array bundle, and two
+indexes with different geometry can never be confused for one compiled
+program. Query execution dispatches on :class:`~repro.api.spec.QuerySpec`
+fields to the same jit'd engine entry points the legacy shims call, so
+facade results are bit-identical to ``query_index``/``query_multiprobe``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.spec import QuerySpec
+from repro.core.index import (
+    ALSHIndex,
+    IndexConfig,
+    QueryResult,
+    build_index,
+    query_index,
+)
+
+
+def _as_key_data(key: jax.Array) -> jax.Array:
+    """Normalize typed PRNG keys to raw uint32 key data (persistable)."""
+    if jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(key)
+    return key
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Index:
+    """A built ALSH index that owns its static configuration.
+
+    Attributes:
+      state: the array bundle (tables, sorted keys, permutations, data).
+      build_key: the PRNG key the tables were drawn from — persisted so a
+        restored index can be re-sharded (shard-local rebuilds re-derive
+        identical tables from it).
+      config: static geometry; lives in the pytree treedef, not the leaves.
+    """
+
+    state: ALSHIndex
+    build_key: jax.Array
+    config: IndexConfig
+
+    # -- pytree protocol (config is static aux data) ------------------------
+    def tree_flatten(self):
+        return (self.state, self.build_key), self.config
+
+    @classmethod
+    def tree_unflatten(cls, config, children):
+        state, build_key = children
+        return cls(state=state, build_key=build_key, config=config)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def build(
+        cls, key: jax.Array, data: jax.Array, config: IndexConfig, impl: str = "auto"
+    ) -> "Index":
+        """Hash every point and sort each table — Theorem 1 preprocessing."""
+        key = _as_key_data(key)
+        return cls(
+            state=build_index(key, data, config, impl=impl),
+            build_key=key,
+            config=config,
+        )
+
+    @property
+    def n(self) -> int:
+        """Indexed database rows."""
+        return self.state.n
+
+    @property
+    def d(self) -> int:
+        return self.config.d
+
+    # -- querying -----------------------------------------------------------
+    def query(
+        self, queries: jax.Array, weights: jax.Array, spec: QuerySpec = QuerySpec()
+    ) -> QueryResult:
+        """Batched k-NN under d_w^l1; ``spec`` picks the execution strategy.
+
+        Args:
+          queries: (b, d) float query points.
+          weights: (b, d) per-query weight vectors (the paper's w — may be
+            negative).
+          spec: policy — exact | probe | multiprobe; see
+            :class:`~repro.api.spec.QuerySpec`.
+        """
+        if spec.mode == "exact":
+            from repro.kernels import ops
+
+            dists, ids = ops.wl1_scan_topk(self.state.data, queries, weights, spec.k)
+            n_candidates = jnp.full(queries.shape[0], self.n, jnp.int32)
+            return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
+        if spec.mode == "multiprobe":
+            from repro.core.multiprobe import query_multiprobe
+
+            return query_multiprobe(
+                self.state,
+                queries,
+                weights,
+                self.config,
+                k=spec.k,
+                n_probes=spec.n_probes,
+                max_flips=spec.max_flips,
+            )
+        return query_index(
+            self.state, queries, weights, self.config, k=spec.k, impl=spec.impl
+        )
+
+    # -- persistence (self-describing) --------------------------------------
+    def save(self, directory: str) -> str:
+        """Write a directory restorable by ``Index.load(directory)`` alone."""
+        from repro.api import persist
+
+        return persist.save_index(directory, self.state, self.build_key, self.config)
+
+    @classmethod
+    def load(cls, directory: str) -> "Index":
+        """Restore an index from a directory — config travels with the data."""
+        from repro.api import persist
+
+        state, build_key, cfg = persist.load_index(directory)
+        return cls(state=state, build_key=build_key, config=cfg)
+
+    # -- distribution -------------------------------------------------------
+    def shard(self, mesh, merge_hierarchical: bool = True) -> "ShardedIndex":
+        """Partition the database rows over ``mesh`` for cluster serving.
+
+        Builds each shard's local index ONCE (tables re-derived from the
+        persisted ``build_key``, so they match across shards and across
+        save/load). Returns a :class:`ShardedIndex` whose ``query()`` runs
+        shard-local probes, then a hierarchical top-k merge along the mesh
+        axes (innermost first) — no per-query rebuild.
+        """
+        from repro.core.distributed import build_local_indexes
+
+        index_sharded = build_local_indexes(
+            self.build_key, self.state.data, self.config, mesh
+        )
+        return ShardedIndex(
+            index_sharded=index_sharded,
+            config=self.config,
+            mesh=mesh,
+            merge_hierarchical=merge_hierarchical,
+        )
+
+
+@dataclasses.dataclass
+class ShardedIndex:
+    """Row-sharded view of an :class:`Index` for the distributed service.
+
+    Each device owns a disjoint row range with a complete prebuilt local
+    index over it; hash tables are identical across shards, so query
+    hashing is computed once and is valid everywhere. ``query()`` returns
+    globally-merged results with global row ids.
+    """
+
+    index_sharded: ALSHIndex  # leaf layout per core.distributed.local_index_specs
+    config: IndexConfig
+    mesh: object
+    merge_hierarchical: bool = True
+
+    @property
+    def n(self) -> int:
+        return self.index_sharded.data.shape[0]
+
+    def query(
+        self, queries: jax.Array, weights: jax.Array, spec: QuerySpec = QuerySpec()
+    ):
+        """Same facade contract as ``Index.query`` — hierarchical-merge path."""
+        from repro.core.distributed import sharded_index_query
+
+        return sharded_index_query(
+            self.index_sharded,
+            queries,
+            weights,
+            self.config,
+            self.mesh,
+            spec=spec,
+            merge_hierarchical=self.merge_hierarchical,
+        )

@@ -1,0 +1,148 @@
+"""Self-describing index persistence for the ``repro.api`` facade.
+
+Layout (one directory per index):
+
+    <dir>/index.json               — format tag + the full IndexConfig
+    <dir>/step_000000000/…         — array leaves via the production ckpt
+                                     machinery (msgpack + zstd/zlib, atomic
+                                     COMMIT protocol; see repro/ckpt)
+
+``index.json`` makes checkpoints restorable from the directory *alone*:
+``Index.load(dir)`` rebuilds the config from JSON and the pytree structure
+from the config — no template tree, no separately-threaded ``IndexConfig``.
+The array payload reuses ``repro.ckpt``'s committed-step protocol, so a
+crash mid-save can never be loaded from.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+
+from repro import ckpt
+from repro.core.hash_families import PrefixTables
+from repro.core.index import ALSHIndex, IndexConfig
+from repro.core.transforms import BoundedSpace
+
+FORMAT = "repro.api.index"
+VERSION = 1
+_META = "index.json"
+
+
+def config_to_dict(cfg: IndexConfig) -> dict:
+    return {
+        "d": cfg.d,
+        "M": cfg.M,
+        "K": cfg.K,
+        "L": cfg.L,
+        "family": cfg.family,
+        "W": cfg.W,
+        "max_candidates": cfg.max_candidates,
+        "space": {"lo": cfg.space.lo, "hi": cfg.space.hi, "t": cfg.space.t},
+    }
+
+
+def config_from_dict(d: dict) -> IndexConfig:
+    space = d["space"]
+    return IndexConfig(
+        d=d["d"],
+        M=d["M"],
+        K=d["K"],
+        L=d["L"],
+        family=d["family"],
+        W=d["W"],
+        max_candidates=d["max_candidates"],
+        space=BoundedSpace(space["lo"], space["hi"], space["t"]),
+    )
+
+
+def _state_template() -> ALSHIndex:
+    """Structure-only ALSHIndex (leaf values/shapes come from the payload)."""
+    z = jnp.zeros((), jnp.float32)
+    return ALSHIndex(
+        tables=PrefixTables(folded=z, offsets=z),
+        mixers=z,
+        sorted_keys=z,
+        perm=z,
+        data=z,
+        levels=z,
+    )
+
+
+def save_index(directory: str, state: ALSHIndex, build_key, cfg: IndexConfig) -> str:
+    """Write a self-describing index directory.
+
+    The array payload commits FIRST (ckpt COMMIT protocol), the meta file is
+    atomically replaced LAST: a fresh directory that crashed mid-save has no
+    ``index.json`` and is rejected by load. Overwriting an existing
+    directory with a different geometry can still tear (old meta + new
+    arrays, or vice versa through the ckpt step replacement) —
+    ``load_index`` cross-checks the restored array shapes against the config
+    to catch that."""
+    os.makedirs(directory, exist_ok=True)
+    ckpt.save_checkpoint(directory, 0, {"build_key": build_key, "state": state})
+    meta = {"format": FORMAT, "version": VERSION, "config": config_to_dict(cfg)}
+    tmp = os.path.join(directory, _META + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, os.path.join(directory, _META))
+    return directory
+
+
+def load_index(directory: str) -> tuple[ALSHIndex, "jnp.ndarray", IndexConfig]:
+    """Restore (state, build_key, config) from a directory alone."""
+    meta_path = os.path.join(directory, _META)
+    if not os.path.exists(meta_path):
+        raise FileNotFoundError(
+            f"{directory!r} is not a repro.api index directory (no {_META}); "
+            "was it written by Index.save()?"
+        )
+    with open(meta_path) as f:
+        meta = json.load(f)
+    if meta.get("format") != FORMAT:
+        raise ValueError(
+            f"{meta_path} has format {meta.get('format')!r}, expected {FORMAT!r}"
+        )
+    if meta.get("version") != VERSION:
+        raise ValueError(
+            f"{meta_path} is format version {meta.get('version')!r}; this build "
+            f"reads version {VERSION} — migrate the directory or upgrade"
+        )
+    cfg = config_from_dict(meta["config"])
+    step = ckpt.latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(
+            f"no committed checkpoint step under {directory!r} (aborted save?)"
+        )
+    # template leaves are placeholders — shapes/dtypes come from the payload
+    tree = ckpt.restore_checkpoint(
+        directory, step, {"build_key": jnp.zeros((), jnp.uint32), "state": _state_template()}
+    )
+    state = tree["state"]
+    _check_consistent(state, cfg, meta_path)
+    return state, tree["build_key"], cfg
+
+
+def _check_consistent(state: ALSHIndex, cfg: IndexConfig, meta_path: str) -> None:
+    """Reject directories whose meta and array payload disagree (e.g. a torn
+    overwrite of an existing directory with a different geometry)."""
+    n = state.data.shape[0]
+    want = {
+        "tables.folded": ((cfg.n_hashes, cfg.d, cfg.M + 1), state.tables.folded.shape),
+        "tables.offsets": ((cfg.n_hashes,), state.tables.offsets.shape),
+        "mixers": ((cfg.L, cfg.K), state.mixers.shape),
+        "sorted_keys": ((cfg.L, n), state.sorted_keys.shape),
+        "perm": ((cfg.L, n + cfg.max_candidates), state.perm.shape),
+        "data": ((n, cfg.d), state.data.shape),
+        "levels": ((n, cfg.d), state.levels.shape),
+    }
+    bad = {k: v for k, v in want.items() if tuple(v[1]) != v[0]}
+    if bad:
+        detail = "; ".join(f"{k}: stored {v[1]}, config implies {v[0]}" for k, v in bad.items())
+        raise ValueError(
+            f"{meta_path} does not describe the stored arrays ({detail}) — "
+            "the directory was probably partially overwritten; re-save the index"
+        )

@@ -1,0 +1,76 @@
+"""QuerySpec — the query-time policy object of the ``repro.api`` facade.
+
+One ``Index.query(q, w, spec)`` call reaches every execution strategy; the
+spec's *fields* select the behavior, so callers never pick a code path by
+import:
+
+  QuerySpec(k=10)                                   # single-probe ALSH (paper)
+  QuerySpec(k=10, mode="multiprobe", n_probes=8)    # Lv et al. probing sequence
+  QuerySpec(k=10, mode="exact")                     # streaming exact scan
+  sharded.query(q, w, QuerySpec(k=10))              # hierarchical-merge service
+
+The spec is a frozen (hashable) dataclass: it is a static argument to the
+jit'd query dispatch, so two calls with equal specs share one compiled
+program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+MODES = ("exact", "probe", "multiprobe")
+IMPLS = ("auto", "gather", "onehot")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """How to execute a query — policy, not mechanism.
+
+    Attributes:
+      k: neighbours to return.
+      mode: "probe" (the paper's single-probe ALSH), "multiprobe"
+        (query-directed bucket perturbation — same recall from fewer
+        tables), or "exact" (streaming brute-force scan; the oracle the
+        approximate modes are measured against).
+      n_probes: multiprobe only — buckets probed per table (incl. the
+        query's own bucket).
+      max_flips: multiprobe only — max hash bits perturbed per probe key.
+      impl: probe mode only — kernel dispatch override for the hash
+        projections ("auto" | "gather" | "onehot"); leave "auto" outside
+        benchmarks. Exact mode never hashes and multiprobe always uses the
+        production dispatch, so a non-"auto" impl is rejected there rather
+        than silently ignored.
+    """
+
+    k: int = 1
+    mode: str = "probe"
+    n_probes: int = 8
+    max_flips: int = 3
+    impl: str = "auto"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                f"QuerySpec.mode must be one of {MODES}, got {self.mode!r}"
+            )
+        if not isinstance(self.k, int) or self.k <= 0:
+            raise ValueError(f"QuerySpec.k must be a positive int, got {self.k!r}")
+        if self.impl not in IMPLS:
+            raise ValueError(
+                f"QuerySpec.impl must be one of {IMPLS}, got {self.impl!r}"
+            )
+        if self.impl != "auto" and self.mode != "probe":
+            raise ValueError(
+                f"QuerySpec.impl={self.impl!r} only applies to mode='probe' "
+                f"(got mode={self.mode!r}, which would silently ignore it)"
+            )
+        if self.mode == "multiprobe":
+            if not isinstance(self.n_probes, int) or self.n_probes <= 0:
+                raise ValueError(
+                    f"QuerySpec.n_probes must be a positive int, got {self.n_probes!r}"
+                )
+            if not isinstance(self.max_flips, int) or self.max_flips < 0:
+                raise ValueError(
+                    f"QuerySpec.max_flips must be a non-negative int, "
+                    f"got {self.max_flips!r}"
+                )

@@ -1,12 +1,24 @@
 """The paper's primary contribution: ALSH for NNS over d_w^l1.
 
   transforms     — Obs 1 discretization, unary coding, P / Q_w maps (Eq 19-21)
+  families       — hash families as pluggable strategy objects (theta, l2)
   hash_families  — L2-LSH + SimHash with the §4.2.3 O(d) projection trick
   theory         — Eq 4/6/25/27 collision probabilities, rho, (K, L) planning
   index          — Theorem-1 multi-table index (sorted-key CSR, static probes)
   multiprobe     — beyond-paper: probe perturbation sequences (fewer tables)
+
+This package is the ENGINE; ``repro.api`` is the facade consumers should
+use. ``build_index`` / ``query_index`` / ``query_multiprobe`` remain as
+thin shims over the same code paths the facade calls.
 """
 
+from repro.core.families import (
+    FAMILIES,
+    HashFamily,
+    L2Family,
+    ThetaFamily,
+    get_family,
+)
 from repro.core.transforms import (
     BoundedSpace,
     discretize,
@@ -36,6 +48,11 @@ from repro.core.theory import (
 from repro.core.index import ALSHIndex, IndexConfig, QueryResult, build_index, query_index
 
 __all__ = [
+    "FAMILIES",
+    "HashFamily",
+    "L2Family",
+    "ThetaFamily",
+    "get_family",
     "BoundedSpace",
     "discretize",
     "discretization_slack",

@@ -7,19 +7,25 @@ Sharding contract (mesh axes ("pod","data","model")):
     builds a complete local index over its n_local rows (hash tables are
     valid per-shard because the (R1,R2)-NNS guarantee is closed under
     disjoint union: the global NN lives in exactly one shard).
+  * hash tables/mixers: REPLICATED — every shard derives them from the same
+    broadcast build key, so query hashing is computed once and is valid
+    against every shard.
   * queries: replicated (or batch-sharded for throughput serving).
   * merge: local exact top-k per shard, then a hierarchical merge — sorted
     concat + re-top-k along "model", then "data", then "pod". Two-hop
     merging moves k·devices_per_hop entries per link instead of k·devices,
     cutting cross-pod DCN bytes by the pod fan-in (see EXPERIMENTS §Perf).
 
-Implemented with shard_map over the mesh; every collective is explicit
-(jax.lax.all_gather over one named axis at a time).
+Two entry points, both under shard_map with explicit collectives:
+
+  * ``build_local_indexes`` + ``sharded_index_query`` — build the per-shard
+    indexes ONCE, query many times (what ``repro.api.Index.shard`` uses).
+  * ``sharded_query`` — one-shot build+query (tests/benchmarks on small CPU
+    meshes, where rebuild cost is irrelevant).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -27,9 +33,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import hash_families as hf
-from repro.core import transforms
-from repro.core.index import ALSHIndex, IndexConfig, build_index, query_index
+from repro.core.hash_families import PrefixTables
+from repro.core.index import ALSHIndex, IndexConfig, build_index
 
 
 class ShardedQueryResult(NamedTuple):
@@ -38,31 +43,113 @@ class ShardedQueryResult(NamedTuple):
     n_candidates: jax.Array  # (b,) summed over shards
 
 
-def build_local_indexes(key, data_global: jax.Array, cfg: IndexConfig, mesh: Mesh):
-    """data_global (n, d) row-sharded over all mesh axes -> per-shard ALSHIndex.
+def local_index_specs(mesh: Mesh) -> ALSHIndex:
+    """Per-leaf PartitionSpecs of a row-sharded ALSHIndex pytree.
 
-    All shards share the SAME hash tables (key is broadcast) so query hashing
-    is computed once and is valid against every shard's tables.
+    Tables/mixers are replicated (derived from the broadcast key); the
+    point-indexed leaves shard their n-sized axis over all mesh axes.
     """
-    n = data_global.shape[0]
+    axes = tuple(mesh.axis_names)
+    return ALSHIndex(
+        tables=PrefixTables(folded=P(), offsets=P()),
+        mixers=P(),
+        sorted_keys=P(None, axes),  # (L, n_local)
+        perm=P(None, axes),  # (L, n_local + C)
+        data=P(axes, None),  # (n_local, d)
+        levels=P(axes, None),  # (n_local, d)
+    )
+
+
+def build_local_indexes(
+    key, data_global: jax.Array, cfg: IndexConfig, mesh: Mesh
+) -> ALSHIndex:
+    """Build one complete local index per shard, ONCE: (n, d) row-sharded
+    data -> a sharded ALSHIndex pytree (leaf layout per ``local_index_specs``).
+
+    All shards share the SAME hash tables (key is broadcast), so a query's
+    hash keys are valid against every shard's sorted tables.
+    """
     axes = tuple(mesh.axis_names)
     data_sharded = jax.device_put(data_global, NamedSharding(mesh, P(axes, None)))
-
-    def local_build(data_local):
-        return build_index(key, data_local, cfg)
-
     fn = shard_map(
-        local_build,
+        lambda data_local: build_index(key, data_local, cfg),
         mesh=mesh,
         in_specs=P(axes, None),
-        out_specs=P(axes, None),  # leading axis of every index leaf is stacked per shard
+        out_specs=local_index_specs(mesh),
         check_rep=False,
     )
-    # NOTE: build_index's leaves have mixed leading dims; to keep specs simple
-    # the sharded service stores the index leaves with a per-shard leading
-    # batch dim via vmap-style stacking. We instead build one index per shard
-    # lazily inside the query shard_map (tables are deterministic given key).
-    return data_sharded
+    return fn(data_sharded)
+
+
+def _globalize_and_merge(res, axes, mesh, k, n_local, merge_hierarchical):
+    """Inside a query shard_map body: local QueryResult -> merged globals.
+
+    Offsets local ids by the shard's rank, then top-k-merges along each mesh
+    axis innermost-first (hierarchical) or across the whole mesh at once.
+    """
+    rank = jnp.zeros((), jnp.int32)
+    mul = 1
+    for ax in reversed(axes):
+        rank = rank + jax.lax.axis_index(ax) * mul
+        mul *= mesh.shape[ax]  # static size (lax.axis_size needs jax>=0.4.38)
+    gids = jnp.where(res.ids >= 0, res.ids + rank * n_local, -1)
+    d, i, nc = res.dists, gids, res.n_candidates
+
+    def merge_axis(d, i, nc, ax):
+        dg = jax.lax.all_gather(d, ax, axis=0)  # (g, b, k)
+        ig = jax.lax.all_gather(i, ax, axis=0)
+        g, b, kk = dg.shape
+        dg = jnp.moveaxis(dg, 0, 1).reshape(b, g * kk)
+        ig = jnp.moveaxis(ig, 0, 1).reshape(b, g * kk)
+        neg, sel = jax.lax.top_k(-dg, k)
+        return -neg, jnp.take_along_axis(ig, sel, axis=1), jax.lax.psum(nc, ax)
+
+    if merge_hierarchical:
+        for ax in reversed(axes):  # model -> data -> pod
+            d, i, nc = merge_axis(d, i, nc, ax)
+    else:  # flat merge across the whole mesh at once (baseline)
+        d, i, nc = merge_axis(d, i, nc, axes)
+    return d, i, nc
+
+
+def sharded_index_query(
+    index_sharded: ALSHIndex,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig,
+    mesh: Mesh,
+    spec=None,
+    k: int = 10,
+    merge_hierarchical: bool = True,
+):
+    """Query prebuilt shard-local indexes (from ``build_local_indexes``).
+
+    ``spec`` (a :class:`repro.api.QuerySpec`) selects the shard-local
+    execution strategy — probe, multiprobe, or exact — so the sharded
+    service exposes the same policy surface as a single-host ``Index``.
+    """
+    from repro.api import Index, QuerySpec  # facade (lazy: api builds on core)
+
+    if spec is None:
+        spec = QuerySpec(k=k)
+    axes = tuple(mesh.axis_names)
+    n_local = index_sharded.data.shape[0] // mesh.devices.size
+
+    def local(idx_local, q, w):
+        # build_key is irrelevant for querying — any placeholder works
+        facade = Index(state=idx_local, build_key=jnp.zeros((2,), jnp.uint32), config=cfg)
+        res = facade.query(q, w, spec)
+        return _globalize_and_merge(res, axes, mesh, spec.k, n_local, merge_hierarchical)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(local_index_specs(mesh), P(), P()),
+        out_specs=(P(), P(), P()),
+        check_rep=False,
+    )
+    d, i, nc = fn(index_sharded, queries, weights)
+    return ShardedQueryResult(dists=d, ids=i, n_candidates=nc)
 
 
 def sharded_query(
@@ -74,39 +161,25 @@ def sharded_query(
     mesh: Mesh,
     k: int = 10,
     merge_hierarchical: bool = True,
+    spec=None,
 ):
-    """One-shot build+query under shard_map (used by tests/benchmarks on small
-    CPU meshes; the serve launcher caches the built index between calls)."""
+    """One-shot build+query under shard_map (tests/benchmarks on small CPU
+    meshes; serving paths prebuild via ``build_local_indexes`` instead).
+
+    ``k`` is kept for backward compatibility and ignored when ``spec`` is
+    given.
+    """
+    from repro.api import Index, QuerySpec  # facade (lazy: api builds on core)
+
+    if spec is None:
+        spec = QuerySpec(k=k)
     axes = tuple(mesh.axis_names)
     n_local = data_sharded.shape[0] // mesh.devices.size
 
     def local(data_local, q, w):
-        idx = build_index(key, data_local, cfg)
-        res = query_index(idx, q, w, cfg, k=k)
-        # globalize ids: offset by shard rank
-        rank = jnp.zeros((), jnp.int32)
-        mul = 1
-        for ax in reversed(axes):
-            rank = rank + jax.lax.axis_index(ax) * mul
-            mul *= mesh.shape[ax]  # static size (lax.axis_size needs jax>=0.4.38)
-        gids = jnp.where(res.ids >= 0, res.ids + rank * n_local, -1)
-        d, i, nc = res.dists, gids, res.n_candidates
-
-        def merge_axis(d, i, nc, ax):
-            dg = jax.lax.all_gather(d, ax, axis=0)  # (g, b, k)
-            ig = jax.lax.all_gather(i, ax, axis=0)
-            g, b, kk = dg.shape
-            dg = jnp.moveaxis(dg, 0, 1).reshape(b, g * kk)
-            ig = jnp.moveaxis(ig, 0, 1).reshape(b, g * kk)
-            neg, sel = jax.lax.top_k(-dg, k)
-            return -neg, jnp.take_along_axis(ig, sel, axis=1), jax.lax.psum(nc, ax)
-
-        if merge_hierarchical:
-            for ax in reversed(axes):  # model -> data -> pod
-                d, i, nc = merge_axis(d, i, nc, ax)
-        else:  # flat merge across the whole mesh at once (baseline)
-            d, i, nc = merge_axis(d, i, nc, axes)
-        return d, i, nc
+        idx = Index.build(key, data_local, cfg)
+        res = idx.query(q, w, spec)
+        return _globalize_and_merge(res, axes, mesh, spec.k, n_local, merge_hierarchical)
 
     fn = shard_map(
         local,

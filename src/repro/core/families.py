@@ -1,0 +1,191 @@
+"""Hash families as strategy objects — one protocol, two paper schemes.
+
+The paper defines two ALSH families over the transformed MIPS instance:
+
+  * (d_w^l1, l2)-ALSH   — Eq 3, p-stable L2 hash, integer bucket codes
+  * (d_w^l1, theta)-ALSH — Eq 5, SimHash sign bits
+
+Every family-specific decision the engine has to make (how raw projections
+become codes, how K codes combine into one int32 table key, whether
+query-directed multiprobe applies, what is valid to configure) lives behind
+the :class:`HashFamily` protocol below. The rest of the codebase —
+``hash_families.py``, ``index.py``, ``multiprobe.py``, the ``repro.api``
+facade — dispatches through ``get_family(name)`` instead of matching on
+``"theta" | "l2"`` strings, so adding a third scheme (e.g. another weighted
+distance from Hu & Li's companion work, arXiv:2011.11907) means implementing
+one class, not editing four call paths.
+
+Instances are stateless frozen singletons: safe to hash, compare, and close
+over in jit'd code.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # import only for annotations — avoids a core.index cycle
+    from repro.core.index import IndexConfig
+
+__all__ = [
+    "HashFamily",
+    "ThetaFamily",
+    "L2Family",
+    "THETA",
+    "L2",
+    "FAMILIES",
+    "get_family",
+    "flip_subsets",
+]
+
+
+class HashFamily:
+    """Protocol (with shared behavior) for one ALSH hash family.
+
+    Subclasses override the class attributes and the four hooks:
+    ``validate``, ``make_offsets``, ``codes_from_projections``,
+    ``combine_codes`` — plus ``multiprobe_keys`` when
+    ``supports_multiprobe``. Instances carry no state (singletons below),
+    so identity hashing/equality is correct under jit.
+    """
+
+    name: str = "abstract"
+    supports_multiprobe: bool = False
+    max_K: int | None = None  # per-table hash cap (None = unbounded)
+
+    # -- configuration ------------------------------------------------------
+    def validate(self, cfg: "IndexConfig") -> None:
+        """Raise ValueError (naming the offending field) on bad geometry."""
+
+    def make_offsets(self, key: jax.Array, n_hashes: int, W: float, dtype) -> jax.Array:
+        """Per-hash offsets drawn at table-build time ((H,) array)."""
+        raise NotImplementedError
+
+    # -- hashing ------------------------------------------------------------
+    def codes_from_projections(
+        self, proj: jax.Array, offsets: jax.Array, W: float
+    ) -> jax.Array:
+        """(..., H) float projections -> (..., H) int32 hash codes."""
+        raise NotImplementedError
+
+    def combine_codes(self, codes_lk: jax.Array, mixers: jax.Array, K: int) -> jax.Array:
+        """(..., L, K) int codes -> (..., L) int32 table keys."""
+        raise NotImplementedError
+
+    # -- multiprobe ---------------------------------------------------------
+    def multiprobe_keys(
+        self,
+        proj_lk: jax.Array,
+        n_probes: int,
+        max_flips: int,
+    ) -> jax.Array:
+        """(b, L, K) raw projections -> (b, L, P) probe keys, most-likely first."""
+        raise NotImplementedError(
+            f"family {self.name!r} does not support multiprobe querying; "
+            "use the 'theta' family or QuerySpec(mode='probe')"
+        )
+
+
+class ThetaFamily(HashFamily):
+    """(d_w^l1, theta)-ALSH — Eq 5 SimHash sign bits, exact bit-packed keys."""
+
+    name = "theta"
+    supports_multiprobe = True
+    max_K = 31  # int32 bit-packing limit
+
+    def validate(self, cfg: "IndexConfig") -> None:
+        if cfg.K > 31:
+            raise ValueError(
+                "IndexConfig.K: the theta family packs K sign bits into one "
+                f"int32 table key, which requires K <= 31 (got K={cfg.K}); "
+                "use more tables (L) or the 'l2' family instead"
+            )
+
+    def make_offsets(self, key, n_hashes, W, dtype):
+        return jnp.zeros((n_hashes,), dtype)  # sign hash has no offset
+
+    def codes_from_projections(self, proj, offsets, W):
+        return (proj >= 0).astype(jnp.int32)  # Eq 5
+
+    def combine_codes(self, codes_lk, mixers, K):
+        # exact bit-packing — zero spurious collisions (K <= 31 by validate)
+        shifts = (1 << jnp.arange(K, dtype=jnp.int32))[None, :]
+        return jnp.sum(codes_lk.astype(jnp.int32) * shifts, axis=-1)
+
+    def multiprobe_keys(self, proj_lk, n_probes, max_flips):
+        """Query-directed probing (Lv et al., VLDB'07): probe the buckets
+        whose keys flip the lowest-|margin| bits of the query's code."""
+        b, L, K = proj_lk.shape
+        bits = (proj_lk >= 0).astype(jnp.int32)  # (b, L, K)
+        margins = jnp.abs(proj_lk)  # flip cost per bit
+
+        masks = flip_subsets(K, max_flips)  # (S, K)
+        # score of a subset = total margin flipped (lower = more likely)
+        scores = jnp.einsum("blk,sk->bls", margins, masks.astype(proj_lk.dtype))
+        n_probes = min(n_probes, masks.shape[0])
+        _, probe_idx = jax.lax.top_k(-scores, n_probes)  # (b, L, P) best subsets
+
+        shifts = (1 << jnp.arange(K, dtype=jnp.int32))[None, None, :]
+        base_key = jnp.sum(bits * shifts, axis=-1)  # (b, L)
+        flip_keys = jnp.sum(
+            masks[probe_idx].astype(jnp.int32) * shifts[:, :, None, :], axis=-1
+        )  # (b, L, P) xor masks as ints
+        return jnp.bitwise_xor(base_key[:, :, None], flip_keys)  # (b, L, P)
+
+
+class L2Family(HashFamily):
+    """(d_w^l1, l2)-ALSH — Eq 3 p-stable hash, mixed integer-code keys."""
+
+    name = "l2"
+    supports_multiprobe = False
+
+    def validate(self, cfg: "IndexConfig") -> None:
+        if cfg.W <= 0:
+            raise ValueError(
+                f"IndexConfig.W: the l2 family's bucket width must be > 0, got {cfg.W}"
+            )
+
+    def make_offsets(self, key, n_hashes, W, dtype):
+        return jax.random.uniform(key, (n_hashes,), dtype=dtype, minval=0.0, maxval=W)
+
+    def codes_from_projections(self, proj, offsets, W):
+        return jnp.floor((proj + offsets[None, :]) / W).astype(jnp.int32)  # Eq 3
+
+    def combine_codes(self, codes_lk, mixers, K):
+        # unbounded int codes: random odd-multiplier mixing (universal-style);
+        # spurious collisions only ADD candidates — the exact re-rank keeps
+        # correctness, the candidate budget keeps cost bounded.
+        mixed = codes_lk.astype(jnp.int32) * mixers  # wrapping int32 mul
+        return jnp.sum(mixed, axis=-1)
+
+
+def flip_subsets(K: int, max_flips: int) -> jax.Array:
+    """Static enumeration of bit-flip subsets (as masks), ordered by size."""
+    subsets = [()]
+    for r in range(1, max_flips + 1):
+        subsets.extend(itertools.combinations(range(K), r))
+    masks = jnp.zeros((len(subsets), K), jnp.bool_)
+    for i, s in enumerate(subsets):
+        for j in s:
+            masks = masks.at[i, j].set(True)
+    return masks  # (n_subsets, K)
+
+
+THETA = ThetaFamily()
+L2 = L2Family()
+FAMILIES: dict[str, HashFamily] = {f.name: f for f in (THETA, L2)}
+
+
+def get_family(name: str) -> HashFamily:
+    """Resolve a family by name (or pass a strategy object through)."""
+    if isinstance(name, HashFamily):
+        return name
+    fam = FAMILIES.get(name)
+    if fam is None:
+        raise ValueError(
+            f"unknown hash family {name!r}; known families: {sorted(FAMILIES)}"
+        )
+    return fam

@@ -35,6 +35,8 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core.families import get_family
+
 __all__ = [
     "LSHParams",
     "PrefixTables",
@@ -131,12 +133,9 @@ def make_prefix_tables(key: jax.Array, params: LSHParams, dtype=jnp.float32) -> 
     k_a, k_b = jax.random.split(key)
     a = jax.random.normal(k_a, (params.n_hashes, 2 * params.d, params.M), dtype=dtype)
     folded = jax.vmap(_prefix_tables_from_rows)(a)
-    if params.family == "l2":
-        offsets = jax.random.uniform(
-            k_b, (params.n_hashes,), dtype=dtype, minval=0.0, maxval=params.W
-        )
-    else:
-        offsets = jnp.zeros((params.n_hashes,), dtype)
+    offsets = get_family(params.family).make_offsets(
+        k_b, params.n_hashes, params.W, dtype
+    )
     return PrefixTables(folded=folded, offsets=offsets)
 
 
@@ -201,12 +200,12 @@ def _project_onehot(levels, folded, weights):
 
 def l2_hash(projections: jax.Array, tables: PrefixTables, W: float) -> jax.Array:
     """Eq 3: h(x) = floor((a^T x + b) / W) — integer bucket codes."""
-    return jnp.floor((projections + tables.offsets[None, :]) / W).astype(jnp.int32)
+    return get_family("l2").codes_from_projections(projections, tables.offsets, W)
 
 
 def sign_hash(projections: jax.Array) -> jax.Array:
     """Eq 5: h(x) = 1[a^T x >= 0] — SimHash bits."""
-    return (projections >= 0).astype(jnp.int32)
+    return get_family("theta").codes_from_projections(projections, None, 0.0)
 
 
 def hash_data(
@@ -214,9 +213,9 @@ def hash_data(
 ) -> jax.Array:
     """f(o) = h(P(o)) for a batch: (n, d) -> (n, H) int codes."""
     proj = project_data(levels, tables, impl=impl)
-    if params.family == "l2":
-        return l2_hash(proj, tables, params.W)
-    return sign_hash(proj)
+    return get_family(params.family).codes_from_projections(
+        proj, tables.offsets, params.W
+    )
 
 
 def hash_query(
@@ -228,6 +227,6 @@ def hash_query(
 ) -> jax.Array:
     """g(q) = h(Q_w(q)) for a batch: (b, d) + (b, d) weights -> (b, H) int codes."""
     proj = project_query(levels, w, tables, impl=impl)
-    if params.family == "l2":
-        return l2_hash(proj, tables, params.W)
-    return sign_hash(proj)
+    return get_family(params.family).codes_from_projections(
+        proj, tables.offsets, params.W
+    )

@@ -38,12 +38,20 @@ import jax.numpy as jnp
 
 from repro.core import hash_families as hf
 from repro.core import transforms
+from repro.core.families import HashFamily, get_family
 from repro.core.theory import IndexPlan
 
 
 @dataclasses.dataclass(frozen=True)
 class IndexConfig:
-    """Static geometry of an ALSH index."""
+    """Static geometry of an ALSH index.
+
+    ``family`` names a registered :mod:`repro.core.families` strategy (a
+    ``HashFamily`` instance is also accepted and normalized to its name, so
+    the config stays hashable/serializable). Construction validates the
+    geometry and raises ``ValueError`` naming the offending field — bad
+    configs never reach trace time.
+    """
 
     d: int
     M: int
@@ -53,6 +61,30 @@ class IndexConfig:
     W: float = 4.0
     max_candidates: int = 64  # per-table probe budget C
     space: transforms.BoundedSpace = transforms.BoundedSpace(0.0, 1.0, 32.0)
+
+    def __post_init__(self):
+        if isinstance(self.family, HashFamily):
+            object.__setattr__(self, "family", self.family.name)
+        for field in ("d", "M", "K", "L", "max_candidates"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v <= 0:
+                raise ValueError(
+                    f"IndexConfig.{field} must be a positive int, got {v!r}"
+                )
+        if self.space.M > self.M:
+            raise ValueError(
+                f"IndexConfig.space discretizes to {self.space.M} levels but "
+                f"IndexConfig.M={self.M} — lattice points would index past the "
+                f"hash tables; use space=BoundedSpace(lo, hi, t) with "
+                f"(hi-lo)*t <= M"
+            )
+        # family-specific constraints (raises on unknown family names too)
+        get_family(self.family).validate(self)
+
+    @property
+    def family_obj(self) -> HashFamily:
+        """The family strategy object this config names."""
+        return get_family(self.family)
 
     @property
     def n_hashes(self) -> int:
@@ -103,12 +135,8 @@ class QueryResult(NamedTuple):
 
 
 def _combine_codes(codes_lk: jax.Array, mixers: jax.Array, family: str, K: int) -> jax.Array:
-    """(..., L, K) int codes -> (..., L) int32 keys."""
-    if family == "theta" and K <= 31:
-        shifts = (1 << jnp.arange(K, dtype=jnp.int32))[None, :]
-        return jnp.sum(codes_lk.astype(jnp.int32) * shifts, axis=-1)
-    mixed = codes_lk.astype(jnp.int32) * mixers  # wrapping int32 mul
-    return jnp.sum(mixed, axis=-1)
+    """(..., L, K) int codes -> (..., L) int32 keys (family strategy dispatch)."""
+    return get_family(family).combine_codes(codes_lk, mixers, K)
 
 
 def _keys_for(

@@ -25,14 +25,12 @@ multiprobe's larger probe fan-out (P buckets per table) never materializes a
 
 from __future__ import annotations
 
-import itertools
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import hash_families as hf
 from repro.core import transforms
+from repro.core.families import flip_subsets, get_family
 from repro.core.index import (
     ALSHIndex,
     IndexConfig,
@@ -42,17 +40,9 @@ from repro.core.index import (
 )
 from repro.kernels import ops
 
-
-def _flip_subsets(K: int, max_flips: int):
-    """Static enumeration of bit-flip subsets (as masks), ordered by size."""
-    subsets = [()]
-    for r in range(1, max_flips + 1):
-        subsets.extend(itertools.combinations(range(K), r))
-    masks = jnp.zeros((len(subsets), K), jnp.bool_)
-    for i, s in enumerate(subsets):
-        for j in s:
-            masks = masks.at[i, j].set(True)
-    return masks  # (n_subsets, K)
+# re-exported for backward compatibility (the enumeration now lives with the
+# family strategies in core.families)
+_flip_subsets = flip_subsets
 
 
 @partial(jax.jit, static_argnames=("cfg", "k", "n_probes", "max_flips"))
@@ -65,31 +55,26 @@ def query_multiprobe(
     n_probes: int = 8,
     max_flips: int = 3,
 ) -> QueryResult:
-    """theta-family multiprobe query: per table, probe the n_probes most
-    likely buckets (query bucket + low-margin bit flips)."""
-    assert cfg.family == "theta" and cfg.K <= 31
+    """Multiprobe query: per table, probe the n_probes most likely buckets
+    (query bucket + low-margin perturbations, ordered by the family's
+    ``multiprobe_keys`` strategy)."""
+    family = get_family(cfg.family)
+    if not family.supports_multiprobe:
+        raise ValueError(
+            f"family {cfg.family!r} does not support multiprobe querying; "
+            "build the index with family='theta' or query with "
+            "QuerySpec(mode='probe')"
+        )
     b, d = queries.shape
     C = cfg.max_candidates
     K, L = cfg.K, cfg.L
 
     qlevels = transforms.discretize(queries, cfg.space)
     proj = ops.alsh_project(qlevels, index.tables.folded, weights)  # (b, H)
-    proj = proj.reshape(b, L, K)
-    bits = (proj >= 0).astype(jnp.int32)  # (b, L, K)
-    margins = jnp.abs(proj)  # flip cost per bit
-
-    masks = _flip_subsets(K, max_flips)  # (S, K)
-    # score of a subset = total margin flipped (lower = more likely)
-    scores = jnp.einsum("blk,sk->bls", margins, masks.astype(proj.dtype))
-    n_probes = min(n_probes, masks.shape[0])
-    _, probe_idx = jax.lax.top_k(-scores, n_probes)  # (b, L, P) best subsets
-
-    shifts = (1 << jnp.arange(K, dtype=jnp.int32))[None, None, :]
-    base_key = jnp.sum(bits * shifts, axis=-1)  # (b, L)
-    flip_keys = jnp.sum(
-        masks[probe_idx].astype(jnp.int32) * shifts[:, :, None, :], axis=-1
-    )  # (b, L, P) xor masks as ints
-    probe_keys = jnp.bitwise_xor(base_key[:, :, None], flip_keys)  # (b, L, P)
+    probe_keys = family.multiprobe_keys(
+        proj.reshape(b, L, K), n_probes, max_flips
+    )  # (b, L, P)
+    n_probes = probe_keys.shape[-1]  # family may clamp to the subset count
 
     # probe every (table, probe) pair
     probe = jax.vmap(  # over batch

@@ -105,7 +105,15 @@ def plan_index(
     weight profile (all-|w_scale| vector); theory.py exposes the exact rho for
     any concrete ``w`` so callers can re-plan per workload. Success probability
     per query is >= 1 - (1 - P1^K)^L (≈ 1 - 1/e at L = ceil(P1^-K)).
+    ``max_K`` is additionally clamped to the family's per-table cap (the
+    theta family bit-packs K codes into an int32 key, so K <= 31) — plans
+    always satisfy ``IndexConfig`` validation.
     """
+    from repro.core.families import get_family  # lazy: families ↛ theory
+
+    fam_cap = get_family(family).max_K
+    if fam_cap is not None:
+        max_K = min(max_K, fam_cap)
     w = jnp.full((d,), float(w_scale))
     if family == "l2":
         P1 = float(collision_prob_l2(jnp.asarray(R1), M, d, w, W))

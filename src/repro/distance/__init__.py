@@ -3,6 +3,13 @@ from repro.distance.wl1 import (
     wl2_distance,
     brute_force_nn,
     pairwise_wl1,
+    recall_at_k,
 )
 
-__all__ = ["wl1_distance", "wl2_distance", "brute_force_nn", "pairwise_wl1"]
+__all__ = [
+    "wl1_distance",
+    "wl2_distance",
+    "brute_force_nn",
+    "pairwise_wl1",
+    "recall_at_k",
+]

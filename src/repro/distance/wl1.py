@@ -39,6 +39,28 @@ def pairwise_wl1(O: jax.Array, Q: jax.Array, W: jax.Array) -> jax.Array:
     return jnp.sum(W[:, None, :] * jnp.abs(O[None, :, :] - Q[:, None, :]), axis=-1)
 
 
+def recall_at_k(ids, ref_ids, k: int | None = None) -> float:
+    """Mean recall@k of retrieved ``ids`` against reference ``ref_ids``.
+
+    Args:
+      ids: (b, k') retrieved ids; entries < 0 are padding and never count.
+      ref_ids: (b, k'') reference (exact) ids, same convention.
+      k: denominator; defaults to ``ref_ids.shape[1]``.
+    """
+    import numpy as np
+
+    ids = np.asarray(ids)
+    ref = np.asarray(ref_ids)
+    if k is None:
+        k = ref.shape[1]
+    hits = [
+        len({x for x in ids[i].tolist() if x >= 0}
+            & {x for x in ref[i].tolist() if x >= 0}) / k
+        for i in range(ids.shape[0])
+    ]
+    return float(np.mean(hits))
+
+
 def brute_force_nn(
     data: jax.Array,
     q: jax.Array,

@@ -1,9 +1,11 @@
 """Serving launcher — two modes:
 
-  ALSH vector-search service (the paper's workload), served end-to-end on
-  the fused probe pipeline (probe → dedupe → gather_rerank_topk kernels;
-  the exactness spot-check runs the streaming wl1_scan_topk baseline):
+  ALSH vector-search service (the paper's workload), served end-to-end
+  through the ``repro.api`` Index facade on the fused probe pipeline
+  (probe → dedupe → gather_rerank_topk kernels; the exactness spot-check
+  is the same facade with QuerySpec(mode="exact")):
     python -m repro.launch.serve --mode alsh [--n 100000 --d 64 --batches 4]
+    python -m repro.launch.serve --mode alsh --multiprobe --probes 8
 
   LM decode service with optional ALSH retrieval augmentation:
     python -m repro.launch.serve --mode lm --arch gemma3-1b --reduced --retrieval
@@ -15,46 +17,49 @@ exercised by the dry-run.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 
 def serve_alsh(args):
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
+    from repro.api import Index, QuerySpec
     from repro.configs.paper_alsh import ALSHServiceConfig
-    from repro.core import build_index, query_index
-    from repro.distance import brute_force_nn
+    from repro.distance import recall_at_k
 
     svc = ALSHServiceConfig(
         n_per_shard=args.n, d=args.d, K=args.K, L=args.L,
         query_batch=args.query_batch, topk=args.topk,
     )
-    cfg = svc.index_config
     key = jax.random.PRNGKey(0)
     data = jax.random.uniform(jax.random.fold_in(key, 1), (svc.n_per_shard, svc.d))
     t0 = time.time()
-    idx = build_index(jax.random.fold_in(key, 2), data, cfg)
-    jax.block_until_ready(idx.sorted_keys)
+    index = Index.build(jax.random.fold_in(key, 2), data, svc.index_config)
+    jax.block_until_ready(index.state.sorted_keys)
+    cfg = index.config
     print(f"[alsh] built index over n={svc.n_per_shard} d={svc.d} "
           f"K={cfg.K} L={cfg.L} in {time.time()-t0:.2f}s")
+
+    # serving policy is a QuerySpec value, not a code path
+    if args.multiprobe:
+        spec = QuerySpec(k=svc.topk, mode="multiprobe", n_probes=args.probes)
+    else:
+        spec = QuerySpec(k=svc.topk)
+    exact = QuerySpec(k=svc.topk, mode="exact")
+    print(f"[alsh] serving policy: {spec}")
 
     for b in range(args.batches):
         kq = jax.random.fold_in(key, 100 + b)
         q = jax.random.uniform(kq, (svc.query_batch, svc.d))
         w = jnp.abs(jax.random.normal(jax.random.fold_in(kq, 1), (svc.query_batch, svc.d))) + 0.1
         t0 = time.time()
-        res = query_index(idx, q, w, cfg, k=svc.topk)
+        res = index.query(q, w, spec)
         jax.block_until_ready(res.dists)
         dt = time.time() - t0
-        # spot-check recall on the first 16 queries
-        bf_d, bf_i = brute_force_nn(data, q[:16], w[:16], k=svc.topk)
-        rec = np.mean([
-            len(set(np.asarray(res.ids[i])) & set(np.asarray(bf_i[i]))) / svc.topk
-            for i in range(16)
-        ])
+        # spot-check recall on the first 16 queries (exact mode = the oracle)
+        ref = index.query(q[:16], w[:16], exact)
+        rec = recall_at_k(res.ids[:16], ref.ids, svc.topk)
         print(f"[alsh] batch {b}: {svc.query_batch} queries in {dt*1e3:.1f} ms "
               f"({dt/svc.query_batch*1e6:.1f} us/query) "
               f"cand_frac={float(jnp.mean(res.n_candidates))/svc.n_per_shard:.4f} "
@@ -126,6 +131,10 @@ def main():
     ap.add_argument("--query-batch", type=int, default=256)
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--batches", type=int, default=3)
+    ap.add_argument("--multiprobe", action="store_true",
+                    help="serve with QuerySpec(mode='multiprobe')")
+    ap.add_argument("--probes", type=int, default=8,
+                    help="multiprobe buckets per table")
     args = ap.parse_args()
     if args.mode == "alsh":
         serve_alsh(args)

@@ -11,10 +11,13 @@ logits:  log p = logaddexp(log((1-λ) p_LM), log(λ p_kNN)).
 
 All probe compute is jit-compatible and lives inside the same XLA program as
 the decode step; the index shards over the "data" axis in the distributed
-service (see core/distributed.py). Neighbour lookup goes through the fused
-``query_index`` pipeline (probe → dedupe → gather_rerank_topk), so a decode
-step's retrieval never materializes a (B, L·C, d_key) candidate tensor —
-the datastore rows stream through the kernel's on-chip top-k (DESIGN.md §3).
+service (see core/distributed.py). The datastore index is a ``repro.api``
+:class:`Index` — a config-carrying pytree, so the RetrievalState crosses the
+jit boundary as one bundle and neighbour lookup is a single policy-driven
+``index.query(q, w, QuerySpec(k=topk))`` through the fused probe pipeline
+(probe → dedupe → gather_rerank_topk): a decode step's retrieval never
+materializes a (B, L·C, d_key) candidate tensor — the datastore rows stream
+through the kernel's on-chip top-k (DESIGN.md §3).
 """
 
 from __future__ import annotations
@@ -24,13 +27,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.api import Index, QuerySpec
 from repro.configs.base import RetrievalConfig
-from repro.core import BoundedSpace, IndexConfig, build_index, query_index
-from repro.core.index import ALSHIndex
+from repro.core import BoundedSpace, IndexConfig
 
 
 class RetrievalState(NamedTuple):
-    index: ALSHIndex
+    index: Index  # config-carrying ALSH index over the datastore keys
     values: jax.Array  # (n,) int32 token ids of datastore records
     proj: jax.Array  # (d_model, d_key) random key-reduction projection
     default_w: jax.Array  # (d_key,) default per-dimension weights
@@ -60,7 +63,7 @@ def build_datastore(
     proj = jax.random.normal(k3, (d_model, rcfg.d_key)) / (d_model**0.5)
     # precision weights: inverse per-dim std of the datastore keys
     w = 1.0 / (jnp.std(keys, axis=0) + 1e-3)
-    index = build_index(k4, keys, index_config(rcfg))
+    index = Index.build(k4, keys, index_config(rcfg))
     return RetrievalState(index=index, values=values, proj=proj, default_w=w)
 
 
@@ -81,7 +84,7 @@ def retrieve_logits(
     q = reduce_key(hidden, state)
     B = q.shape[0]
     w = weights if weights is not None else jnp.broadcast_to(state.default_w, q.shape)
-    res = query_index(state.index, q, w, index_config(rcfg), k=rcfg.topk)
+    res = state.index.query(q, w, QuerySpec(k=rcfg.topk))  # config rides with the index
     # softmax(-d/T) over retrieved records, scattered onto their token ids
     valid = res.ids >= 0
     scores = jnp.where(valid, -res.dists / temperature, -jnp.inf)

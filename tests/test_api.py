@@ -1,0 +1,254 @@
+"""The repro.api facade: one Index.query, four behaviors — and bit-parity
+with the legacy (ALSHIndex, IndexConfig) shims it replaces."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    BoundedSpace,
+    Index,
+    IndexConfig,
+    QuerySpec,
+    get_family,
+)
+from repro.core import build_index, query_index
+from repro.core.multiprobe import query_multiprobe
+from repro.distance import brute_force_nn, wl1_distance
+
+
+def _cfg(d=10, M=8, K=6, L=12, family="theta", **kw):
+    kw.setdefault("max_candidates", 64)
+    kw.setdefault("space", BoundedSpace(0.0, 1.0, float(M)))
+    return IndexConfig(d=d, M=M, K=K, L=L, family=family, **kw)
+
+
+def _problem(rng, n=800, d=10, b=4, salt=0):
+    data = jax.random.uniform(jax.random.fold_in(rng, salt), (n, d))
+    q = jax.random.uniform(jax.random.fold_in(rng, salt + 1), (b, d))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, salt + 2), (b, d))) + 0.2
+    return data, q, w
+
+
+# ---------------------------------------------------------------------------
+# parity: facade vs legacy shims (fixed seed, bit-identical)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["theta", "l2"])
+def test_probe_bit_identical_to_legacy(rng, family):
+    data, q, w = _problem(rng, salt=0)
+    cfg = _cfg(family=family, W=8.0)
+    bkey = jax.random.fold_in(rng, 9)
+    index = Index.build(bkey, data, cfg)
+    legacy = build_index(bkey, data, cfg)
+
+    res = index.query(q, w, QuerySpec(k=5))
+    ref = query_index(legacy, q, w, cfg, k=5)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(res.dists), np.asarray(ref.dists))
+    np.testing.assert_array_equal(
+        np.asarray(res.n_candidates), np.asarray(ref.n_candidates)
+    )
+
+
+def test_multiprobe_bit_identical_to_legacy(rng):
+    data, q, w = _problem(rng, salt=10)
+    cfg = _cfg(family="theta")
+    bkey = jax.random.fold_in(rng, 19)
+    index = Index.build(bkey, data, cfg)
+    legacy = build_index(bkey, data, cfg)
+
+    res = index.query(q, w, QuerySpec(k=5, mode="multiprobe", n_probes=4, max_flips=2))
+    ref = query_multiprobe(legacy, q, w, cfg, k=5, n_probes=4, max_flips=2)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(res.dists), np.asarray(ref.dists))
+
+
+def test_exact_mode_matches_brute_force(rng):
+    data, q, w = _problem(rng, salt=20)
+    index = Index.build(jax.random.fold_in(rng, 29), data, _cfg())
+    res = index.query(q, w, QuerySpec(k=7, mode="exact"))
+    bf_d, bf_i = brute_force_nn(data, q, w, k=7)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(bf_i))
+    np.testing.assert_allclose(np.asarray(res.dists), np.asarray(bf_d), rtol=1e-6)
+    # exact mode scans everything — the sublinearity metric reports n
+    np.testing.assert_array_equal(np.asarray(res.n_candidates), index.n)
+
+
+# ---------------------------------------------------------------------------
+# negative query weights (the paper's w may be negative), both families
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["theta", "l2"])
+def test_negative_weights_through_facade(rng, family):
+    data, q, _ = _problem(rng, salt=30)
+    w = jax.random.normal(jax.random.fold_in(rng, 33), q.shape)  # mixed signs
+    assert bool(jnp.any(w < 0))
+    cfg = _cfg(family=family, W=8.0, L=24, max_candidates=128)
+    bkey = jax.random.fold_in(rng, 39)
+    index = Index.build(bkey, data, cfg)
+
+    res = index.query(q, w, QuerySpec(k=5))
+    assert res.ids.shape == (q.shape[0], 5)
+    assert np.isfinite(np.asarray(res.dists)).any()
+    # returned distances are exact d_w^l1 (negative contributions included)
+    for i in range(q.shape[0]):
+        for j in range(5):
+            pid = int(res.ids[i, j])
+            if pid < 0:
+                continue
+            want = float(wl1_distance(data[pid], q[i], w[i]))
+            np.testing.assert_allclose(
+                float(res.dists[i, j]), want, rtol=1e-4, atol=1e-4
+            )
+    # parity with the legacy shim under the same seed
+    ref = query_index(build_index(bkey, data, cfg), q, w, cfg, k=5)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+
+
+# ---------------------------------------------------------------------------
+# self-describing persistence
+# ---------------------------------------------------------------------------
+
+
+def test_load_restores_from_directory_alone(rng, tmp_path):
+    data, q, w = _problem(rng, salt=40)
+    cfg = _cfg(family="l2", W=8.0)
+    index = Index.build(jax.random.fold_in(rng, 49), data, cfg)
+    want = index.query(q, w, QuerySpec(k=5))
+
+    index.save(str(tmp_path))
+    restored = Index.load(str(tmp_path))  # no config, no template tree
+
+    assert restored.config == cfg
+    assert restored.n == index.n
+    got = restored.query(q, w, QuerySpec(k=5))
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))
+    np.testing.assert_array_equal(np.asarray(got.dists), np.asarray(want.dists))
+
+
+def test_load_rejects_non_index_directory(tmp_path):
+    with pytest.raises(FileNotFoundError, match="index.json"):
+        Index.load(str(tmp_path))
+
+
+def test_load_rejects_future_format_version(rng, tmp_path):
+    import json
+
+    data, _, _ = _problem(rng, salt=45)
+    Index.build(jax.random.fold_in(rng, 44), data, _cfg()).save(str(tmp_path))
+    meta_path = tmp_path / "index.json"
+    meta = json.loads(meta_path.read_text())
+    meta["version"] = 99
+    meta_path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="version"):
+        Index.load(str(tmp_path))
+
+
+def test_load_rejects_torn_overwrite(rng, tmp_path):
+    """Meta from one geometry + arrays from another (a torn re-save of the
+    same directory) must be rejected, not silently mis-loaded."""
+    import json
+
+    data, _, _ = _problem(rng, salt=46)
+    Index.build(jax.random.fold_in(rng, 47), data, _cfg(L=12)).save(str(tmp_path))
+    meta_path = tmp_path / "index.json"
+    meta = json.loads(meta_path.read_text())
+    meta["config"]["L"] = 6  # pretend the overwrite's meta landed, arrays didn't
+    meta_path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="does not describe the stored arrays"):
+        Index.load(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# config / spec validation (actionable errors at construction)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("field", ["d", "M", "K", "L", "max_candidates"])
+def test_config_rejects_nonpositive_geometry(field):
+    good = dict(d=8, M=8, K=6, L=4, max_candidates=32,
+                space=BoundedSpace(0.0, 1.0, 8.0))
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match=rf"IndexConfig\.{field}"):
+            IndexConfig(**{**good, field: bad})
+
+
+def test_config_rejects_unknown_family():
+    with pytest.raises(ValueError, match="unknown hash family"):
+        _cfg(family="cosine")
+
+
+def test_config_rejects_theta_overwide_keys():
+    with pytest.raises(ValueError, match="K <= 31"):
+        _cfg(K=32, family="theta")
+
+
+def test_config_rejects_l2_bad_width():
+    with pytest.raises(ValueError, match=r"IndexConfig\.W"):
+        _cfg(family="l2", W=0.0)
+
+
+def test_config_rejects_space_overflowing_lattice():
+    with pytest.raises(ValueError, match="space"):
+        _cfg(M=8, space=BoundedSpace(0.0, 1.0, 32.0))
+
+
+def test_config_normalizes_family_objects():
+    cfg = _cfg(family=get_family("theta"))
+    assert cfg.family == "theta"
+    assert cfg.family_obj is get_family("theta")
+
+
+def test_queryspec_validation():
+    with pytest.raises(ValueError, match="mode"):
+        QuerySpec(mode="fuzzy")
+    with pytest.raises(ValueError, match=r"QuerySpec\.k"):
+        QuerySpec(k=0)
+    with pytest.raises(ValueError, match="n_probes"):
+        QuerySpec(mode="multiprobe", n_probes=0)
+    with pytest.raises(ValueError, match=r"QuerySpec\.impl"):
+        QuerySpec(impl="onehott")
+    with pytest.raises(ValueError, match="only applies to mode='probe'"):
+        QuerySpec(mode="exact", impl="onehot")
+    QuerySpec(mode="probe", impl="onehot")  # valid combination
+
+
+def test_multiprobe_rejects_l2_family(rng):
+    data, q, w = _problem(rng, salt=50)
+    index = Index.build(jax.random.fold_in(rng, 59), data, _cfg(family="l2", W=8.0))
+    with pytest.raises(ValueError, match="multiprobe"):
+        index.query(q, w, QuerySpec(k=3, mode="multiprobe"))
+
+
+# ---------------------------------------------------------------------------
+# the Index is a pytree: config rides in the treedef across jit
+# ---------------------------------------------------------------------------
+
+
+def test_index_crosses_jit_boundary(rng):
+    data, q, w = _problem(rng, salt=60)
+    index = Index.build(jax.random.fold_in(rng, 69), data, _cfg())
+
+    @jax.jit
+    def f(ix, q, w):
+        return ix.query(q, w, QuerySpec(k=3)).dists
+
+    got = f(index, q, w)
+    want = index.query(q, w, QuerySpec(k=3)).dists
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    leaves, treedef = jax.tree_util.tree_flatten(index)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.config == index.config
+
+
+def test_config_replace_revalidates():
+    cfg = _cfg(family="theta")
+    with pytest.raises(ValueError, match="K <= 31"):
+        dataclasses.replace(cfg, K=40)

@@ -67,6 +67,43 @@ def test_sharded_alsh_matches_global_bruteforce():
     assert "OK" in out
 
 
+def test_facade_shard_prebuilt_matches_oneshot():
+    """Index.shard builds shard-local indexes ONCE; its query() must be
+    bit-identical to the one-shot sharded_query path (same key/cfg) and its
+    exact mode must reproduce the global brute force."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.api import Index, IndexConfig, QuerySpec, BoundedSpace
+        from repro.core.distributed import sharded_query
+        from repro.distance import brute_force_nn
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        n, d, M, k = 2048, 12, 16, 5
+        key = jax.random.PRNGKey(0)
+        data = jax.random.uniform(key, (n, d))
+        cfg = IndexConfig(d=d, M=M, K=10, L=16, family="theta",
+                          max_candidates=128, space=BoundedSpace(0., 1., float(M)))
+        q = jax.random.uniform(jax.random.fold_in(key, 1), (8, d))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (8, d))) + 0.2
+        bkey = jax.random.fold_in(key, 3)
+
+        sharded = Index.build(bkey, data, cfg).shard(mesh)
+        res = sharded.query(q, w, QuerySpec(k=k))
+
+        ds = jax.device_put(data, NamedSharding(mesh, P(tuple(mesh.axis_names), None)))
+        ref = sharded_query(bkey, ds, q, w, cfg, mesh, k=k)
+        np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+        np.testing.assert_array_equal(np.asarray(res.dists), np.asarray(ref.dists))
+
+        rex = sharded.query(q, w, QuerySpec(k=k, mode="exact"))
+        bf_d, _ = brute_force_nn(data, q, w, k=k)
+        np.testing.assert_allclose(np.asarray(rex.dists), np.asarray(bf_d), atol=1e-4)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_train_step_on_small_production_mesh():
     out = _run("""
         import dataclasses, jax, jax.numpy as jnp, numpy as np

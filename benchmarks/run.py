@@ -7,9 +7,10 @@ complexity claims; see DESIGN.md §1 "Validation targets").
 Prints ``name,us_per_call,derived`` CSV. The roofline rows summarize the
 compiled dry-run artifacts if present (run repro.launch.dryrun first).
 
-The kernel rows are additionally snapshotted to ``BENCH_kernels.json``
-(cwd) — one record per row plus backend/device metadata — so successive PRs
-leave a machine-readable perf trajectory.
+The kernel rows are additionally snapshotted to ``BENCH_kernels.json`` and
+the mutable-lifecycle rows to ``BENCH_updates.json`` (cwd) — one record per
+row plus backend/device metadata — so successive PRs leave a
+machine-readable perf trajectory.
 """
 
 from __future__ import annotations
@@ -27,6 +28,7 @@ MODULES = [
     "recall",  # recall@10 vs exact scan
     "multiprobe_bench",  # beyond-paper: probes-for-tables trade
     "kernels_bench",  # kernel microbenchmarks
+    "update_bench",  # mutable lifecycle: insert/query-vs-fill/compact
     "roofline",  # dry-run roofline summaries (if results exist)
 ]
 
@@ -65,6 +67,8 @@ def main() -> None:
             sys.stdout.flush()
             if name == "kernels_bench":
                 _write_kernels_json(rows)
+            if name == "update_bench":
+                _write_kernels_json(rows, path="BENCH_updates.json")
         except Exception as e:
             failed.append(name)
             print(f"{name},NaN,ERROR:{type(e).__name__}:{e}")

@@ -1,0 +1,123 @@
+"""Mutable-lifecycle benchmarks: insert throughput, query latency vs delta
+fill, compact cost vs full rebuild (benchmarks/run.py snapshots the rows
+into BENCH_updates.json).
+
+What the numbers validate:
+
+  * insert is O(H·d·m) hash + scatter — orders of magnitude cheaper than
+    the O(H·d·n + L·n log n) rebuild a build-once index needs per batch;
+  * two-segment query latency grows mildly with delta fill (the dense
+    delta match adds O(L·cap) key compares + its candidates to the fused
+    tail) — the price of mutability between compactions;
+  * compact() re-sorts WITHOUT re-hashing, so it undercuts a full
+    Index.build of the same rows.
+
+Sizes default small enough for the CI smoke (``--only update_bench``); the
+shapes, not the absolute times, are the regression signal.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.api import BoundedSpace, Index, IndexConfig, QuerySpec, UpdateSpec
+
+# UPDATE_BENCH_N scales the database down for CI smoke runs (the lifecycle
+# path is exercised end-to-end either way; absolute times only mean
+# something at the default size)
+N = int(os.environ.get("UPDATE_BENCH_N", 30_000))
+D = 16
+M = 32
+CAP = min(4096, max(64, N // 8))
+B = 64
+K_NN = 10
+
+
+def _cfg() -> IndexConfig:
+    return IndexConfig(
+        d=D, M=M, K=10, L=32, family="theta", max_candidates=256,
+        space=BoundedSpace(0.0, 1.0, float(M)),
+    )
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(jax.random.fold_in(key, 0), (N, D))
+    q = jax.random.uniform(jax.random.fold_in(key, 1), (B, D))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (B, D))) + 0.2
+    cfg = _cfg()
+    update = UpdateSpec(delta_capacity=CAP)
+
+    rows = []
+
+    # --- build cost (the thing updates amortize away) -----------------------
+    t0 = time.perf_counter()
+    index = Index.build(jax.random.fold_in(key, 3), data, cfg, update=update)
+    jax.block_until_ready(index.state.sorted_keys)
+    t_build_us = (time.perf_counter() - t0) * 1e6
+    rows.append(row("update/build_once", t_build_us, f"n={N}"))
+
+    # --- insert throughput (steady-state, jit-cached) -----------------------
+    jinsert = jax.jit(lambda ix, r: ix.insert(r))
+    for m in (64, 512):
+        batch = jax.random.uniform(jax.random.fold_in(key, 10 + m), (m, D))
+        us = time_fn(lambda ix=index, b=batch: jinsert(ix, b)[1])
+        rows.append(
+            row(f"update/insert_m{m}", us,
+                f"{m / (us / 1e6):,.0f} rows/s vs rebuild {t_build_us/1e6:.2f}s")
+        )
+
+    # --- query latency vs delta fill ---------------------------------------
+    jquery = jax.jit(lambda ix, qq, ww: ix.query(qq, ww, QuerySpec(k=K_NN)).dists)
+    fills = (0, CAP // 4, CAP)
+    base_us = None
+    for fill in fills:
+        ix = index
+        if fill:
+            extra = jax.random.uniform(jax.random.fold_in(key, 20), (fill, D))
+            ix, _ = jinsert(index, extra)
+        us = time_fn(lambda ix=ix: jquery(ix, q, w))
+        if base_us is None:
+            base_us = us
+        rows.append(
+            row(f"update/query_fill{fill}", us,
+                f"{us / base_us:.2f}x empty-delta latency (b={B})")
+        )
+
+    # --- delete + tombstoned-query (mask overhead) --------------------------
+    jdelete = jax.jit(lambda ix, ids: ix.delete(ids))
+    dead = jnp.arange(0, N, 7, dtype=jnp.int32)  # ~14% churn
+    us = time_fn(lambda: jdelete(index, dead).tombstones)
+    rows.append(row("update/delete_14pct", us, f"{dead.shape[0]} tombstones"))
+    ix_dead = jdelete(index, dead)
+    us = time_fn(lambda: jquery(ix_dead, q, w))
+    rows.append(row("update/query_tombstoned", us, f"{us / base_us:.2f}x clean"))
+
+    # --- compact vs rebuild -------------------------------------------------
+    extra = jax.random.uniform(jax.random.fold_in(key, 30), (CAP, D))
+    ix_full, _ = jinsert(index, extra)
+    ix_full = jdelete(ix_full, dead)
+
+    def compact():
+        return ix_full.compact().state.sorted_keys
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(compact())
+    t_compact_us = (time.perf_counter() - t0) * 1e6
+    survivors = ix_full.n_live
+    rows.append(
+        row("update/compact", t_compact_us,
+            f"{survivors} survivors, {t_compact_us / t_build_us:.2f}x build "
+            "(resort without rehash)")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,111 @@
+"""Mutable index lifecycle: insert / delete / compact without a rebuild.
+
+    PYTHONPATH=src python examples/streaming_updates.py [--n 20000]
+
+The paper's Theorem-1 index is build-once; this example runs it as a LIVE
+structure: a sealed main segment plus a fixed-capacity delta segment for
+inserts (hashed with the same tables, so one set of query keys is valid
+everywhere) and a tombstone bitmap for deletes. Everything is static-shape,
+so the whole insert → delete → query cycle is one compiled program — and
+results stay EXACTLY what a fresh build over the surviving rows would
+return (same build key ⇒ same tables ⇒ same hashes).
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import BoundedSpace, Index, IndexConfig, QuerySpec, UpdateSpec
+from repro.distance import recall_at_k
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    args = ap.parse_args()
+
+    n, d, M, k = args.n, 16, 32, 10
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(jax.random.fold_in(key, 0), (n, d))
+
+    cfg = IndexConfig(d=d, M=M, K=10, L=32, family="theta",
+                      max_candidates=512, space=BoundedSpace(0.0, 1.0, float(M)))
+    update = UpdateSpec(delta_capacity=4096, compact_threshold=0.75)
+
+    t0 = time.time()
+    index = Index.build(jax.random.fold_in(key, 1), data, cfg, update=update)
+    jax.block_until_ready(index.state.sorted_keys)
+    t_build = time.time() - t0
+    print(f"== built mutable index: n={n} sealed rows + "
+          f"{update.delta_capacity} delta slots in {t_build:.2f}s")
+
+    # --- inserts land in the delta segment (no sort, no rebuild) ------------
+    m = 2048
+    new_rows = jax.random.uniform(jax.random.fold_in(key, 2), (m, d))
+    jinsert = jax.jit(lambda ix, rows: ix.insert(rows))
+    index, ids = jinsert(index, new_rows)  # warm-up compile
+    t0 = time.time()
+    index, ids2 = jinsert(index, jax.random.uniform(jax.random.fold_in(key, 3), (m, d)))
+    jax.block_until_ready(ids2)
+    print(f"== inserted 2x{m} rows (ids {int(ids[0])}..{int(ids2[-1])}); "
+          f"steady-state insert: {m/(time.time()-t0):,.0f} rows/s "
+          f"(vs full rebuild {t_build:.2f}s)")
+
+    # --- deletes tombstone (ids never come back) ----------------------------
+    dead = jnp.concatenate([jnp.arange(100, dtype=jnp.int32), ids[:100]])
+    index = index.delete(dead)
+    print(f"== deleted {dead.shape[0]} rows (100 sealed + 100 delta); "
+          f"live rows: {index.n_live}, delta fill {index.delta_fill}/{update.delta_capacity}")
+
+    # --- queries see one coherent view of both segments ---------------------
+    b = 64
+    q = jax.random.uniform(jax.random.fold_in(key, 4), (b, d))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 5), (b, d))) + 0.2
+    res = index.query(q, w, QuerySpec(k=k))
+    exact = index.query(q, w, QuerySpec(k=k, mode="exact"))
+    assert not np.isin(np.asarray(dead), np.asarray(res.ids)).any()
+    print(f"== query over both segments: recall@{k}="
+          f"{recall_at_k(res.ids, exact.ids, k):.2f}, "
+          f"candidates/query ~{float(jnp.mean(res.n_candidates)):.0f} "
+          f"of {index.n_live} live rows")
+
+    # --- compact: merge delta + survivors into a fresh sealed segment -------
+    t0 = time.time()
+    index = index.compact()
+    jax.block_until_ready(index.state.sorted_keys)
+    print(f"== compacted to n={index.n} sealed rows in {time.time()-t0:.2f}s "
+          f"(the only operation that sorts; hashes were NOT recomputed)")
+
+    # --- parity: bit-identical to a fresh build over the survivors ----------
+    # (demonstrated at a scale where the per-table candidate window C never
+    # truncates a bucket: under truncation, the mutated and fresh indexes
+    # keep different — equally valid — C-subsets of an oversized bucket)
+    ns, caps = 1500, 512
+    cfg_s = IndexConfig(d=d, M=M, K=10, L=16, family="theta",
+                        max_candidates=ns + caps,
+                        space=BoundedSpace(0.0, 1.0, float(M)))
+    small = Index.build(jax.random.fold_in(key, 6), data[:ns], cfg_s,
+                        update=UpdateSpec(delta_capacity=caps))
+    small, sids = small.insert(data[n - 300:n - 100])
+    small = small.delete(jnp.concatenate([jnp.arange(40, dtype=jnp.int32), sids[:40]]))
+    live = small.live_ids()
+    rows = jnp.concatenate([data[:ns], data[n - 300:n - 100]])
+    fresh = Index.build(jax.random.fold_in(key, 6), rows[live], cfg_s)
+    got = small.query(q, w, QuerySpec(k=k))
+    want = fresh.query(q, w, QuerySpec(k=k))
+    mapped = np.where(np.asarray(want.ids) >= 0, live[np.asarray(want.ids)], -1)
+    assert np.array_equal(np.asarray(got.ids), mapped), "lifecycle parity broken"
+    assert np.array_equal(np.asarray(got.dists), np.asarray(want.dists))
+    compacted = small.compact()
+    for a, b_ in zip(jax.tree_util.tree_leaves(compacted.state),
+                     jax.tree_util.tree_leaves(fresh.state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b_))
+    print("== parity: mutated index == fresh build over survivors, and "
+          "compact() == fresh build (bit-identical)")
+
+
+if __name__ == "__main__":
+    main()

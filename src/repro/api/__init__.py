@@ -1,13 +1,20 @@
 """repro.api — the unified Index facade over the paper's ALSH schemes.
 
-Stable public surface for building, querying, persisting, and sharding
-(d_w^l1)-ALSH indexes. One config-carrying :class:`Index`, one policy-driven
-:meth:`Index.query`, self-describing :meth:`Index.save` / :meth:`Index.load`:
+Stable public surface for building, querying, UPDATING, persisting, and
+sharding (d_w^l1)-ALSH indexes. One config-carrying :class:`Index`, one
+policy-driven :meth:`Index.query`, a segmented mutable lifecycle
+(:meth:`Index.insert` / :meth:`Index.delete` / :meth:`Index.compact`), and
+self-describing :meth:`Index.save` / :meth:`Index.load`:
 
-    from repro.api import Index, IndexConfig, QuerySpec
+    from repro.api import Index, IndexConfig, QuerySpec, UpdateSpec
 
-    index = Index.build(key, data, IndexConfig(d=16, M=32, K=10, L=16))
+    index = Index.build(key, data, IndexConfig(d=16, M=32, K=10, L=16),
+                        update=UpdateSpec(delta_capacity=4096))
     res = index.query(q, w, QuerySpec(k=10))
+    index, ids = index.insert(new_rows)
+    index = index.delete(ids[:16])
+    if index.needs_compact:
+        index = index.compact()
 
 Hash families are pluggable strategy objects (``ThetaFamily``, ``L2Family``)
 registered in :mod:`repro.core.families`. The legacy free functions
@@ -16,7 +23,8 @@ as thin shims over the same engine.
 """
 
 from repro.api.index import Index, ShardedIndex
-from repro.api.spec import QuerySpec
+from repro.api.spec import QuerySpec, UpdateSpec
+from repro.core.index import DeltaSegment
 from repro.core.families import (
     FAMILIES,
     HashFamily,
@@ -31,6 +39,8 @@ __all__ = [
     "Index",
     "ShardedIndex",
     "QuerySpec",
+    "UpdateSpec",
+    "DeltaSegment",
     "IndexConfig",
     "QueryResult",
     "BoundedSpace",

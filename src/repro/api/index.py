@@ -1,4 +1,4 @@
-"""The ``repro.api`` Index facade — one object, four behaviors.
+"""The ``repro.api`` Index facade — one object, full lifecycle.
 
 The engine underneath (``repro.core``) is a pair: an ``ALSHIndex`` pytree of
 arrays and an ``IndexConfig`` of static geometry, threaded separately
@@ -13,28 +13,52 @@ never re-wire build/query/persist plumbing by hand:
     index.save(dir);  index = Index.load(dir)                   # dir alone
     sharded = index.shard(mesh); sharded.query(q, w, spec)      # cluster
 
-``Index`` is a registered pytree whose *config rides in the static treedef*:
-it crosses jit/vmap/shard_map boundaries like any array bundle, and two
-indexes with different geometry can never be confused for one compiled
-program. Query execution dispatches on :class:`~repro.api.spec.QuerySpec`
-fields to the same jit'd engine entry points the legacy shims call, so
-facade results are bit-identical to ``query_index``/``query_multiprobe``.
+Indexes built with ``UpdateSpec(delta_capacity=C)`` are MUTABLE — they
+survive data churn without the O(H·d·n + L·n log n) rebuild:
+
+    index = Index.build(key, data, cfg, update=UpdateSpec(delta_capacity=4096))
+    index, ids = index.insert(new_rows)     # functional; ids are stable
+    index = index.delete(ids[:16])          # tombstones, never re-sorts
+    res = index.query(q, w, spec)           # two-segment probe, same contract
+    if index.needs_compact: index = index.compact()   # the only sort
+
+Memory model: the sealed main segment never changes; inserts land in a
+fixed-capacity delta segment hashed with the SAME tables (so one set of
+query keys is valid everywhere); deletes flip tombstone bits. Every shape
+is static — insert/delete/query reuse one compiled program across the
+index's whole life at a given capacity.
+
+``Index`` is a registered pytree whose *config and update policy ride in
+the static treedef*: it crosses jit/vmap/shard_map boundaries like any
+array bundle, and two indexes with different geometry can never be confused
+for one compiled program. Query execution dispatches on
+:class:`~repro.api.spec.QuerySpec` fields to the same jit'd engine entry
+points the legacy shims call, so facade results are bit-identical to
+``query_index``/``query_multiprobe`` (and a mutable index's results are
+bit-identical to a fresh build over its surviving rows — see
+tests/test_lifecycle.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.api.spec import QuerySpec
+from repro.api.spec import QuerySpec, UpdateSpec
 from repro.core.index import (
     ALSHIndex,
+    DeltaSegment,
     IndexConfig,
     QueryResult,
     build_index,
+    delta_insert,
     query_index,
+    query_index_segmented,
+    tombstone_ids,
 )
 
 
@@ -48,52 +72,142 @@ def _as_key_data(key: jax.Array) -> jax.Array:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class Index:
-    """A built ALSH index that owns its static configuration.
+    """A built ALSH index that owns its static configuration and lifecycle.
 
     Attributes:
-      state: the array bundle (tables, sorted keys, permutations, data).
+      state: the sealed main segment (tables, sorted keys, permutations,
+        data) — never mutated after build; only ``compact()`` replaces it.
       build_key: the PRNG key the tables were drawn from — persisted so a
         restored index can be re-sharded (shard-local rebuilds re-derive
-        identical tables from it).
+        identical tables from it, including the delta-row hashes).
       config: static geometry; lives in the pytree treedef, not the leaves.
+      update: static mutability policy (delta capacity); also in the treedef.
+      delta: fixed-capacity unsealed segment holding post-build inserts
+        (empty, capacity 0, for immutable indexes).
+      tombstones: (n_main + capacity,) bool — True marks a deleted row in
+        either segment.
+
+    Row ids are stable across mutation: main rows keep their build ids
+    ``[0, n_main)``; the i-th inserted row gets id ``n_main + i`` (also
+    under sharding). Only ``compact()`` renumbers — ``live_ids()`` gives
+    the old-id-per-new-id mapping of the compaction that is about to
+    happen (or just happened, from the pre-compact index).
     """
 
     state: ALSHIndex
     build_key: jax.Array
     config: IndexConfig
+    update: UpdateSpec = UpdateSpec()
+    delta: DeltaSegment | None = None
+    tombstones: jax.Array | None = None
 
-    # -- pytree protocol (config is static aux data) ------------------------
+    def __post_init__(self):
+        # Synthesize empty mutation state when constructed without it (the
+        # common case for immutable indexes and shard-local facades).
+        if self.delta is None:
+            self.delta = DeltaSegment.empty(
+                self.config, self.update.delta_capacity, dtype=self.state.data.dtype
+            )
+        if self.tombstones is None:
+            self.tombstones = jnp.zeros(
+                (self.state.data.shape[0] + self.delta.capacity,), bool
+            )
+
+    # -- pytree protocol (config + update policy are static aux data) -------
     def tree_flatten(self):
-        return (self.state, self.build_key), self.config
+        return (
+            (self.state, self.build_key, self.delta, self.tombstones),
+            (self.config, self.update),
+        )
 
     @classmethod
-    def tree_unflatten(cls, config, children):
-        state, build_key = children
-        return cls(state=state, build_key=build_key, config=config)
+    def tree_unflatten(cls, aux, children):
+        state, build_key, delta, tombstones = children
+        config, update = aux
+        return cls(
+            state=state,
+            build_key=build_key,
+            config=config,
+            update=update,
+            delta=delta,
+            tombstones=tombstones,
+        )
 
     # -- construction -------------------------------------------------------
     @classmethod
     def build(
-        cls, key: jax.Array, data: jax.Array, config: IndexConfig, impl: str = "auto"
+        cls,
+        key: jax.Array,
+        data: jax.Array,
+        config: IndexConfig,
+        impl: str = "auto",
+        update: UpdateSpec = UpdateSpec(),
     ) -> "Index":
-        """Hash every point and sort each table — Theorem 1 preprocessing."""
+        """Hash every point and sort each table — Theorem 1 preprocessing.
+
+        ``update=UpdateSpec(delta_capacity=C)`` reserves C delta slots and
+        makes the index mutable (``insert``/``delete``/``compact``).
+        """
         key = _as_key_data(key)
         return cls(
             state=build_index(key, data, config, impl=impl),
             build_key=key,
             config=config,
+            update=update,
         )
 
     @property
     def n(self) -> int:
-        """Indexed database rows."""
+        """Main-segment (sealed) rows."""
         return self.state.n
 
     @property
     def d(self) -> int:
         return self.config.d
 
+    @property
+    def mutable(self) -> bool:
+        return self.update.mutable
+
+    @property
+    def capacity(self) -> int:
+        """Total addressable rows: main + delta slots."""
+        return self.state.n + self.delta.capacity
+
+    @property
+    def delta_fill(self) -> int:
+        """Delta slots used (device sync — don't poll inside jit)."""
+        return int(self.delta.fill)
+
+    @property
+    def n_live(self) -> int:
+        """Surviving rows: filled, not tombstoned (device sync)."""
+        return int(self.live_ids().size)
+
+    @property
+    def needs_compact(self) -> bool:
+        """Advisory: delta fill crossed ``update.compact_threshold``."""
+        cap = self.delta.capacity
+        if cap == 0:
+            return False
+        return self.delta_fill >= self.update.compact_threshold * cap
+
     # -- querying -----------------------------------------------------------
+    def _validate_query_args(self, queries: jax.Array, weights: jax.Array) -> None:
+        d = self.config.d
+        for name, arr in (("queries", queries), ("weights", weights)):
+            if arr.ndim != 2 or arr.shape[-1] != d:
+                raise ValueError(
+                    f"{name} must be (b, d) with trailing dim config.d={d}; "
+                    f"got {name}.shape={tuple(arr.shape)}"
+                )
+        if tuple(queries.shape[:-1]) != tuple(weights.shape[:-1]):
+            raise ValueError(
+                f"queries and weights batch dims disagree: "
+                f"queries.shape={tuple(queries.shape)} vs "
+                f"weights.shape={tuple(weights.shape)}"
+            )
+
     def query(
         self, queries: jax.Array, weights: jax.Array, spec: QuerySpec = QuerySpec()
     ) -> QueryResult:
@@ -105,7 +219,16 @@ class Index:
             negative).
           spec: policy — exact | probe | multiprobe; see
             :class:`~repro.api.spec.QuerySpec`.
+
+        Mutable indexes run the two-segment path: sealed-table window probe
+        + delta key match, tombstones masked before re-rank. Immutable
+        indexes take the sealed fast path (bit-identical to the legacy
+        shims). Invalid result slots are ``ids == -1`` / ``dists == +inf``
+        in every mode.
         """
+        self._validate_query_args(queries, weights)
+        if self.mutable:
+            return self._query_segmented(queries, weights, spec)
         if spec.mode == "exact":
             from repro.kernels import ops
 
@@ -128,20 +251,186 @@ class Index:
             self.state, queries, weights, self.config, k=spec.k, impl=spec.impl
         )
 
+    def _query_segmented(
+        self, queries: jax.Array, weights: jax.Array, spec: QuerySpec
+    ) -> QueryResult:
+        if spec.mode == "exact":
+            from repro.core.index import query_exact_segmented
+
+            return query_exact_segmented(
+                self.state, self.delta, self.tombstones, queries, weights, k=spec.k
+            )
+        if spec.mode == "multiprobe":
+            from repro.core.multiprobe import query_multiprobe_segmented
+
+            return query_multiprobe_segmented(
+                self.state,
+                self.delta,
+                self.tombstones,
+                queries,
+                weights,
+                self.config,
+                k=spec.k,
+                n_probes=spec.n_probes,
+                max_flips=spec.max_flips,
+            )
+        return query_index_segmented(
+            self.state,
+            self.delta,
+            self.tombstones,
+            queries,
+            weights,
+            self.config,
+            k=spec.k,
+            impl=spec.impl,
+        )
+
+    # -- mutation (functional: every method returns a new Index) ------------
+    def _require_mutable(self, op: str) -> None:
+        if not self.mutable:
+            raise ValueError(
+                f"Index.{op}() requires a mutable index — build with "
+                f"update=UpdateSpec(delta_capacity=...) (this index was built "
+                f"with delta_capacity=0)"
+            )
+
+    def insert(self, rows: jax.Array) -> tuple["Index", jax.Array]:
+        """Append rows to the delta segment.
+
+        Args:
+          rows: (m, d) new data points (hashed with the index's own tables).
+
+        Returns:
+          (new index, (m,) int32 assigned ids). Ids are stable until the
+          next ``compact()``; ``-1`` marks rows that did not fit (delta at
+          capacity — compact and retry). jit/vmap-safe, no retrace across
+          fill levels.
+        """
+        self._require_mutable("insert")
+        if rows.ndim != 2 or rows.shape[-1] != self.config.d:
+            raise ValueError(
+                f"insert rows must be (m, d) with trailing dim "
+                f"config.d={self.config.d}; got rows.shape={tuple(rows.shape)}"
+            )
+        delta, ids = delta_insert(self.state, self.delta, rows, self.config)
+        return dataclasses.replace(self, delta=delta), ids
+
+    def delete(self, ids: jax.Array) -> "Index":
+        """Tombstone rows by id (either segment). Unknown ids — negative or
+        not yet assigned by any insert — are ignored; deleted ids never
+        appear in query results. Functional and jit-safe; space is
+        reclaimed by ``compact()``."""
+        self._require_mutable("delete")
+        ts = tombstone_ids(
+            self.tombstones, jnp.asarray(ids), self.state.n, self.delta.fill
+        )
+        return dataclasses.replace(self, tombstones=ts)
+
+    def live_ids(self):
+        """(n_live,) int64 numpy array: surviving row ids in compaction
+        order — ``live_ids()[new_id] == old_id`` after ``compact()``."""
+        tomb = np.asarray(self.tombstones)
+        n_main = self.state.n
+        fill = int(self.delta.fill)
+        main_keep = np.nonzero(~tomb[:n_main])[0]
+        delta_keep = n_main + np.nonzero(~tomb[n_main : n_main + fill])[0]
+        return np.concatenate([main_keep, delta_keep])
+
+    def compact(self) -> "Index":
+        """Merge delta + surviving main rows into a fresh sealed segment.
+
+        The ONLY lifecycle operation that sorts. Hashes are NOT recomputed:
+        main-row keys are recovered by inverting each table's permutation
+        and delta-row keys were computed at insert time — the merge is a
+        gather + L argsorts, bit-identical to ``Index.build`` over the
+        surviving rows (same ``build_key``). Returns a new index with an
+        empty delta and a clear tombstone bitmap; ids are renumbered per
+        ``live_ids()``. Host-side (dynamic output shape) — do not call
+        under jit.
+        """
+        self._require_mutable("compact")
+        state, cfg = self.state, self.config
+        n_main = state.n
+        fill = int(self.delta.fill)
+        tomb = np.asarray(self.tombstones)
+        main_keep = jnp.asarray(np.nonzero(~tomb[:n_main])[0], jnp.int32)
+        delta_keep = jnp.asarray(
+            np.nonzero(~tomb[n_main : n_main + fill])[0], jnp.int32
+        )
+
+        # recover per-table keys of main rows at their original positions by
+        # inverting the sort: keys[l, perm[l, i]] = sorted_keys[l, i]
+        perm = state.perm[:, :n_main]
+        keys_main = jnp.zeros((cfg.L, n_main), jnp.int32)
+        keys_main = keys_main.at[
+            jnp.arange(cfg.L, dtype=jnp.int32)[:, None], perm
+        ].set(state.sorted_keys)
+
+        data = jnp.concatenate(
+            [state.data[main_keep], self.delta.data[delta_keep].astype(state.data.dtype)]
+        )
+        levels = jnp.concatenate(
+            [state.levels[main_keep], self.delta.levels[delta_keep]]
+        )
+        keys_ln = jnp.concatenate(
+            [keys_main[:, main_keep], self.delta.keys[:, delta_keep]], axis=1
+        )
+
+        # the sort — identical to build_index's tail over the survivor rows
+        n_new = data.shape[0]
+        perm_new = jnp.argsort(keys_ln, axis=1).astype(jnp.int32)
+        sorted_keys = jnp.take_along_axis(keys_ln, perm_new, axis=1)
+        pad = jnp.full((cfg.L, cfg.max_candidates), n_new, dtype=jnp.int32)
+        perm_new = jnp.concatenate([perm_new, pad], axis=1)
+        new_state = ALSHIndex(
+            tables=state.tables,
+            mixers=state.mixers,
+            sorted_keys=sorted_keys,
+            perm=perm_new,
+            data=data,
+            levels=levels,
+        )
+        return Index(
+            state=new_state,
+            build_key=self.build_key,
+            config=cfg,
+            update=self.update,
+        )
+
     # -- persistence (self-describing) --------------------------------------
-    def save(self, directory: str) -> str:
-        """Write a directory restorable by ``Index.load(directory)`` alone."""
+    def save(self, directory: str | os.PathLike) -> str:
+        """Write a directory restorable by ``Index.load(directory)`` alone.
+
+        The manifest records every segment (main rows, delta capacity/fill,
+        tombstone count), so a restored mutable index resumes its lifecycle
+        exactly where it stopped."""
         from repro.api import persist
 
-        return persist.save_index(directory, self.state, self.build_key, self.config)
+        return persist.save_index(
+            directory,
+            self.state,
+            self.build_key,
+            self.config,
+            update=self.update,
+            delta=self.delta,
+            tombstones=self.tombstones,
+        )
 
     @classmethod
-    def load(cls, directory: str) -> "Index":
-        """Restore an index from a directory — config travels with the data."""
+    def load(cls, directory: str | os.PathLike) -> "Index":
+        """Restore an index from a directory — config, update policy, and
+        segment state all travel with the data."""
         from repro.api import persist
 
-        state, build_key, cfg = persist.load_index(directory)
-        return cls(state=state, build_key=build_key, config=cfg)
+        state, build_key, cfg, update, delta, tombstones = persist.load_index(directory)
+        return cls(
+            state=state,
+            build_key=build_key,
+            config=cfg,
+            update=update,
+            delta=delta,
+            tombstones=tombstones,
+        )
 
     # -- distribution -------------------------------------------------------
     def shard(self, mesh, merge_hierarchical: bool = True) -> "ShardedIndex":
@@ -149,21 +438,48 @@ class Index:
 
         Builds each shard's local index ONCE (tables re-derived from the
         persisted ``build_key``, so they match across shards and across
-        save/load). Returns a :class:`ShardedIndex` whose ``query()`` runs
-        shard-local probes, then a hierarchical top-k merge along the mesh
-        axes (innermost first) — no per-query rebuild.
+        save/load). A mutable index replays its delta rows through the
+        sharded insert path — the same tables re-hash them to identical
+        keys, ids are preserved (``n_main + i`` for the i-th insert), and
+        tombstones carry over. Each shard gets its own
+        ``update.delta_capacity``-slot delta. Returns a
+        :class:`ShardedIndex` with the same query/insert/delete surface.
         """
-        from repro.core.distributed import build_local_indexes
+        from repro.core.distributed import build_local_indexes, make_sharded_delta
 
+        S = mesh.devices.size
+        if self.mutable and self.update.delta_capacity % S:
+            raise ValueError(
+                f"UpdateSpec.delta_capacity={self.update.delta_capacity} must "
+                f"be a multiple of the mesh size ({S} devices) — each shard "
+                f"owns an equal slice of the delta segment"
+            )
         index_sharded = build_local_indexes(
             self.build_key, self.state.data, self.config, mesh
         )
-        return ShardedIndex(
+        sharded = ShardedIndex(
             index_sharded=index_sharded,
             config=self.config,
             mesh=mesh,
             merge_hierarchical=merge_hierarchical,
+            update=self.update,
+            build_key=self.build_key,
         )
+        if self.mutable:
+            sharded.delta_sharded, sharded.tombstones_sharded = make_sharded_delta(
+                self.config,
+                mesh,
+                self.update.delta_capacity // S,
+                self.state.data.dtype,
+                n_local=self.state.n // S,
+            )
+            fill = self.delta_fill
+            if fill:
+                sharded, _ = sharded.insert(self.delta.data[:fill])
+            gids = np.nonzero(np.asarray(self.tombstones))[0]
+            if gids.size:
+                sharded = sharded.delete(jnp.asarray(gids, jnp.int32))
+        return sharded
 
 
 @dataclasses.dataclass
@@ -174,16 +490,57 @@ class ShardedIndex:
     index over it; hash tables are identical across shards, so query
     hashing is computed once and is valid everywhere. ``query()`` returns
     globally-merged results with global row ids.
+
+    Mutable lifecycles shard too: every device owns a private
+    ``update.delta_capacity / n_shards``-slot delta slice, inserts are
+    routed round-robin by global id (``gid % shards`` picks the owner),
+    deletes tombstone on whichever shard owns the id, and the global id
+    scheme matches the single-host :class:`Index` exactly (main row i ↔
+    gid i; i-th inserted row ↔ gid n_main + i) — so a sharded and a
+    single-host index fed the same update stream return the SAME ids.
     """
 
     index_sharded: ALSHIndex  # leaf layout per core.distributed.local_index_specs
     config: IndexConfig
     mesh: object
     merge_hierarchical: bool = True
+    update: UpdateSpec = UpdateSpec()
+    build_key: jax.Array | None = None
+    delta_sharded: DeltaSegment | None = None  # leaf layout per local_delta_specs
+    tombstones_sharded: jax.Array | None = None  # (S·(n_local+cap),) shard-major
 
     @property
     def n(self) -> int:
         return self.index_sharded.data.shape[0]
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.devices.size
+
+    @property
+    def mutable(self) -> bool:
+        return self.update.mutable and self.delta_sharded is not None
+
+    @property
+    def _cap_local(self) -> int:
+        """Delta slots per shard (delta_capacity is the index-wide total)."""
+        return self.update.delta_capacity // self.n_shards
+
+    @property
+    def delta_fill(self) -> int:
+        """Total delta slots used across shards (device sync)."""
+        if self.delta_sharded is None:
+            return 0
+        return int(jnp.sum(self.delta_sharded.fill))
+
+    @property
+    def needs_compact(self) -> bool:
+        """Advisory: ANY shard's delta slice crossed the compact threshold
+        (that shard starts dropping inserts first — see ``insert``)."""
+        if self.delta_sharded is None:
+            return False
+        fills = np.asarray(self.delta_sharded.fill)
+        return bool((fills >= self.update.compact_threshold * self._cap_local).any())
 
     def query(
         self, queries: jax.Array, weights: jax.Array, spec: QuerySpec = QuerySpec()
@@ -199,4 +556,74 @@ class ShardedIndex:
             self.mesh,
             spec=spec,
             merge_hierarchical=self.merge_hierarchical,
+            delta_sharded=self.delta_sharded,
+            tombstones_sharded=self.tombstones_sharded,
+            update=self.update,
         )
+
+    def _require_mutable(self, op: str) -> None:
+        if not self.mutable:
+            raise ValueError(
+                f"ShardedIndex.{op}() requires a mutable index — build the "
+                f"source Index with update=UpdateSpec(delta_capacity=...) "
+                f"before .shard()"
+            )
+
+    def insert(self, rows: jax.Array) -> tuple["ShardedIndex", jax.Array]:
+        """Insert rows across shards, routed round-robin by global id.
+
+        Returns (new sharded index, (m,) assigned global ids; ``-1`` where
+        the owning shard's delta is full). Ids match what a single-host
+        mutable Index would assign for the same stream."""
+        self._require_mutable("insert")
+        from repro.core.distributed import sharded_delta_insert
+
+        delta, ids = sharded_delta_insert(
+            self.index_sharded, self.delta_sharded, rows, self.config, self.mesh
+        )
+        return dataclasses.replace(self, delta_sharded=delta), ids
+
+    def delete(self, ids: jax.Array) -> "ShardedIndex":
+        """Tombstone global ids on their owning shards (unknown ids ignored)."""
+        self._require_mutable("delete")
+        from repro.core.distributed import sharded_tombstone
+
+        ts = sharded_tombstone(
+            self.tombstones_sharded,
+            jnp.asarray(ids, jnp.int32).reshape(-1),
+            self.delta_sharded.fill,
+            self.mesh,
+            n_local=self.n // self.n_shards,
+            cap=self._cap_local,
+        )
+        return dataclasses.replace(self, tombstones_sharded=ts)
+
+    def compact(self) -> Index:
+        """Host-coordinated compaction: gather surviving rows in global-id
+        order, rebuild a fresh single-host sealed :class:`Index` (same
+        ``build_key`` ⇒ same tables), ready to ``.shard()`` again. Returns
+        the LOCAL index — re-shard explicitly, since the survivor count
+        must still divide the mesh."""
+        self._require_mutable("compact")
+        if self.build_key is None:
+            raise ValueError(
+                "ShardedIndex.compact() needs build_key — this sharded index "
+                "was constructed without one (build via Index.shard())"
+            )
+        S = self.n_shards
+        n_local = self.n // S
+        cap = self._cap_local
+        tomb = np.asarray(self.tombstones_sharded).reshape(S, n_local + cap)
+        fills = np.asarray(self.delta_sharded.fill)
+
+        main_data = np.asarray(self.index_sharded.data)  # global-id order already
+        main_keep = np.nonzero(~tomb[:, :n_local].reshape(-1))[0]
+        rows = [main_data[main_keep]]
+        if cap:
+            delta_data = np.asarray(self.delta_sharded.data).reshape(S, cap, -1)
+            e = np.arange(S * cap)  # delta gids in insertion order
+            s, t = e % S, e // S
+            live = (t < fills[s]) & ~tomb[s, n_local + t]
+            rows.append(delta_data[s[live], t[live]])
+        data = jnp.asarray(np.concatenate(rows, axis=0))
+        return Index.build(self.build_key, data, self.config, update=self.update)

@@ -2,7 +2,8 @@
 
 Layout (one directory per index):
 
-    <dir>/index.json               — format tag + the full IndexConfig
+    <dir>/index.json               — format tag + IndexConfig + UpdateSpec
+                                     + the segment manifest
     <dir>/step_000000000/…         — array leaves via the production ckpt
                                      machinery (msgpack + zstd/zlib, atomic
                                      COMMIT protocol; see repro/ckpt)
@@ -12,6 +13,16 @@ Layout (one directory per index):
 from the config — no template tree, no separately-threaded ``IndexConfig``.
 The array payload reuses ``repro.ckpt``'s committed-step protocol, so a
 crash mid-save can never be loaded from.
+
+Format version 2 adds the MUTABLE lifecycle state: the manifest lists every
+segment (sealed main rows; delta capacity + fill level) plus the tombstone
+count, and the payload carries the delta arrays and tombstone bitmap — a
+restored index resumes insert/delete/query exactly where it stopped, and a
+re-shard re-derives identical hash tables (delta hashes included) from the
+persisted build key. Version-1 directories (immutable, pre-lifecycle) still
+load, as immutable indexes.
+
+All entry points accept ``str`` or ``pathlib.Path`` directories.
 """
 
 from __future__ import annotations
@@ -20,14 +31,17 @@ import json
 import os
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro import ckpt
+from repro.api.spec import UpdateSpec
 from repro.core.hash_families import PrefixTables
-from repro.core.index import ALSHIndex, IndexConfig
+from repro.core.index import ALSHIndex, DeltaSegment, IndexConfig
 from repro.core.transforms import BoundedSpace
 
 FORMAT = "repro.api.index"
-VERSION = 1
+VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 _META = "index.json"
 
 
@@ -58,6 +72,20 @@ def config_from_dict(d: dict) -> IndexConfig:
     )
 
 
+def update_to_dict(update: UpdateSpec) -> dict:
+    return {
+        "delta_capacity": update.delta_capacity,
+        "compact_threshold": update.compact_threshold,
+    }
+
+
+def update_from_dict(d: dict) -> UpdateSpec:
+    return UpdateSpec(
+        delta_capacity=d["delta_capacity"],
+        compact_threshold=d.get("compact_threshold", 0.75),
+    )
+
+
 def _state_template() -> ALSHIndex:
     """Structure-only ALSHIndex (leaf values/shapes come from the payload)."""
     z = jnp.zeros((), jnp.float32)
@@ -71,8 +99,21 @@ def _state_template() -> ALSHIndex:
     )
 
 
-def save_index(directory: str, state: ALSHIndex, build_key, cfg: IndexConfig) -> str:
-    """Write a self-describing index directory.
+def _delta_template() -> DeltaSegment:
+    z = jnp.zeros((), jnp.float32)
+    return DeltaSegment(data=z, levels=z, keys=z, fill=z)
+
+
+def save_index(
+    directory: str | os.PathLike,
+    state: ALSHIndex,
+    build_key,
+    cfg: IndexConfig,
+    update: UpdateSpec = UpdateSpec(),
+    delta: DeltaSegment | None = None,
+    tombstones=None,
+) -> str:
+    """Write a self-describing index directory (format version 2).
 
     The array payload commits FIRST (ckpt COMMIT protocol), the meta file is
     atomically replaced LAST: a fresh directory that crashed mid-save has no
@@ -81,9 +122,39 @@ def save_index(directory: str, state: ALSHIndex, build_key, cfg: IndexConfig) ->
     arrays, or vice versa through the ckpt step replacement) —
     ``load_index`` cross-checks the restored array shapes against the config
     to catch that."""
+    directory = os.fspath(directory)
+    if delta is None:
+        delta = DeltaSegment.empty(cfg, update.delta_capacity, dtype=state.data.dtype)
+    if tombstones is None:
+        tombstones = jnp.zeros((state.data.shape[0] + delta.capacity,), bool)
     os.makedirs(directory, exist_ok=True)
-    ckpt.save_checkpoint(directory, 0, {"build_key": build_key, "state": state})
-    meta = {"format": FORMAT, "version": VERSION, "config": config_to_dict(cfg)}
+    ckpt.save_checkpoint(
+        directory,
+        0,
+        {
+            "build_key": build_key,
+            "state": state,
+            "delta": delta,
+            "tombstones": tombstones,
+        },
+    )
+    fill = int(delta.fill)
+    meta = {
+        "format": FORMAT,
+        "version": VERSION,
+        "config": config_to_dict(cfg),
+        "update": update_to_dict(update),
+        "segments": [
+            {"kind": "main", "rows": int(state.data.shape[0]), "sealed": True},
+            {
+                "kind": "delta",
+                "capacity": int(delta.capacity),
+                "fill": fill,
+                "sealed": False,
+            },
+        ],
+        "tombstone_count": int(np.asarray(tombstones).sum()),
+    }
     tmp = os.path.join(directory, _META + ".tmp")
     with open(tmp, "w") as f:
         json.dump(meta, f, indent=2)
@@ -92,8 +163,12 @@ def save_index(directory: str, state: ALSHIndex, build_key, cfg: IndexConfig) ->
     return directory
 
 
-def load_index(directory: str) -> tuple[ALSHIndex, "jnp.ndarray", IndexConfig]:
-    """Restore (state, build_key, config) from a directory alone."""
+def load_index(
+    directory: str | os.PathLike,
+) -> tuple[ALSHIndex, "jnp.ndarray", IndexConfig, UpdateSpec, DeltaSegment, "jnp.ndarray"]:
+    """Restore (state, build_key, config, update, delta, tombstones) from a
+    directory alone. Version-1 directories restore as immutable indexes."""
+    directory = os.fspath(directory)
     meta_path = os.path.join(directory, _META)
     if not os.path.exists(meta_path):
         raise FileNotFoundError(
@@ -106,10 +181,11 @@ def load_index(directory: str) -> tuple[ALSHIndex, "jnp.ndarray", IndexConfig]:
         raise ValueError(
             f"{meta_path} has format {meta.get('format')!r}, expected {FORMAT!r}"
         )
-    if meta.get("version") != VERSION:
+    version = meta.get("version")
+    if version not in _READABLE_VERSIONS:
         raise ValueError(
-            f"{meta_path} is format version {meta.get('version')!r}; this build "
-            f"reads version {VERSION} — migrate the directory or upgrade"
+            f"{meta_path} is format version {version!r}; this build reads "
+            f"versions {_READABLE_VERSIONS} — migrate the directory or upgrade"
         )
     cfg = config_from_dict(meta["config"])
     step = ckpt.latest_step(directory)
@@ -118,18 +194,37 @@ def load_index(directory: str) -> tuple[ALSHIndex, "jnp.ndarray", IndexConfig]:
             f"no committed checkpoint step under {directory!r} (aborted save?)"
         )
     # template leaves are placeholders — shapes/dtypes come from the payload
-    tree = ckpt.restore_checkpoint(
-        directory, step, {"build_key": jnp.zeros((), jnp.uint32), "state": _state_template()}
-    )
+    template = {"build_key": jnp.zeros((), jnp.uint32), "state": _state_template()}
+    if version >= 2:
+        template["delta"] = _delta_template()
+        template["tombstones"] = jnp.zeros((), bool)
+    tree = ckpt.restore_checkpoint(directory, step, template)
     state = tree["state"]
-    _check_consistent(state, cfg, meta_path)
-    return state, tree["build_key"], cfg
+    if version >= 2:
+        update = update_from_dict(meta["update"])
+        delta = tree["delta"]
+        tombstones = tree["tombstones"]
+    else:  # pre-lifecycle directory: immutable, no delta, nothing deleted
+        update = UpdateSpec()
+        delta = DeltaSegment.empty(cfg, 0, dtype=state.data.dtype)
+        tombstones = jnp.zeros((state.data.shape[0],), bool)
+    _check_consistent(state, delta, tombstones, cfg, update, meta, meta_path)
+    return state, tree["build_key"], cfg, update, delta, tombstones
 
 
-def _check_consistent(state: ALSHIndex, cfg: IndexConfig, meta_path: str) -> None:
+def _check_consistent(
+    state: ALSHIndex,
+    delta: DeltaSegment,
+    tombstones,
+    cfg: IndexConfig,
+    update: UpdateSpec,
+    meta: dict,
+    meta_path: str,
+) -> None:
     """Reject directories whose meta and array payload disagree (e.g. a torn
     overwrite of an existing directory with a different geometry)."""
     n = state.data.shape[0]
+    cap = delta.capacity
     want = {
         "tables.folded": ((cfg.n_hashes, cfg.d, cfg.M + 1), state.tables.folded.shape),
         "tables.offsets": ((cfg.n_hashes,), state.tables.offsets.shape),
@@ -138,6 +233,10 @@ def _check_consistent(state: ALSHIndex, cfg: IndexConfig, meta_path: str) -> Non
         "perm": ((cfg.L, n + cfg.max_candidates), state.perm.shape),
         "data": ((n, cfg.d), state.data.shape),
         "levels": ((n, cfg.d), state.levels.shape),
+        "delta.data": ((update.delta_capacity, cfg.d), delta.data.shape),
+        "delta.levels": ((update.delta_capacity, cfg.d), delta.levels.shape),
+        "delta.keys": ((cfg.L, update.delta_capacity), delta.keys.shape),
+        "tombstones": ((n + cap,), tombstones.shape),
     }
     bad = {k: v for k, v in want.items() if tuple(v[1]) != v[0]}
     if bad:
@@ -146,3 +245,23 @@ def _check_consistent(state: ALSHIndex, cfg: IndexConfig, meta_path: str) -> Non
             f"{meta_path} does not describe the stored arrays ({detail}) — "
             "the directory was probably partially overwritten; re-save the index"
         )
+    if meta.get("version", 1) >= 2:
+        seg = {s["kind"]: s for s in meta.get("segments", [])}
+        fill = int(delta.fill)
+        mseg = seg.get("delta", {})
+        if (
+            mseg.get("capacity") != cap
+            or not (0 <= fill <= cap)
+            or mseg.get("fill") != fill
+        ):
+            raise ValueError(
+                f"{meta_path} segment manifest disagrees with the stored delta "
+                f"(manifest capacity/fill {mseg.get('capacity')}/{mseg.get('fill')}, "
+                f"stored {cap}/{fill}) — the directory was probably partially "
+                "overwritten; re-save the index"
+            )
+        if seg.get("main", {}).get("rows") != n:
+            raise ValueError(
+                f"{meta_path} segment manifest says {seg.get('main', {}).get('rows')} "
+                f"main rows but the payload stores {n} — re-save the index"
+            )

@@ -1,4 +1,4 @@
-"""QuerySpec — the query-time policy object of the ``repro.api`` facade.
+"""QuerySpec / UpdateSpec — the policy objects of the ``repro.api`` facade.
 
 One ``Index.query(q, w, spec)`` call reaches every execution strategy; the
 spec's *fields* select the behavior, so callers never pick a code path by
@@ -74,3 +74,45 @@ class QuerySpec:
                     f"QuerySpec.max_flips must be a non-negative int, "
                     f"got {self.max_flips!r}"
                 )
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateSpec:
+    """Build-time mutability policy of an :class:`~repro.api.Index`.
+
+    The lifecycle memory model is *segmented*: the sealed, sorted main
+    segment built by ``Index.build`` never changes; a fixed-capacity delta
+    segment absorbs inserts (hashed with the same tables, never sorted) and
+    a tombstone bitmap absorbs deletes. ``delta_capacity`` is the STATIC
+    size of the delta segment — it fixes every array shape, which is what
+    lets insert/delete/query run under jit with no retrace as the index
+    mutates. ``Index.compact()`` merges the delta and drops tombstoned rows
+    into a fresh sealed segment when the delta fills up.
+
+    Attributes:
+      delta_capacity: delta-segment slots (rows insertable before a
+        compact). 0 (default) = classic immutable index: insert/delete
+        raise, query takes the sealed fast path with zero overhead.
+      compact_threshold: advisory fill fraction at which
+        ``Index.needs_compact`` flips true (streaming ingest loops poll it;
+        nothing compacts automatically).
+    """
+
+    delta_capacity: int = 0
+    compact_threshold: float = 0.75
+
+    def __post_init__(self):
+        if not isinstance(self.delta_capacity, int) or self.delta_capacity < 0:
+            raise ValueError(
+                f"UpdateSpec.delta_capacity must be a non-negative int, "
+                f"got {self.delta_capacity!r}"
+            )
+        if not (0.0 < self.compact_threshold <= 1.0):
+            raise ValueError(
+                f"UpdateSpec.compact_threshold must be in (0, 1], "
+                f"got {self.compact_threshold!r}"
+            )
+
+    @property
+    def mutable(self) -> bool:
+        return self.delta_capacity > 0

@@ -53,6 +53,9 @@ class RetrievalConfig:
     max_candidates: int = 64
     topk: int = 8
     interp_lambda: float = 0.25  # logit interpolation weight
+    # > 0 makes the datastore index mutable (streaming ingest of new
+    # (hidden-state, token) records during serving; see runtime.retrieval)
+    delta_capacity: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

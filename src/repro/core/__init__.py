@@ -45,7 +45,17 @@ from repro.core.theory import (
     rho,
     success_probability,
 )
-from repro.core.index import ALSHIndex, IndexConfig, QueryResult, build_index, query_index
+from repro.core.index import (
+    ALSHIndex,
+    DeltaSegment,
+    IndexConfig,
+    QueryResult,
+    build_index,
+    delta_insert,
+    query_index,
+    query_index_segmented,
+    tombstone_ids,
+)
 
 __all__ = [
     "FAMILIES",
@@ -74,8 +84,12 @@ __all__ = [
     "rho",
     "success_probability",
     "ALSHIndex",
+    "DeltaSegment",
     "IndexConfig",
     "QueryResult",
     "build_index",
+    "delta_insert",
     "query_index",
+    "query_index_segmented",
+    "tombstone_ids",
 ]

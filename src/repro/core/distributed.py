@@ -34,7 +34,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.hash_families import PrefixTables
-from repro.core.index import ALSHIndex, IndexConfig, build_index
+from repro.core.index import (
+    ALSHIndex,
+    DeltaSegment,
+    IndexConfig,
+    build_index,
+    hash_rows,
+)
 
 
 class ShardedQueryResult(NamedTuple):
@@ -58,6 +64,49 @@ def local_index_specs(mesh: Mesh) -> ALSHIndex:
         data=P(axes, None),  # (n_local, d)
         levels=P(axes, None),  # (n_local, d)
     )
+
+
+def local_delta_specs(mesh: Mesh) -> DeltaSegment:
+    """Per-leaf PartitionSpecs of a shard-private DeltaSegment bundle: each
+    device owns ``cap`` delta slots; ``fill`` is one counter per shard."""
+    axes = tuple(mesh.axis_names)
+    return DeltaSegment(
+        data=P(axes, None),  # (S·cap, d) -> local (cap, d)
+        levels=P(axes, None),
+        keys=P(None, axes),  # (L, S·cap) -> local (L, cap)
+        fill=P(axes),  # (S,) -> local (1,)
+    )
+
+
+def make_sharded_delta(
+    cfg: IndexConfig, mesh: Mesh, capacity: int, dtype, n_local: int
+) -> tuple[DeltaSegment, jax.Array]:
+    """Allocate empty per-shard delta segments + the shard-major tombstone
+    bitmap ((S·(n_local+cap),): shard s owns slice [s·(n_local+cap), ...))."""
+    S = mesh.devices.size
+    axes = tuple(mesh.axis_names)
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    delta = DeltaSegment(
+        data=put(jnp.zeros((S * capacity, cfg.d), dtype), P(axes, None)),
+        levels=put(jnp.zeros((S * capacity, cfg.d), jnp.int32), P(axes, None)),
+        keys=put(jnp.zeros((cfg.L, S * capacity), jnp.int32), P(None, axes)),
+        fill=put(jnp.zeros((S,), jnp.int32), P(axes)),
+    )
+    tombstones = put(jnp.zeros((S * (n_local + capacity),), bool), P(axes))
+    return delta, tombstones
+
+
+def _shard_rank(axes, mesh) -> jax.Array:
+    """Linearized shard rank inside a shard_map body (row-major over axes)."""
+    rank = jnp.zeros((), jnp.int32)
+    mul = 1
+    for ax in reversed(axes):
+        rank = rank + jax.lax.axis_index(ax) * mul
+        mul *= mesh.shape[ax]  # static size (lax.axis_size needs jax>=0.4.38)
+    return rank
 
 
 def build_local_indexes(
@@ -84,15 +133,18 @@ def build_local_indexes(
 def _globalize_and_merge(res, axes, mesh, k, n_local, merge_hierarchical):
     """Inside a query shard_map body: local QueryResult -> merged globals.
 
-    Offsets local ids by the shard's rank, then top-k-merges along each mesh
-    axis innermost-first (hierarchical) or across the whole mesh at once.
+    Maps local ids to global ids — main row i on shard s is ``s·n_local + i``
+    (rows are contiguously partitioned); delta slot t on shard s is
+    ``S·n_local + t·S + s`` (inserts route round-robin, so the t-th slot of
+    shard s held the (t·S + s)-th insert) — then top-k-merges along each
+    mesh axis innermost-first (hierarchical) or across the whole mesh at
+    once.
     """
-    rank = jnp.zeros((), jnp.int32)
-    mul = 1
-    for ax in reversed(axes):
-        rank = rank + jax.lax.axis_index(ax) * mul
-        mul *= mesh.shape[ax]  # static size (lax.axis_size needs jax>=0.4.38)
-    gids = jnp.where(res.ids >= 0, res.ids + rank * n_local, -1)
+    rank = _shard_rank(axes, mesh)
+    S = mesh.devices.size
+    main_g = res.ids + rank * n_local
+    delta_g = S * n_local + (res.ids - n_local) * S + rank
+    gids = jnp.where(res.ids < 0, -1, jnp.where(res.ids < n_local, main_g, delta_g))
     d, i, nc = res.dists, gids, res.n_candidates
 
     def merge_axis(d, i, nc, ax):
@@ -121,35 +173,204 @@ def sharded_index_query(
     spec=None,
     k: int = 10,
     merge_hierarchical: bool = True,
+    delta_sharded: DeltaSegment | None = None,
+    tombstones_sharded: jax.Array | None = None,
+    update=None,
 ):
     """Query prebuilt shard-local indexes (from ``build_local_indexes``).
 
     ``spec`` (a :class:`repro.api.QuerySpec`) selects the shard-local
     execution strategy — probe, multiprobe, or exact — so the sharded
     service exposes the same policy surface as a single-host ``Index``.
+
+    With ``delta_sharded``/``tombstones_sharded`` (a mutable
+    ``ShardedIndex``), each shard runs the two-segment probe against its
+    private delta and tombstone slice; merged ids use the global id scheme
+    of ``_globalize_and_merge``.
     """
-    from repro.api import Index, QuerySpec  # facade (lazy: api builds on core)
+    from repro.api import Index, QuerySpec, UpdateSpec  # facade (lazy: api builds on core)
 
     if spec is None:
         spec = QuerySpec(k=k)
     axes = tuple(mesh.axis_names)
-    n_local = index_sharded.data.shape[0] // mesh.devices.size
+    S = mesh.devices.size
+    n_local = index_sharded.data.shape[0] // S
 
-    def local(idx_local, q, w):
-        # build_key is irrelevant for querying — any placeholder works
-        facade = Index(state=idx_local, build_key=jnp.zeros((2,), jnp.uint32), config=cfg)
+    if delta_sharded is None:
+
+        def local(idx_local, q, w):
+            # build_key is irrelevant for querying — any placeholder works
+            facade = Index(
+                state=idx_local, build_key=jnp.zeros((2,), jnp.uint32), config=cfg
+            )
+            res = facade.query(q, w, spec)
+            return _globalize_and_merge(
+                res, axes, mesh, spec.k, n_local, merge_hierarchical
+            )
+
+        fn = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(local_index_specs(mesh), P(), P()),
+            out_specs=(P(), P(), P()),
+            check_rep=False,
+        )
+        d, i, nc = fn(index_sharded, queries, weights)
+        return ShardedQueryResult(dists=d, ids=i, n_candidates=nc)
+
+    cap = delta_sharded.data.shape[0] // S
+    local_update = (
+        update
+        if update is not None and update.delta_capacity == cap
+        else UpdateSpec(delta_capacity=cap)
+    )
+
+    def local_mut(idx_local, delta_local, ts_local, q, w):
+        facade = Index(
+            state=idx_local,
+            build_key=jnp.zeros((2,), jnp.uint32),
+            config=cfg,
+            update=local_update,
+            delta=DeltaSegment(
+                data=delta_local.data,
+                levels=delta_local.levels,
+                keys=delta_local.keys,
+                fill=delta_local.fill.reshape(()),
+            ),
+            tombstones=ts_local,
+        )
         res = facade.query(q, w, spec)
-        return _globalize_and_merge(res, axes, mesh, spec.k, n_local, merge_hierarchical)
+        return _globalize_and_merge(
+            res, axes, mesh, spec.k, n_local, merge_hierarchical
+        )
+
+    fn = shard_map(
+        local_mut,
+        mesh=mesh,
+        in_specs=(local_index_specs(mesh), local_delta_specs(mesh), P(axes), P(), P()),
+        out_specs=(P(), P(), P()),
+        check_rep=False,
+    )
+    d, i, nc = fn(index_sharded, delta_sharded, tombstones_sharded, queries, weights)
+    return ShardedQueryResult(dists=d, ids=i, n_candidates=nc)
+
+
+def sharded_delta_insert(
+    index_sharded: ALSHIndex,
+    delta_sharded: DeltaSegment,
+    rows: jax.Array,
+    cfg: IndexConfig,
+    mesh: Mesh,
+    impl: str = "auto",
+) -> tuple[DeltaSegment, jax.Array]:
+    """Insert rows into per-shard delta segments, routed by global id.
+
+    The j-th row of the stream gets global id ``n_main_global + e`` (e =
+    running insert count); its owner is shard ``e % S`` and its slot is
+    ``e // S`` — round-robin striping, so every shard's delta fills evenly
+    and the single-host id scheme is preserved. Each shard hashes its own
+    rows with the replicated tables (O(H·d·m/S) per shard, no resort).
+
+    Returns (new delta_sharded, (m,) global ids; -1 where the owning
+    shard's delta was full).
+    """
+    S = mesh.devices.size
+    axes = tuple(mesh.axis_names)
+    n_local = index_sharded.data.shape[0] // S
+    cap = delta_sharded.data.shape[0] // S
+    n_main_global = n_local * S
+    m = rows.shape[0]
+    B = -(-m // S)  # rows per shard this call
+
+    # next insert position: all shards filled round-robin from e=0, so the
+    # resume phase is the total fill (drops only happen when EVERY later
+    # shard is full too, keeping fills within one stripe of each other)
+    phase = (jnp.sum(delta_sharded.fill) % S).astype(jnp.int32)
+    rows_p = jnp.pad(rows.astype(delta_sharded.data.dtype), ((0, B * S - m), (0, 0)))
+    valid = jnp.arange(B * S, dtype=jnp.int32) < m
+    # J[s, t] = stream position routed to shard s, slot offset t
+    s_idx = jnp.arange(S, dtype=jnp.int32)[:, None]
+    t_idx = jnp.arange(B, dtype=jnp.int32)[None, :]
+    J = ((s_idx - phase) % S) + t_idx * S  # (S, B)
+    rows_routed = jnp.take(rows_p, J.reshape(-1), axis=0)  # (S·B, d)
+    valid_routed = jnp.take(valid, J.reshape(-1))  # (S·B,)
+
+    def local(idx_local, delta_local, rows_s, valid_s):
+        rank = _shard_rank(axes, mesh)
+        rows_s = rows_s.reshape(B, -1)
+        valid_s = valid_s.reshape(B)
+        keys, levels = hash_rows(idx_local, rows_s, cfg, impl=impl)  # (L, B), (B, d)
+        fill = delta_local.fill.reshape(())
+        n_valid = jnp.sum(valid_s.astype(jnp.int32))  # valid rows are a prefix
+        t = jnp.arange(B, dtype=jnp.int32)
+        slot = fill + t
+        write = (t < n_valid) & (slot < cap)
+        tgt = jnp.where(write, slot, cap)  # out-of-capacity -> dropped
+        new_delta = DeltaSegment(
+            data=delta_local.data.at[tgt].set(rows_s, mode="drop"),
+            levels=delta_local.levels.at[tgt].set(levels, mode="drop"),
+            keys=delta_local.keys.at[:, tgt].set(keys, mode="drop"),
+            fill=jnp.minimum(jnp.asarray(cap, jnp.int32), fill + n_valid).reshape(1),
+        )
+        ids = jnp.where(write, n_main_global + slot * S + rank, -1)
+        return new_delta, ids.reshape(1, B)
 
     fn = shard_map(
         local,
         mesh=mesh,
-        in_specs=(local_index_specs(mesh), P(), P()),
-        out_specs=(P(), P(), P()),
+        in_specs=(local_index_specs(mesh), local_delta_specs(mesh), P(axes), P(axes)),
+        out_specs=(local_delta_specs(mesh), P(axes, None)),
         check_rep=False,
     )
-    d, i, nc = fn(index_sharded, queries, weights)
-    return ShardedQueryResult(dists=d, ids=i, n_candidates=nc)
+    new_delta, ids_mat = fn(index_sharded, delta_sharded, rows_routed, valid_routed)
+    j = jnp.arange(m, dtype=jnp.int32)
+    ids = ids_mat[(phase + j) % S, j // S]  # back to stream order
+    return new_delta, ids
+
+
+def sharded_tombstone(
+    tombstones_sharded: jax.Array,
+    gids: jax.Array,
+    delta_fill: jax.Array,
+    mesh: Mesh,
+    n_local: int,
+    cap: int,
+) -> jax.Array:
+    """Tombstone global ids on their owning shards (others drop them).
+
+    Owner/local-slot mapping inverts ``_globalize_and_merge``: main gid g
+    lives on shard ``g // n_local`` at slot ``g % n_local``; delta gid
+    ``n_main_global + e`` lives on shard ``e % S`` at slot
+    ``n_local + e // S``. Unknown gids — negative, out of range, or naming
+    a delta slot no insert has assigned yet (slot >= the owner's fill) —
+    are ignored, matching single-host ``tombstone_ids``.
+    """
+    S = mesh.devices.size
+    axes = tuple(mesh.axis_names)
+    n_main_global = n_local * S
+
+    def local(ts_local, g, fill_local):
+        rank = _shard_rank(axes, mesh)
+        fill = fill_local.reshape(())
+        safe = jnp.maximum(g, 0)
+        is_main = (g >= 0) & (g < n_main_global)
+        in_delta = (g >= n_main_global) & (g < n_main_global + cap * S)
+        e = safe - n_main_global
+        in_delta = in_delta & (e // S < fill)  # unassigned slots: ignored
+        owner = jnp.where(is_main, safe // n_local, e % S)
+        local_slot = jnp.where(is_main, safe % n_local, n_local + e // S)
+        mine = (is_main | in_delta) & (owner == rank)
+        idx = jnp.where(mine, local_slot, n_local + cap)  # miss -> dropped
+        return ts_local.at[idx].set(True, mode="drop")
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axes), P(), P(axes)),
+        out_specs=P(axes),
+        check_rep=False,
+    )
+    return fn(tombstones_sharded, gids, delta_fill)
 
 
 def sharded_query(

@@ -129,9 +129,165 @@ class ALSHIndex:
 
 
 class QueryResult(NamedTuple):
-    dists: jax.Array  # (b, k) ascending d_w^l1 (inf where fewer than k found)
+    """Batched k-NN result.
+
+    Invalid-slot contract (all query paths, all backends): a slot is invalid
+    iff ``ids == -1`` iff ``dists == +inf``. ``-1`` is the ONLY user-facing
+    invalid sentinel — the internal candidate sentinels (``n``, ``n + C``)
+    used by the probe/dedupe stages never escape a QueryResult.
+    """
+
+    dists: jax.Array  # (b, k) ascending d_w^l1 (+inf where fewer than k found)
     ids: jax.Array  # (b, k) point ids (-1 where invalid)
     n_candidates: jax.Array  # (b,) unique candidates examined — sublinearity metric
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeltaSegment:
+    """Fixed-capacity unsealed segment: rows inserted after the main build.
+
+    Rows are hashed at insert time with the SAME tables/mixers as the main
+    segment (re-derived from the persisted build key on load/shard), so a
+    query's per-table keys are valid against both segments. Unlike the main
+    segment the delta is never sorted — it is probed by a dense key match
+    over at most ``capacity`` slots, which keeps ``insert`` an O(H·d·m)
+    hash + scatter with NO re-sort, and keeps every shape static so
+    insert/delete/query jit without retracing as the fill level moves.
+
+    Slots are append-only: deletes tombstone, they never free a slot — only
+    ``compact()`` reclaims space (and is the only place a sort happens).
+
+    ``fill`` is a device scalar (shape ``()``, or ``(1,)`` for the per-shard
+    view inside ``shard_map``) so the fill level is data, not Python state.
+    """
+
+    data: jax.Array  # (cap, d) inserted rows (zeros past fill)
+    levels: jax.Array  # (cap, d) int32 lattice points of inserted rows
+    keys: jax.Array  # (L, cap) int32 per-table bucket keys of inserted rows
+    fill: jax.Array  # () int32 — slots used (append-only)
+
+    def tree_flatten(self):
+        return (self.data, self.levels, self.keys, self.fill), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+    @classmethod
+    def empty(cls, cfg: "IndexConfig", capacity: int, dtype=jnp.float32) -> "DeltaSegment":
+        return cls(
+            data=jnp.zeros((capacity, cfg.d), dtype),
+            levels=jnp.zeros((capacity, cfg.d), jnp.int32),
+            keys=jnp.zeros((cfg.L, capacity), jnp.int32),
+            fill=jnp.zeros((), jnp.int32),
+        )
+
+
+def hash_rows(
+    index: ALSHIndex, rows: jax.Array, cfg: IndexConfig, impl: str = "auto"
+) -> tuple[jax.Array, jax.Array]:
+    """Hash new data rows with the index's own tables: (m, d) ->
+    ((L, m) int32 keys, (m, d) int32 levels). This is what makes delta rows
+    query-compatible with the sealed main segment."""
+    levels = transforms.discretize(rows, cfg.space)
+    keys = _keys_for(levels, None, index.tables, cfg, index.mixers, impl=impl).T
+    return keys, levels
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
+def delta_insert(
+    index: ALSHIndex,
+    delta: DeltaSegment,
+    rows: jax.Array,
+    cfg: IndexConfig,
+    impl: str = "auto",
+) -> tuple[DeltaSegment, jax.Array]:
+    """Append rows to the delta segment (functional).
+
+    rows: (m, d). Returns (new delta, (m,) assigned ids) where ids are
+    ``n_main + slot`` and ``-1`` for rows that did not fit (delta full —
+    compact() and retry). Static-shape: jit-stable across fill levels.
+    """
+    m = rows.shape[0]
+    cap = delta.capacity
+    keys, levels = hash_rows(index, rows, cfg, impl=impl)  # (L, m), (m, d)
+    slots = delta.fill + jnp.arange(m, dtype=jnp.int32)  # (m,)
+    ok = slots < cap
+    tgt = jnp.where(ok, slots, cap)  # out-of-capacity -> dropped by scatter
+    new = DeltaSegment(
+        data=delta.data.at[tgt].set(rows.astype(delta.data.dtype), mode="drop"),
+        levels=delta.levels.at[tgt].set(levels, mode="drop"),
+        keys=delta.keys.at[:, tgt].set(keys, mode="drop"),
+        fill=jnp.minimum(jnp.asarray(cap, jnp.int32), delta.fill + m),
+    )
+    ids = jnp.where(ok, index.n + slots, -1).astype(jnp.int32)
+    return new, ids
+
+
+@partial(jax.jit, static_argnames=("n_main",))
+def tombstone_ids(
+    tombstones: jax.Array, ids: jax.Array, n_main: int, fill: jax.Array
+) -> jax.Array:
+    """Set tombstone bits for ``ids`` (functional).
+
+    Ids that name no row — negative, past the delta capacity, or in the
+    UNFILLED delta range ``[n_main + fill, n_main + cap)`` — are ignored:
+    tombstoning an unassigned slot would silently kill the row a future
+    insert places there."""
+    n_tot = tombstones.shape[0]
+    ids = jnp.asarray(ids, jnp.int32).reshape(-1)
+    assigned = (ids >= 0) & (ids < n_main + fill) & (ids < n_tot)
+    idx = jnp.where(assigned, ids, n_tot)
+    return tombstones.at[idx].set(True, mode="drop")
+
+
+def _delta_candidates(
+    probe_keys: jax.Array,
+    delta: DeltaSegment,
+    live: jax.Array,
+    n_main: int,
+    sentinel: int,
+) -> jax.Array:
+    """Dense delta probe: which delta slots collide with the query's keys.
+
+    probe_keys: (b, L) single-probe keys or (b, L, P) multiprobe keys.
+    live: (cap,) bool — slot filled and not tombstoned.
+    Returns (b, cap) candidate ids (``n_main + slot``), ``sentinel`` where
+    the slot doesn't collide or isn't live. A slot is a candidate iff its
+    key matches one of the probe keys IN THE SAME TABLE — exactly the
+    predicate the sorted-window probe applies to the main segment.
+    """
+    cap = delta.capacity
+    b = probe_keys.shape[0]
+    if cap == 0:
+        return jnp.zeros((b, 0), jnp.int32)
+    pk = probe_keys if probe_keys.ndim == 3 else probe_keys[:, :, None]  # (b, L, P)
+    match = jnp.any(
+        pk[:, :, :, None] == delta.keys[None, :, None, :], axis=(1, 2)
+    )  # (b, cap)
+    slot_ids = n_main + jnp.arange(cap, dtype=jnp.int32)
+    return jnp.where(match & live[None, :], slot_ids[None, :], sentinel).astype(
+        jnp.int32
+    )
+
+
+def _mask_dead(cand: jax.Array, tombstones: jax.Array, n_main: int, sentinel: int) -> jax.Array:
+    """Zap probe-window padding (ids >= n_main) and tombstoned main ids to
+    ``sentinel`` BEFORE re-rank, so deleted rows can never reach a result."""
+    n_tot = tombstones.shape[0]
+    dead = tombstones[jnp.minimum(cand, n_tot - 1)]
+    return jnp.where((cand < n_main) & ~dead, cand, sentinel)
+
+
+def delta_live_mask(delta: DeltaSegment, tombstones: jax.Array, n_main: int) -> jax.Array:
+    """(cap,) bool: slot filled and not tombstoned."""
+    cap = delta.capacity
+    return (jnp.arange(cap, dtype=jnp.int32) < delta.fill) & ~tombstones[n_main:]
 
 
 def _combine_codes(codes_lk: jax.Array, mixers: jax.Array, family: str, K: int) -> jax.Array:
@@ -218,6 +374,24 @@ def _dedupe_candidates(cand: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
     return jnp.sort(jnp.where(valid, cand, n), axis=1), jnp.sum(valid, axis=1)
 
 
+def rerank_topk(
+    data: jax.Array,
+    cand: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+    n_valid: int,
+) -> QueryResult:
+    """Shared rerank tail over an arbitrary row table: dedupe → fused
+    gather/re-rank/top-k. ``cand`` (b, P) raw ids, entries >= ``n_valid``
+    are padding; ``data`` has at least ``n_valid`` rows."""
+    from repro.kernels import ops
+
+    cand, n_candidates = _dedupe_candidates(cand, n_valid)
+    dists, ids = ops.gather_rerank_topk(data, cand, queries, weights, k)
+    return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
+
+
 def fused_rerank_topk(
     index: ALSHIndex,
     cand: jax.Array,
@@ -227,11 +401,31 @@ def fused_rerank_topk(
 ) -> QueryResult:
     """Shared probe tail: dedupe → fused gather/re-rank/top-k (no (b, P, d)
     candidate tensor). ``cand`` is (b, P) raw probe ids (>= n ⇒ padding)."""
-    from repro.kernels import ops
+    return rerank_topk(index.data, cand, queries, weights, k, index.n)
 
-    cand, n_candidates = _dedupe_candidates(cand, index.n)
-    dists, ids = ops.gather_rerank_topk(index.data, cand, queries, weights, k)
-    return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
+
+def _probe_candidates(
+    index: ALSHIndex,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Single-probe front half: hash queries + window-probe every table.
+
+    Returns ((b, L·C) raw candidate ids, entries >= n ⇒ padding;
+    (b, L) per-table query keys — reused by the delta-segment probe)."""
+    b, d = queries.shape
+    C = cfg.max_candidates
+    qlevels = transforms.discretize(queries, cfg.space)
+    qkeys = _keys_for(qlevels, weights, index.tables, cfg, index.mixers, impl=impl)  # (b, L)
+
+    # probe all (table, query) pairs — vmap over tables, then queries
+    probe = jax.vmap(
+        jax.vmap(_probe_one_table, in_axes=(0, 0, 0, None)), in_axes=(None, None, 0, None)
+    )
+    cand = probe(index.sorted_keys, index.perm, qkeys, C)  # (b, L, C), sentinel = n+C pad id
+    return cand.reshape(b, cfg.L * C), qkeys
 
 
 @partial(jax.jit, static_argnames=("cfg", "k", "impl"))
@@ -250,14 +444,78 @@ def query_index(
       weights: (b, d) float per-query weight vectors (the paper's w — may be negative).
       k: neighbours to return.
     """
-    b, d = queries.shape
-    C = cfg.max_candidates
-    qlevels = transforms.discretize(queries, cfg.space)
-    qkeys = _keys_for(qlevels, weights, index.tables, cfg, index.mixers, impl=impl)  # (b, L)
+    cand, _ = _probe_candidates(index, queries, weights, cfg, impl=impl)
+    return fused_rerank_topk(index, cand, queries, weights, k)
 
-    # probe all (table, query) pairs — vmap over tables, then queries
-    probe = jax.vmap(
-        jax.vmap(_probe_one_table, in_axes=(0, 0, 0, None)), in_axes=(None, None, 0, None)
+
+def segment_table(index: ALSHIndex, delta: DeltaSegment) -> jax.Array:
+    """The (n_main + cap, d) two-segment row table queries re-rank against."""
+    if delta.capacity == 0:
+        return index.data
+    return jnp.concatenate([index.data, delta.data.astype(index.data.dtype)], axis=0)
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "impl"))
+def query_index_segmented(
+    index: ALSHIndex,
+    delta: DeltaSegment,
+    tombstones: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig,
+    k: int = 1,
+    impl: str = "auto",
+) -> QueryResult:
+    """Two-segment ALSH query: sorted-window probe of the sealed main tables
+    + dense key-match probe of the delta segment, tombstoned ids masked to
+    the internal sentinel BEFORE dedupe/re-rank (a deleted row can never
+    appear in a result), then the same fused rerank/top-k tail over the
+    concatenated row table. Returned ids are global: main rows keep their
+    build ids ``[0, n_main)``; delta slot ``s`` is ``n_main + s``.
+
+    Static-shape in everything but the fill level and tombstone bits, so
+    repeated insert→query→delete cycles at fixed capacity reuse one
+    compiled program.
+    """
+    n_main = index.n
+    cap = delta.capacity
+    n_tot = n_main + cap
+    cand, qkeys = _probe_candidates(index, queries, weights, cfg, impl=impl)
+    cand = _mask_dead(cand, tombstones, n_main, n_tot)
+    if cap:
+        live = delta_live_mask(delta, tombstones, n_main)
+        cand = jnp.concatenate(
+            [cand, _delta_candidates(qkeys, delta, live, n_main, n_tot)], axis=1
+        )
+    return rerank_topk(segment_table(index, delta), cand, queries, weights, k, n_tot)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def query_exact_segmented(
+    index: ALSHIndex,
+    delta: DeltaSegment,
+    tombstones: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int = 1,
+) -> QueryResult:
+    """Exact oracle over the LIVE rows of both segments: every filled,
+    non-tombstoned row is a candidate of the fused rerank tail. Reports the
+    live-row count as ``n_candidates`` (what the scan actually examined)."""
+    n_main = index.n
+    cap = delta.capacity
+    n_tot = n_main + cap
+    live = ~tombstones[:n_main]
+    if cap:
+        live = jnp.concatenate([live, delta_live_mask(delta, tombstones, n_main)])
+    ids_row = jnp.where(live, jnp.arange(n_tot, dtype=jnp.int32), n_tot)
+    b = queries.shape[0]
+    # ascending with sentinels packed last — the chunked tail skips dead blocks
+    cand = jnp.broadcast_to(jnp.sort(ids_row)[None, :], (b, n_tot))
+    from repro.kernels import ops
+
+    dists, ids = ops.gather_rerank_topk(
+        segment_table(index, delta), cand, queries, weights, k
     )
-    cand = probe(index.sorted_keys, index.perm, qkeys, C)  # (b, L, C), sentinel = n+C pad id
-    return fused_rerank_topk(index, cand.reshape(b, cfg.L * C), queries, weights, k)
+    n_candidates = jnp.broadcast_to(jnp.sum(live).astype(jnp.int32), (b,))
+    return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)

@@ -28,15 +28,22 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import transforms
 from repro.core.families import flip_subsets, get_family
 from repro.core.index import (
     ALSHIndex,
+    DeltaSegment,
     IndexConfig,
     QueryResult,
+    _delta_candidates,
+    _mask_dead,
     _probe_one_table,
+    delta_live_mask,
     fused_rerank_topk,
+    rerank_topk,
+    segment_table,
 )
 from repro.kernels import ops
 
@@ -45,19 +52,17 @@ from repro.kernels import ops
 _flip_subsets = flip_subsets
 
 
-@partial(jax.jit, static_argnames=("cfg", "k", "n_probes", "max_flips"))
-def query_multiprobe(
+def _multiprobe_candidates(
     index: ALSHIndex,
     queries: jax.Array,
     weights: jax.Array,
     cfg: IndexConfig,
-    k: int = 1,
-    n_probes: int = 8,
-    max_flips: int = 3,
-) -> QueryResult:
-    """Multiprobe query: per table, probe the n_probes most likely buckets
-    (query bucket + low-margin perturbations, ordered by the family's
-    ``multiprobe_keys`` strategy)."""
+    n_probes: int,
+    max_flips: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Multiprobe front half: probing sequence + window-probe of every
+    (table, probe) pair. Returns ((b, L·P·C) raw candidate ids, (b, L, P)
+    probe keys — reused by the delta-segment probe)."""
     family = get_family(cfg.family)
     if not family.supports_multiprobe:
         raise ValueError(
@@ -85,6 +90,53 @@ def query_multiprobe(
         in_axes=(None, None, 0, None),
     )
     cand = probe(index.sorted_keys, index.perm, probe_keys, C)  # (b, L, P, C)
-    return fused_rerank_topk(
-        index, cand.reshape(b, L * n_probes * C), queries, weights, k
+    return cand.reshape(b, L * n_probes * C), probe_keys
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "n_probes", "max_flips"))
+def query_multiprobe(
+    index: ALSHIndex,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig,
+    k: int = 1,
+    n_probes: int = 8,
+    max_flips: int = 3,
+) -> QueryResult:
+    """Multiprobe query: per table, probe the n_probes most likely buckets
+    (query bucket + low-margin perturbations, ordered by the family's
+    ``multiprobe_keys`` strategy)."""
+    cand, _ = _multiprobe_candidates(index, queries, weights, cfg, n_probes, max_flips)
+    return fused_rerank_topk(index, cand, queries, weights, k)
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "n_probes", "max_flips"))
+def query_multiprobe_segmented(
+    index: ALSHIndex,
+    delta: DeltaSegment,
+    tombstones: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig,
+    k: int = 1,
+    n_probes: int = 8,
+    max_flips: int = 3,
+) -> QueryResult:
+    """Two-segment multiprobe: the delta match uses the FULL (b, L, P)
+    probing sequence — a delta row is a candidate iff one of the perturbed
+    keys hits it in its own table, exactly the predicate the sorted-window
+    probe applies to the sealed segment. See ``query_index_segmented`` for
+    the id/tombstone contract."""
+    n_main = index.n
+    cap = delta.capacity
+    n_tot = n_main + cap
+    cand, probe_keys = _multiprobe_candidates(
+        index, queries, weights, cfg, n_probes, max_flips
     )
+    cand = _mask_dead(cand, tombstones, n_main, n_tot)
+    if cap:
+        live = delta_live_mask(delta, tombstones, n_main)
+        cand = jnp.concatenate(
+            [cand, _delta_candidates(probe_keys, delta, live, n_main, n_tot)], axis=1
+        )
+    return rerank_topk(segment_table(index, delta), cand, queries, weights, k, n_tot)

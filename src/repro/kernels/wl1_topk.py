@@ -148,7 +148,11 @@ def wl1_scan_topk_pallas(
         scratch_shapes=[pltpu.VMEM((BQ, BNV), jnp.float32)],
         interpret=interpret,
     )(data_p, q_p, w_p)
-    return out_d[:b, :k], out_i[:b, :k]
+    out_d, out_i = out_d[:b, :k], out_i[:b, :k]
+    # invalid-slot contract (QueryResult): ids == -1 ⇔ dists == +inf — a row
+    # whose distance overflowed to +inf reports "not found", matching the
+    # _topk_ascending paths bit-for-bit
+    return out_d, jnp.where(jnp.isfinite(out_d), out_i, -1)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk"))
@@ -188,4 +192,5 @@ def wl1_scan_topk_chunked(
     top_d = jnp.full((b, k), jnp.inf, jnp.float32)
     top_i = jnp.full((b, k), -1, jnp.int32)
     top_d, top_i = jax.lax.fori_loop(0, n_chunks, body, (top_d, top_i))
-    return top_d, top_i
+    # invalid-slot contract (QueryResult): ids == -1 ⇔ dists == +inf
+    return top_d, jnp.where(jnp.isfinite(top_d), top_i, -1)

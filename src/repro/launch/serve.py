@@ -1,4 +1,4 @@
-"""Serving launcher — two modes:
+"""Serving launcher — three modes:
 
   ALSH vector-search service (the paper's workload), served end-to-end
   through the ``repro.api`` Index facade on the fused probe pipeline
@@ -7,10 +7,17 @@
     python -m repro.launch.serve --mode alsh [--n 100000 --d 64 --batches 4]
     python -m repro.launch.serve --mode alsh --multiprobe --probes 8
 
+  Streaming-ingest service — the mutable lifecycle under live traffic:
+  every tick interleaves an insert batch and a retire batch with the query
+  batches, all on one jit-compiled program (fixed delta capacity ⇒ no
+  retrace), compacting when the delta fills past the policy threshold:
+    python -m repro.launch.serve --mode stream --ingest 512 --retire 128 \
+        --delta-capacity 8192
+
   LM decode service with optional ALSH retrieval augmentation:
     python -m repro.launch.serve --mode lm --arch gemma3-1b --reduced --retrieval
 
-Both run real batched requests on local devices; the production mesh path is
+All run real batched requests on local devices; the production mesh path is
 exercised by the dry-run.
 """
 
@@ -66,6 +73,79 @@ def serve_alsh(args):
               f"recall@{svc.topk}~{rec:.2f}")
 
 
+def serve_alsh_stream(args):
+    """Mutable-index service: rows arrive and retire while queries flow."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import Index, QuerySpec, UpdateSpec
+    from repro.configs.paper_alsh import ALSHServiceConfig
+    from repro.distance import recall_at_k
+
+    svc = ALSHServiceConfig(
+        n_per_shard=args.n, d=args.d, K=args.K, L=args.L,
+        query_batch=args.query_batch, topk=args.topk,
+    )
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(jax.random.fold_in(key, 1), (svc.n_per_shard, svc.d))
+    update = UpdateSpec(delta_capacity=args.delta_capacity,
+                        compact_threshold=args.compact_threshold)
+    t0 = time.time()
+    index = Index.build(jax.random.fold_in(key, 2), data, svc.index_config,
+                        update=update)
+    jax.block_until_ready(index.state.sorted_keys)
+    print(f"[stream] built mutable index n={svc.n_per_shard} d={svc.d} "
+          f"delta_capacity={args.delta_capacity} in {time.time()-t0:.2f}s")
+
+    spec = QuerySpec(k=svc.topk)
+    exact = QuerySpec(k=svc.topk, mode="exact")
+    # one compiled program each for the whole service life (static shapes)
+    jquery = jax.jit(lambda ix, q, w: ix.query(q, w, spec))
+    jinsert = jax.jit(lambda ix, rows: ix.insert(rows))
+    jdelete = jax.jit(lambda ix, ids: ix.delete(ids))
+
+    next_retire = 0  # retire oldest main rows first (FIFO churn)
+    for b in range(args.batches):
+        kb = jax.random.fold_in(key, 100 + b)
+        # ingest: new rows enter the delta segment
+        rows = jax.random.uniform(jax.random.fold_in(kb, 0),
+                                  (args.ingest, svc.d))
+        t0 = time.time()
+        index, ids = jinsert(index, rows)
+        jax.block_until_ready(ids)
+        t_ins = time.time() - t0
+        # retire: oldest rows tombstone out
+        retire = jnp.arange(next_retire, next_retire + args.retire,
+                            dtype=jnp.int32)
+        next_retire += args.retire
+        index = jdelete(index, retire)
+        # serve queries against the live two-segment view
+        q = jax.random.uniform(jax.random.fold_in(kb, 1), (svc.query_batch, svc.d))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(kb, 2),
+                                      (svc.query_batch, svc.d))) + 0.1
+        t0 = time.time()
+        res = jquery(index, q, w)
+        jax.block_until_ready(res.dists)
+        t_q = time.time() - t0
+        ref = index.query(q[:16], w[:16], exact)
+        rec = recall_at_k(res.ids[:16], ref.ids, svc.topk)
+        fill = index.delta_fill
+        print(f"[stream] tick {b}: +{args.ingest} rows in {t_ins*1e3:.1f} ms "
+              f"({args.ingest/max(t_ins,1e-9):,.0f} rows/s), -{args.retire} retired, "
+              f"{svc.query_batch} queries in {t_q*1e3:.1f} ms "
+              f"({t_q/svc.query_batch*1e6:.1f} us/query) "
+              f"delta={fill}/{args.delta_capacity} recall@{svc.topk}~{rec:.2f}")
+        if index.needs_compact:
+            t0 = time.time()
+            index = index.compact()
+            jax.block_until_ready(index.state.sorted_keys)
+            # compact renumbers survivors to [0, n_live); everything below
+            # next_retire was tombstoned, so the oldest surviving row is 0
+            next_retire = 0
+            print(f"[stream] compacted to n={index.n} (delta emptied) "
+                  f"in {time.time()-t0:.2f}s")
+
+
 def serve_lm(args):
     import jax
     import jax.numpy as jnp
@@ -117,7 +197,7 @@ def serve_lm(args):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["alsh", "lm"], default="alsh")
+    ap.add_argument("--mode", choices=["alsh", "stream", "lm"], default="alsh")
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--retrieval", action="store_true")
@@ -135,9 +215,19 @@ def main():
                     help="serve with QuerySpec(mode='multiprobe')")
     ap.add_argument("--probes", type=int, default=8,
                     help="multiprobe buckets per table")
+    ap.add_argument("--ingest", type=int, default=512,
+                    help="stream mode: rows inserted per tick")
+    ap.add_argument("--retire", type=int, default=128,
+                    help="stream mode: rows tombstoned per tick")
+    ap.add_argument("--delta-capacity", type=int, default=8192,
+                    help="stream mode: delta-segment slots before a compact")
+    ap.add_argument("--compact-threshold", type=float, default=0.75,
+                    help="stream mode: fill fraction that triggers compact")
     args = ap.parse_args()
     if args.mode == "alsh":
         serve_alsh(args)
+    elif args.mode == "stream":
+        serve_alsh_stream(args)
     else:
         serve_lm(args)
 

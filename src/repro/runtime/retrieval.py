@@ -27,14 +27,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.api import Index, QuerySpec
+from repro.api import Index, QuerySpec, UpdateSpec
 from repro.configs.base import RetrievalConfig
 from repro.core import BoundedSpace, IndexConfig
 
 
 class RetrievalState(NamedTuple):
     index: Index  # config-carrying ALSH index over the datastore keys
-    values: jax.Array  # (n,) int32 token ids of datastore records
+    values: jax.Array  # (n + delta_capacity,) int32 token ids of records
     proj: jax.Array  # (d_model, d_key) random key-reduction projection
     default_w: jax.Array  # (d_key,) default per-dimension weights
 
@@ -55,16 +55,52 @@ def build_datastore(
     key, d_model: int, vocab: int, rcfg: RetrievalConfig
 ) -> RetrievalState:
     """Synthetic datastore (examples/tests); real deployments ingest hidden
-    states from a corpus pass with the same machinery."""
+    states from a corpus pass with the same machinery.
+
+    With ``rcfg.delta_capacity > 0`` the index is built mutable and
+    ``values`` is pre-sized for the delta slots, so the datastore can GROW
+    during serving (``extend_datastore``) — the kNN-LM keeps learning from
+    the streams it decodes without an index rebuild."""
     k1, k2, k3, k4 = jax.random.split(key, 4)
     n = rcfg.datastore_size
+    cap = rcfg.delta_capacity
     keys = jax.random.uniform(k1, (n, rcfg.d_key))
     values = jax.random.randint(k2, (n,), 0, vocab, dtype=jnp.int32)
+    values = jnp.concatenate([values, jnp.zeros((cap,), jnp.int32)])
     proj = jax.random.normal(k3, (d_model, rcfg.d_key)) / (d_model**0.5)
     # precision weights: inverse per-dim std of the datastore keys
     w = 1.0 / (jnp.std(keys, axis=0) + 1e-3)
-    index = Index.build(k4, keys, index_config(rcfg))
+    index = Index.build(
+        k4, keys, index_config(rcfg), update=UpdateSpec(delta_capacity=cap)
+    )
     return RetrievalState(index=index, values=values, proj=proj, default_w=w)
+
+
+def extend_datastore(
+    state: RetrievalState, hidden: jax.Array, values: jax.Array
+) -> tuple[RetrievalState, jax.Array]:
+    """Streaming ingest: append (hidden-state, next-token) records.
+
+    Args:
+      state: datastore built with ``rcfg.delta_capacity > 0``.
+      hidden: (m, d_model) hidden states — reduced with the datastore's own
+        projection, then inserted into the delta segment.
+      values: (m,) int32 next-token ids observed after those states.
+
+    Returns (new state, (m,) assigned record ids; -1 where the delta was
+    full — compact offline and rebuild). jit-safe, no retrace across fills.
+    """
+    index, ids = state.index.insert(reduce_key(hidden, state))
+    slot = jnp.where(ids >= 0, ids, state.values.shape[0])
+    new_values = state.values.at[slot].set(values.astype(jnp.int32), mode="drop")
+    return state._replace(index=index, values=new_values), ids
+
+
+def retire_datastore(state: RetrievalState, ids: jax.Array) -> RetrievalState:
+    """Tombstone datastore records (e.g. stale corpus spans) — retrieval
+    stops returning them immediately; space is reclaimed by an offline
+    compact/rebuild."""
+    return state._replace(index=state.index.delete(ids))
 
 
 def reduce_key(hidden: jax.Array, state: RetrievalState) -> jax.Array:

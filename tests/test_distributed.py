@@ -104,6 +104,67 @@ def test_facade_shard_prebuilt_matches_oneshot():
     assert "OK" in out
 
 
+def test_mutable_lifecycle_save_load_shard_parity():
+    """The full lifecycle × persistence × distribution matrix: a mutated
+    index (non-empty delta + tombstones) round-trips through save/load,
+    re-shards from the persisted build_key (which must reproduce the DELTA
+    hashes too), serves bit-identical queries sharded vs single-host with
+    the same global ids, and keeps serving inserts/deletes sharded."""
+    out = _run("""
+        import tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.api import Index, IndexConfig, QuerySpec, UpdateSpec, BoundedSpace
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        n, d, k = 512, 8, 7
+        key = jax.random.PRNGKey(0)
+        data = jax.random.uniform(jax.random.fold_in(key, 0), (n, d))
+        extra = jax.random.uniform(jax.random.fold_in(key, 1), (37, d))
+        q = jax.random.uniform(jax.random.fold_in(key, 2), (5, d))
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (5, d))) + 0.2
+        cfg = IndexConfig(d=d, M=8, K=6, L=10, family="theta",
+                          max_candidates=n + 64, space=BoundedSpace(0., 1., 8.))
+
+        local = Index.build(jax.random.fold_in(key, 9), data, cfg,
+                            update=UpdateSpec(delta_capacity=64))
+        local, ids = local.insert(extra)
+        local = local.delete(jnp.asarray([3, 77, int(ids[4])], jnp.int32))
+
+        with tempfile.TemporaryDirectory() as td:
+            local.save(td)
+            restored = Index.load(td)
+        sharded = restored.shard(mesh)  # replays the delta through the
+                                        # re-derived tables (same build_key)
+        r_l = local.query(q, w, QuerySpec(k=k))
+        r_s = sharded.query(q, w, QuerySpec(k=k))
+        np.testing.assert_array_equal(np.asarray(r_l.ids), np.asarray(r_s.ids))
+        np.testing.assert_array_equal(np.asarray(r_l.dists), np.asarray(r_s.dists))
+        np.testing.assert_array_equal(np.asarray(r_l.n_candidates),
+                                      np.asarray(r_s.n_candidates))
+
+        # lifecycle continues sharded, in lockstep with single-host
+        local2, ids_l = local.insert(extra[:11])
+        sharded2, ids_s = sharded.insert(extra[:11])
+        np.testing.assert_array_equal(np.asarray(ids_l), np.asarray(ids_s))
+        dels = jnp.asarray([int(ids_l[0]), 42], jnp.int32)
+        local2, sharded2 = local2.delete(dels), sharded2.delete(dels)
+        for mode in ("probe", "multiprobe", "exact"):
+            a = local2.query(q, w, QuerySpec(k=k, mode=mode))
+            b = sharded2.query(q, w, QuerySpec(k=k, mode=mode))
+            np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+            np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+        assert not np.isin(np.asarray(dels), np.asarray(b.ids)).any()
+
+        # sharded compact == single-host compact, bit for bit
+        ca, cb = local2.compact(), sharded2.compact()
+        for la, lb in zip(jax.tree_util.tree_leaves(ca.state),
+                          jax.tree_util.tree_leaves(cb.state)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_train_step_on_small_production_mesh():
     out = _run("""
         import dataclasses, jax, jax.numpy as jnp, numpy as np

@@ -1,0 +1,408 @@
+"""Mutable index lifecycle: segmented insert / delete / compact.
+
+The load-bearing invariant (and the reason the delta segment hashes with
+the persisted build tables): after ANY interleaving of insert/delete, query
+results are bit-identical to a fresh ``Index.build`` (same build_key) over
+the surviving rows once ids are mapped through ``live_ids()``; deleted ids
+never appear; ``compact()`` preserves all of it while emptying the delta.
+
+Bit-parity needs candidate windows that never truncate (``max_candidates``
+>= total rows here): under truncation the mutated and fresh indexes keep
+different — equally valid — C-subsets of an oversized bucket.
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    BoundedSpace,
+    Index,
+    IndexConfig,
+    QuerySpec,
+    UpdateSpec,
+)
+
+N = 400
+D = 8
+CAP = 64
+
+
+def _cfg(family="theta", **kw):
+    kw.setdefault("max_candidates", N + CAP)  # no window truncation (parity)
+    kw.setdefault("space", BoundedSpace(0.0, 1.0, 8.0))
+    kw.setdefault("W", 8.0)
+    return IndexConfig(d=D, M=8, K=6, L=10, family=family, **kw)
+
+
+def _problem(rng, salt=0, m=37, b=5):
+    data = jax.random.uniform(jax.random.fold_in(rng, salt), (N, D))
+    extra = jax.random.uniform(jax.random.fold_in(rng, salt + 1), (m, D))
+    q = jax.random.uniform(jax.random.fold_in(rng, salt + 2), (b, D))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, salt + 3), (b, D))) + 0.2
+    return data, extra, q, w
+
+
+def _mutable(rng, data, family="theta", cap=CAP, salt=9):
+    return Index.build(
+        jax.random.fold_in(rng, salt),
+        data,
+        _cfg(family=family),
+        update=UpdateSpec(delta_capacity=cap),
+    )
+
+
+def _assert_parity(index, all_rows, q, w, spec, bkey, cfg):
+    """Mutated-index query == fresh build over survivors (ids mapped)."""
+    live = index.live_ids()
+    fresh = Index.build(bkey, jnp.asarray(all_rows)[live], cfg)
+    got = index.query(q, w, spec)
+    want = fresh.query(q, w, spec)
+    mapped = np.where(np.asarray(want.ids) >= 0, live[np.asarray(want.ids)], -1)
+    np.testing.assert_array_equal(np.asarray(got.ids), mapped)
+    np.testing.assert_array_equal(np.asarray(got.dists), np.asarray(want.dists))
+    np.testing.assert_array_equal(
+        np.asarray(got.n_candidates), np.asarray(want.n_candidates)
+    )
+    return fresh
+
+
+# ---------------------------------------------------------------------------
+# insert
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["theta", "l2"])
+def test_insert_assigns_stable_ids_and_queries_find_rows(rng, family):
+    data, extra, q, w = _problem(rng)
+    index = _mutable(rng, data, family=family)
+    index, ids = index.insert(extra)
+    np.testing.assert_array_equal(np.asarray(ids), N + np.arange(extra.shape[0]))
+    assert index.delta_fill == extra.shape[0]
+    # an inserted row queried exactly comes back as its own nearest neighbour
+    res = index.query(extra[:4], jnp.ones((4, D)), QuerySpec(k=1))
+    np.testing.assert_array_equal(np.asarray(res.ids[:, 0]), np.asarray(ids[:4]))
+    np.testing.assert_allclose(np.asarray(res.dists[:, 0]), 0.0, atol=1e-6)
+
+
+def test_insert_overflow_returns_minus_one(rng):
+    data, extra, _, _ = _problem(rng, m=CAP + 10)
+    index = _mutable(rng, data)
+    index, ids = index.insert(extra)
+    ids = np.asarray(ids)
+    np.testing.assert_array_equal(ids[:CAP], N + np.arange(CAP))
+    np.testing.assert_array_equal(ids[CAP:], -1)
+    assert index.delta_fill == CAP
+
+
+def test_immutable_index_rejects_mutation(rng):
+    data, extra, _, _ = _problem(rng)
+    index = Index.build(jax.random.fold_in(rng, 9), data, _cfg())
+    for op, call in [
+        ("insert", lambda: index.insert(extra)),
+        ("delete", lambda: index.delete(jnp.asarray([0]))),
+        ("compact", lambda: index.compact()),
+    ]:
+        with pytest.raises(ValueError, match="delta_capacity"):
+            call()
+
+
+# ---------------------------------------------------------------------------
+# the parity invariant: mutated == fresh build over survivors
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["theta", "l2"])
+@pytest.mark.parametrize("mode", ["probe", "multiprobe", "exact"])
+def test_interleaved_lifecycle_parity(rng, family, mode):
+    if family == "l2" and mode == "multiprobe":
+        pytest.skip("l2 family does not support multiprobe")
+    data, extra, q, w = _problem(rng)
+    bkey = jax.random.fold_in(rng, 9)
+    index = _mutable(rng, data, family=family)
+    # interleave: insert half, delete some of both segments, insert the rest
+    index, ids1 = index.insert(extra[:20])
+    index = index.delete(jnp.asarray([0, 5, int(ids1[3])], jnp.int32))
+    index, ids2 = index.insert(extra[20:])
+    index = index.delete(jnp.asarray([17, int(ids2[2])], jnp.int32))
+
+    spec = QuerySpec(k=7, mode=mode)
+    all_rows = jnp.concatenate([data, extra])
+    fresh = _assert_parity(index, all_rows, q, w, spec, bkey, _cfg(family=family))
+
+    # deleted ids never appear
+    res = index.query(q, w, spec)
+    dead = {0, 5, 17, int(ids1[3]), int(ids2[2])}
+    assert not dead & set(np.asarray(res.ids).ravel().tolist())
+
+    # compact() preserves the invariant while emptying the delta — and its
+    # state is bit-identical to the fresh build (same key, same sort)
+    compacted = index.compact()
+    assert compacted.delta_fill == 0
+    for a, b in zip(
+        jax.tree_util.tree_leaves(compacted.state),
+        jax.tree_util.tree_leaves(fresh.state),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    got = compacted.query(q, w, spec)
+    want = fresh.query(q, w, spec)
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))
+    np.testing.assert_array_equal(np.asarray(got.dists), np.asarray(want.dists))
+
+
+def test_delete_of_unassigned_id_is_ignored(rng):
+    """Deleting an id no insert has handed out must be a no-op — NOT a
+    pre-tombstone on the slot a future insert will occupy."""
+    data, extra, _, _ = _problem(rng)
+    index = _mutable(rng, data)
+    index = index.delete(jnp.asarray([N + 3, N + CAP + 5, -7], jnp.int32))
+    assert index.n_live == N
+    index, ids = index.insert(extra[:5])
+    res = index.query(extra[:5], jnp.ones((5, D)), QuerySpec(k=1))
+    np.testing.assert_array_equal(np.asarray(res.ids[:, 0]), np.asarray(ids))
+
+
+def test_delete_then_reinsert_distinct_ids(rng):
+    """Deleting delta rows does not free their slots (append-only): new
+    inserts get fresh ids and the tombstoned rows stay gone."""
+    data, extra, q, _ = _problem(rng)
+    index = _mutable(rng, data)
+    index, ids1 = index.insert(extra[:10])
+    index = index.delete(ids1)
+    index, ids2 = index.insert(extra[10:20])
+    assert int(ids2[0]) == N + 10  # slots not reused
+    res = index.query(extra[:10], jnp.ones((10, D)), QuerySpec(k=1))
+    assert not set(np.asarray(ids1).tolist()) & set(np.asarray(res.ids).ravel().tolist())
+
+
+# ---------------------------------------------------------------------------
+# jit stability: one compiled program across the index's life
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_ops_jit_without_retrace(rng):
+    data, extra, q, w = _problem(rng)
+    index = _mutable(rng, data)
+    jq = jax.jit(lambda ix, q, w: ix.query(q, w, QuerySpec(k=5)))
+    jins = jax.jit(lambda ix, rows: ix.insert(rows))
+    jdel = jax.jit(lambda ix, ids: ix.delete(ids))
+    for i in range(4):
+        index, _ = jins(index, extra[i * 8 : (i + 1) * 8])
+        index = jdel(index, jnp.asarray([i * 3], jnp.int32))
+        jq(index, q, w)
+    assert jq._cache_size() == 1
+    assert jins._cache_size() == 1
+    assert jdel._cache_size() == 1
+
+
+def test_index_with_delta_crosses_jit_boundary(rng):
+    data, extra, q, w = _problem(rng)
+    index, _ = _mutable(rng, data).insert(extra)
+    leaves, treedef = jax.tree_util.tree_flatten(index)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.config == index.config and rebuilt.update == index.update
+    want = index.query(q, w, QuerySpec(k=3)).dists
+    got = jax.jit(lambda ix: ix.query(q, w, QuerySpec(k=3)).dists)(index)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# lifecycle × persistence
+# ---------------------------------------------------------------------------
+
+
+def test_build_insert_save_load_query_parity(rng, tmp_path):
+    data, extra, q, w = _problem(rng)
+    index = _mutable(rng, data)
+    index, ids = index.insert(extra)
+    index = index.delete(jnp.asarray([1, int(ids[4])], jnp.int32))
+    want = index.query(q, w, QuerySpec(k=7))
+
+    index.save(tmp_path)  # pathlib.Path accepted
+    back = Index.load(tmp_path)
+    assert back.update == index.update
+    assert back.delta_fill == index.delta_fill
+    got = back.query(q, w, QuerySpec(k=7))
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))
+    np.testing.assert_array_equal(np.asarray(got.dists), np.asarray(want.dists))
+
+    # the lifecycle RESUMES: next insert continues the id sequence
+    back, ids2 = back.insert(extra[:3])
+    np.testing.assert_array_equal(
+        np.asarray(ids2), N + extra.shape[0] + np.arange(3)
+    )
+
+
+def test_manifest_records_segments_and_guards_fill(rng, tmp_path):
+    data, extra, _, _ = _problem(rng)
+    index, _ = _mutable(rng, data).insert(extra)
+    index.save(tmp_path)
+    meta = json.loads((tmp_path / "index.json").read_text())
+    seg = {s["kind"]: s for s in meta["segments"]}
+    assert seg["main"]["rows"] == N
+    assert seg["delta"]["capacity"] == CAP
+    assert seg["delta"]["fill"] == extra.shape[0]
+    # a torn overwrite that changes the fill level must be rejected
+    meta["segments"] = [
+        s if s["kind"] != "delta" else {**s, "fill": 0} for s in meta["segments"]
+    ]
+    (tmp_path / "index.json").write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="manifest disagrees"):
+        Index.load(tmp_path)
+
+
+def test_immutable_roundtrip_stays_immutable(rng, tmp_path):
+    data, _, q, w = _problem(rng)
+    index = Index.build(jax.random.fold_in(rng, 9), data, _cfg())
+    index.save(str(tmp_path))
+    back = Index.load(str(tmp_path))
+    assert not back.mutable
+    with pytest.raises(ValueError, match="delta_capacity"):
+        back.insert(data[:2])
+
+
+# ---------------------------------------------------------------------------
+# query argument validation (satellite: actionable errors, not trace noise)
+# ---------------------------------------------------------------------------
+
+
+def test_query_validates_trailing_dims_and_batch(rng):
+    data, _, q, w = _problem(rng)
+    index = Index.build(jax.random.fold_in(rng, 9), data, _cfg())
+    with pytest.raises(ValueError, match="queries"):
+        index.query(q[:, :-1], w, QuerySpec(k=3))
+    with pytest.raises(ValueError, match="weights"):
+        index.query(q, w[:, :-1], QuerySpec(k=3))
+    with pytest.raises(ValueError, match="batch dims disagree"):
+        index.query(q, w[:-1], QuerySpec(k=3))
+    with pytest.raises(ValueError, match="queries"):
+        index.query(q[0], w[0], QuerySpec(k=3))  # 1-D, not (b, d)
+    with pytest.raises(ValueError, match="queries"):
+        index.query(q[None], w[None], QuerySpec(k=3))  # 3-D, not (b, d)
+    with pytest.raises(ValueError, match="rows"):
+        _mutable(rng, data).insert(data[:, :-1])
+
+
+def test_updatespec_validation():
+    with pytest.raises(ValueError, match="delta_capacity"):
+        UpdateSpec(delta_capacity=-1)
+    with pytest.raises(ValueError, match="compact_threshold"):
+        UpdateSpec(delta_capacity=8, compact_threshold=0.0)
+    assert not UpdateSpec().mutable
+    assert UpdateSpec(delta_capacity=8).mutable
+
+
+# ---------------------------------------------------------------------------
+# invalid-id sentinel unification (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mutable", [False, True])
+@pytest.mark.parametrize("mode", ["probe", "multiprobe", "exact"])
+def test_invalid_slots_are_minus_one_and_inf(rng, mutable, mode):
+    """ids == -1 ⇔ dists == +inf, in every mode, mutable or not — the
+    internal candidate sentinel (n) must never escape a QueryResult."""
+    data = jax.random.uniform(jax.random.fold_in(rng, 0), (5, D)) * 0.1
+    cfg = _cfg(max_candidates=16)
+    if mutable:
+        index = Index.build(
+            jax.random.fold_in(rng, 9), data, cfg, update=UpdateSpec(delta_capacity=8)
+        )
+        index = index.delete(jnp.asarray([2], jnp.int32))
+    else:
+        index = Index.build(jax.random.fold_in(rng, 9), data, cfg)
+    q = jnp.ones((2, D)) * 0.95  # far corner: few/no probe candidates
+    w = jnp.ones((2, D))
+    res = index.query(q, w, QuerySpec(k=9, mode=mode))  # k > live rows
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    assert ((ids == -1) == ~np.isfinite(dists)).all()
+    assert ids.max() < 5 + 8 and ids.min() >= -1  # never the sentinel n
+
+
+def test_all_query_paths_agree_on_overflowed_distances(rng):
+    """A distance that overflows float32 to +inf reports 'not found'
+    (ids == -1) identically on the streaming-scan and gather-rerank paths."""
+    data = jax.random.uniform(jax.random.fold_in(rng, 1), (8, D))
+    q = jnp.zeros((1, D))
+    w = jnp.full((1, D), 3e38)  # w·|x-q| overflows f32
+    from repro.kernels import ops
+
+    d1, i1 = ops.wl1_scan_topk(data, q, w, 3, force="chunked")
+    d2, i2 = ops.wl1_scan_topk(data, q, w, 3, force="ref")
+    cand = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32)[None, :], (1, 8))
+    d3, i3 = ops.gather_rerank_topk(data, cand, q, w, 3, force="auto")
+    for d_, i_ in [(d1, i1), (d2, i2), (d3, i3)]:
+        np.testing.assert_array_equal(np.asarray(i_), -1)
+        assert not np.isfinite(np.asarray(d_)).any()
+
+
+# ---------------------------------------------------------------------------
+# streaming datastore (runtime.retrieval rides the same lifecycle)
+# ---------------------------------------------------------------------------
+
+
+def test_retrieval_datastore_extends_and_retires(rng):
+    from repro.configs import RetrievalConfig
+    from repro.runtime import retrieval as rt
+
+    rcfg = RetrievalConfig(
+        datastore_size=256, d_key=8, K=6, L=8, topk=4, delta_capacity=32
+    )
+    state = rt.build_datastore(jax.random.fold_in(rng, 0), 16, 50, rcfg)
+    assert state.index.mutable
+    assert state.values.shape == (256 + 32,)
+
+    hidden = jax.random.normal(jax.random.fold_in(rng, 1), (5, 16))
+    toks = jnp.arange(5, dtype=jnp.int32) + 40
+    state2, ids = rt.extend_datastore(state, hidden, toks)
+    np.testing.assert_array_equal(np.asarray(ids), 256 + np.arange(5))
+    np.testing.assert_array_equal(
+        np.asarray(state2.values[256:261]), np.asarray(toks)
+    )
+    # an ingested record is retrievable at its own key...
+    res = state2.index.query(
+        rt.reduce_key(hidden, state2), jnp.ones((5, 8)), rt.QuerySpec(k=1)
+    )
+    np.testing.assert_array_equal(np.asarray(res.ids[:, 0]), np.asarray(ids))
+    # ...and gone after retire
+    state3 = rt.retire_datastore(state2, ids)
+    res = state3.index.query(
+        rt.reduce_key(hidden, state3), jnp.ones((5, 8)), rt.QuerySpec(k=1)
+    )
+    assert not set(np.asarray(ids).tolist()) & set(
+        np.asarray(res.ids).ravel().tolist()
+    )
+
+
+# ---------------------------------------------------------------------------
+# misc surface
+# ---------------------------------------------------------------------------
+
+
+def test_needs_compact_and_live_counts(rng):
+    data, extra, _, _ = _problem(rng, m=CAP)
+    index = _mutable(rng, data)
+    assert not index.needs_compact and index.n_live == N
+    index, ids = index.insert(extra[: int(CAP * 0.8)])
+    assert index.needs_compact  # default threshold 0.75
+    index = index.delete(ids[:5])
+    assert index.n_live == N + int(CAP * 0.8) - 5
+    compacted = index.compact()
+    assert compacted.n == index.n_live and not compacted.needs_compact
+
+
+def test_shard_requires_divisible_capacity(rng):
+    data, _, _, _ = _problem(rng)
+    index = _mutable(rng, data, cap=7)
+
+    class FakeMesh:
+        class devices:
+            size = 4
+
+    with pytest.raises(ValueError, match="multiple of the mesh"):
+        index.shard(FakeMesh())

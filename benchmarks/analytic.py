@@ -20,7 +20,6 @@ model, which counts exactly what our implementation executes:
 
 from __future__ import annotations
 
-import dataclasses
 
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 
@@ -174,7 +173,6 @@ def cell_model(cfg: ModelConfig, tcfg: TrainConfig, shape: ShapeConfig,
     # ---- HBM bytes (per device, first order) -------------------------------
     T = B if mode == "decode" else B * S
     n_layers = cfg.n_layers
-    act_unit = (T / n_devices * min(16, n_devices)) if False else T  # simple: global T
     if mode == "train":
         passes = 3 if cfg.remat else 2  # weight reads: fwd, refwd, bwd
         wbytes = total_p * (passes * pb + 2 * pb + 4 * ob + 2 * ob) / n_devices

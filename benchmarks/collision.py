@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import hash_families as hf

@@ -47,7 +47,6 @@ def _bench_for_M(M: int, d: int = 64, H: int = 256, n: int = 512):
 
 def run():
     out = []
-    d = 64
     for M in (16, 64, 256):
         us_naive, us_trick, err = _bench_for_M(M)
         out.append(row(

@@ -1,0 +1,70 @@
+"""Planner adherence: does stating ``recall_target`` actually deliver it?
+
+For both hash families, build quality-first (``Index.build(key, data,
+QualitySpec)``) and resolve the execution plan (``index.plan``), then
+measure recall@k on HELD-OUT queries (not the calibration sample) against
+the exact scan. derived = target vs measured recall (adherence = measured -
+target; the acceptance bar is adherence >= -0.02) plus the planning cost
+split into the build-time theory inversion and the query-time calibration
+pass.
+
+Toy-size via PLANNER_BENCH_N (CI smoke uses 4000).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.api import Index, QualitySpec, QuerySpec
+from repro.api.planner import default_calibration_weights
+from repro.distance import recall_at_k
+
+
+def run():
+    n = int(os.environ.get("PLANNER_BENCH_N", 20_000))
+    d, b = 16, 64
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(jax.random.fold_in(key, 0), (n, d))
+    # held-out workload: fresh query points, the planner's reference weight
+    # distribution (adherence is meaningful only when calibration and
+    # serving see the same weight profile)
+    q = jax.random.uniform(jax.random.fold_in(key, 1), (b, d))
+    w = default_calibration_weights(jax.random.fold_in(key, 2), (b, d))
+
+    out = []
+    for family in ("theta", "l2"):
+        for target in (0.85, 0.95):
+            quality = QualitySpec(k=10, recall_target=target)
+
+            # quality-first build = theory inversion + build + calibration
+            # (+ escalation rebuilds when calibration misses the target);
+            # the resolved plan is memoized, so index.plan() after this is
+            # a dict hit
+            t0 = time.time()
+            index = Index.build(
+                jax.random.fold_in(key, 3), data, quality, family=family
+            )
+            jax.block_until_ready(index.state.sorted_keys)
+            t_build = time.time() - t0
+            plan = index.plan(quality)
+
+            res = index.query(q, w, quality)
+            ref = index.query(q, w, QuerySpec(k=10, mode="exact"))
+            recall = recall_at_k(res.ids, ref.ids, 10)
+            cfg = index.config
+            out.append(row(
+                f"planner_{family}_target{target}",
+                t_build * 1e6,
+                f"recall@10={recall:.3f},adherence={recall - target:+.3f},"
+                f"K={cfg.K},L={cfg.L},C={cfg.max_candidates},mode={plan.mode},"
+                f"probes={plan.n_probes},cand_frac="
+                f"{float(jnp.mean(res.n_candidates)) / n:.3f},"
+                f"calib_recall={plan.predicted_recall:.3f},"
+                f"plan_build_s={t_build:.1f}",
+            ))
+    return out

@@ -9,7 +9,6 @@ only when weights sit near 1 — see DESIGN.md.)
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import theory

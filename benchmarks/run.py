@@ -7,10 +7,11 @@ complexity claims; see DESIGN.md §1 "Validation targets").
 Prints ``name,us_per_call,derived`` CSV. The roofline rows summarize the
 compiled dry-run artifacts if present (run repro.launch.dryrun first).
 
-The kernel rows are additionally snapshotted to ``BENCH_kernels.json`` and
-the mutable-lifecycle rows to ``BENCH_updates.json`` (cwd) — one record per
-row plus backend/device metadata — so successive PRs leave a
-machine-readable perf trajectory.
+The kernel rows are additionally snapshotted to ``BENCH_kernels.json``,
+the mutable-lifecycle rows to ``BENCH_updates.json``, and the planner
+adherence rows to ``BENCH_planner.json`` (cwd) — one record per row plus
+backend/device metadata — so successive PRs leave a machine-readable perf
+trajectory.
 """
 
 from __future__ import annotations
@@ -27,6 +28,7 @@ MODULES = [
     "sublinear_fit",  # empirical n^rho_hat scaling
     "recall",  # recall@10 vs exact scan
     "multiprobe_bench",  # beyond-paper: probes-for-tables trade
+    "planner_bench",  # declarative planning: recall-target adherence + cost
     "kernels_bench",  # kernel microbenchmarks
     "update_bench",  # mutable lifecycle: insert/query-vs-fill/compact
     "roofline",  # dry-run roofline summaries (if results exist)
@@ -69,6 +71,8 @@ def main() -> None:
                 _write_kernels_json(rows)
             if name == "update_bench":
                 _write_kernels_json(rows, path="BENCH_updates.json")
+            if name == "planner_bench":
+                _write_kernels_json(rows, path="BENCH_planner.json")
         except Exception as e:
             failed.append(name)
             print(f"{name},NaN,ERROR:{type(e).__name__}:{e}")

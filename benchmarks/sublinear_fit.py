@@ -8,8 +8,6 @@ which must be < 1 for the same (K, L).
 
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np

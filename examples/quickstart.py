@@ -1,13 +1,15 @@
 """Quickstart: sublinear NNS over generalized weighted Manhattan distance,
-through the ``repro.api`` facade.
+through the ``repro.api`` facade — QUALITY-FIRST.
 
     PYTHONPATH=src python examples/quickstart.py [--n 50000]
 
-Builds a (d_w^l1, theta)-ALSH index over n points, runs weighted queries
-(weights arrive WITH the query — the paper's setting) under three QuerySpec
-policies (exact | single-probe | multiprobe), round-trips the index through
-self-describing save/load, and prints the theory numbers (rho < 1 ⇒
-sublinear).
+States a recall target (``QualitySpec``) and lets the planner derive both
+the index geometry (family/K/L/W/window — Theorems 4/5 inverted on a data
+sample) and the execution policy (probe vs multiprobe, calibrated on-data).
+Then shows the mechanism path (``IndexConfig`` + ``QuerySpec`` knobs, the
+paper's raw surface), proves the two meet bit-identically, round-trips the
+planned index through self-describing save/load, and prints per-query
+diagnostics from ``Index.explain``.
 """
 
 import argparse
@@ -18,8 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import BoundedSpace, Index, IndexConfig, QuerySpec
-from repro.core import plan_index
+from repro.api import Index, QualitySpec, QuerySpec
 from repro.distance import recall_at_k
 
 
@@ -28,33 +29,36 @@ def main():
     ap.add_argument("--n", type=int, default=50_000)
     args = ap.parse_args()
 
-    n, d, M, k = args.n, 16, 32, 10
+    n, d, k = args.n, 16, 10
     key = jax.random.PRNGKey(0)
 
-    print(f"== dataset: n={n} d={d}, lattice M={M}")
+    print(f"== dataset: n={n} d={d}")
     data = jax.random.uniform(jax.random.fold_in(key, 0), (n, d))
 
-    # --- theory: the paper's complexity claim -------------------------------
-    plan = plan_index(n=n, R1=0.05 * d, R2=0.4 * d, M=M, d=d, family="theta")
-    print(f"== theory: P1={plan.P1:.3f} P2={plan.P2:.3f} rho={plan.rho:.3f} "
-          f"(query time O(n^{plan.rho:.2f}) < O(n)) -> K={plan.K} L={plan.L}")
-
-    # --- one Index, owning its config ---------------------------------------
-    cfg = IndexConfig(d=d, M=M, K=10, L=32, family="theta",
-                      max_candidates=512, space=BoundedSpace(0.0, 1.0, float(M)))
+    # --- say WHAT you need; the planner derives the HOW ---------------------
+    quality = QualitySpec(k=k, recall_target=0.9, fail_prob=0.1)
     t0 = time.time()
-    index = Index.build(jax.random.fold_in(key, 1), data, cfg)
+    index = Index.build(jax.random.fold_in(key, 1), data, quality)
     jax.block_until_ready(index.state.sorted_keys)
-    print(f"== built {cfg.L} tables x {cfg.K} hashes in {time.time()-t0:.2f}s "
-          f"(O(d) per hash via the paper's §4.2.3 prefix trick)")
+    cfg = index.config
+    print(f"== planned build in {time.time()-t0:.2f}s: family={cfg.family!r} "
+          f"K={cfg.K} L={cfg.L} W={cfg.W:.3g} window={cfg.max_candidates} "
+          f"(Thm 4/5 inverted on a {quality.calibration_queries}-point sample)")
 
-    # --- weighted queries: policy = QuerySpec value, not a code path --------
+    # --- weighted queries: weights arrive WITH the query (the paper's w) ----
     b = 64
     q = jax.random.uniform(jax.random.fold_in(key, 2), (b, d))
     w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (b, d))) + 0.2
 
     t0 = time.time()
-    res = index.query(q, w, QuerySpec(k=k))
+    plan = index.plan(quality)  # one calibration pass, memoized on the index
+    print(f"== planned query in {time.time()-t0:.2f}s: mode={plan.mode!r} "
+          f"n_probes={plan.n_probes} window={plan.max_candidates} "
+          f"(calibrated recall {plan.predicted_recall:.2f}, "
+          f"Thm 1 success bound {plan.predicted_success:.3f})")
+
+    t0 = time.time()
+    res = index.query(q, w, quality)  # resolves through the memoized plan
     jax.block_until_ready(res.dists)
     t_alsh = time.time() - t0
 
@@ -67,25 +71,42 @@ def main():
     print(f"== ALSH:  {t_alsh*1e3:7.1f} ms for {b} queries  "
           f"(examined {cand:.0f}/{n} = {cand/n:.1%} candidates/query)")
     print(f"== exact: {t_bf*1e3:7.1f} ms for {b} queries  (100% scanned)")
-    print(f"== recall@{k} = {recall_at_k(res.ids, ref.ids, k):.2f}")
+    print(f"== measured recall@{k} = {recall_at_k(res.ids, ref.ids, k):.2f} "
+          f"(target {quality.recall_target})")
 
-    res_mp = index.query(q, w, QuerySpec(k=k, mode="multiprobe", n_probes=8))
-    print(f"== multiprobe (8 probes/table): recall@{k} = "
-          f"{recall_at_k(res_mp.ids, ref.ids, k):.2f} — same policy surface, "
-          f"fewer tables needed")
+    # --- the quality path IS the mechanism path — bit-identical -------------
+    res_planned = index.query(q, w, plan)
+    assert np.array_equal(np.asarray(res.ids), np.asarray(res_planned.ids))
+    assert np.array_equal(np.asarray(res.dists), np.asarray(res_planned.dists))
+    print("== query(QualitySpec) == query(resolved PlannedSpec), bit-identical")
 
-    # --- self-describing persistence ----------------------------------------
+    # explicit knobs still exist and still work (the paper's raw surface)
+    res_knobs = index.query(q, w, plan.to_query_spec())
+    print(f"== legacy knob path: QuerySpec{(plan.to_query_spec().mode, plan.k)} "
+          f"recall@{k} = {recall_at_k(res_knobs.ids, ref.ids, k):.2f}")
+
+    # --- per-query diagnostics ----------------------------------------------
+    report = index.explain(q, w, quality)
+    print(f"== explain: mean predicted success "
+          f"{float(report.predicted_success.mean()):.3f}, "
+          f"{int((report.truncated_tables > 0).sum())}/{b} queries hit window "
+          f"truncation, {int((report.n_invalid > 0).sum())}/{b} returned "
+          f"sentinel slots")
+
+    # --- self-describing persistence (plans travel too) ---------------------
     with tempfile.TemporaryDirectory() as ckdir:
         index.save(ckdir)
-        restored = Index.load(ckdir)  # directory alone — config travels along
-        r2 = restored.query(q, w, QuerySpec(k=k))
+        restored = Index.load(ckdir)  # directory alone — config + plans travel
+        assert restored.plans == index.plans
+        r2 = restored.query(q, w, quality)  # memo hit, no re-calibration
         assert np.array_equal(np.asarray(r2.ids), np.asarray(res.ids))
         print(f"== save/load round-trip: restored index (n={restored.n}, "
-              f"family={restored.config.family!r}) answers bit-identically")
+              f"family={restored.config.family!r}, {len(restored.plans)} "
+              f"memoized plan) answers bit-identically")
 
     # --- negative weights (paper abstract: each w_i may be < 0) -------------
     w_neg = jax.random.normal(jax.random.fold_in(key, 4), (b, d))
-    res_neg = index.query(q, w_neg, QuerySpec(k=k))
+    res_neg = index.query(q, w_neg, plan)
     ref_neg = index.query(q, w_neg, QuerySpec(k=k, mode="exact"))
     print(f"== mixed-sign weights: recall@{k} = "
           f"{recall_at_k(res_neg.ids, ref_neg.ids, k):.2f} "

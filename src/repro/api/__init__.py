@@ -16,14 +16,26 @@ self-describing :meth:`Index.save` / :meth:`Index.load`:
     if index.needs_compact:
         index = index.compact()
 
+Or state the SCENARIO instead of the knobs — the declarative, quality-first
+path (geometry and execution derived from the paper's theory plus a
+one-shot on-data calibration, memoized and persisted):
+
+    from repro.api import Index, QualitySpec
+
+    quality = QualitySpec(k=10, recall_target=0.95)
+    index = Index.build(key, data, quality)       # planner picks M/K/L/W/C
+    res = index.query(q, w, quality)              # planner picks the execution
+    report = index.explain(q, w, quality)         # per-query diagnostics
+
 Hash families are pluggable strategy objects (``ThetaFamily``, ``L2Family``)
 registered in :mod:`repro.core.families`. The legacy free functions
 (``repro.core.build_index`` / ``query_index`` / ``query_multiprobe``) remain
-as thin shims over the same engine.
+as thin shims over the same engine (now emitting ``DeprecationWarning``).
 """
 
 from repro.api.index import Index, ShardedIndex
-from repro.api.spec import QuerySpec, UpdateSpec
+from repro.api.planner import Planner, QueryReport
+from repro.api.spec import PlannedSpec, QualitySpec, QuerySpec, UpdateSpec
 from repro.core.index import DeltaSegment
 from repro.core.families import (
     FAMILIES,
@@ -39,6 +51,10 @@ __all__ = [
     "Index",
     "ShardedIndex",
     "QuerySpec",
+    "QualitySpec",
+    "PlannedSpec",
+    "Planner",
+    "QueryReport",
     "UpdateSpec",
     "DeltaSegment",
     "IndexConfig",

@@ -48,7 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.spec import QuerySpec, UpdateSpec
+from repro.api.spec import PlannedSpec, QualitySpec, QuerySpec, UpdateSpec
+from repro.core.families import n_flip_subsets
 from repro.core.index import (
     ALSHIndex,
     DeltaSegment,
@@ -67,6 +68,24 @@ def _as_key_data(key: jax.Array) -> jax.Array:
     if jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key):
         return jax.random.key_data(key)
     return key
+
+
+def _check_probe_reach(cfg: IndexConfig, spec: QuerySpec) -> None:
+    """Reject multiprobe specs asking for more probes than the (K,
+    max_flips) perturbation enumeration can reach — beyond that count every
+    extra probe re-probes a duplicate bucket and buys nothing. Applied by
+    BOTH the single-host and the sharded query facade."""
+    if spec.mode != "multiprobe":
+        return
+    cap = n_flip_subsets(cfg.K, spec.max_flips)
+    if spec.n_probes > cap:
+        raise ValueError(
+            f"QuerySpec.n_probes={spec.n_probes} exceeds the "
+            f"{cap} distinct probe keys reachable with K={cfg.K} "
+            f"hash bits and max_flips={spec.max_flips} — extra probes "
+            f"would silently hit duplicate buckets; lower n_probes or "
+            f"raise max_flips"
+        )
 
 
 @jax.tree_util.register_pytree_node_class
@@ -100,6 +119,9 @@ class Index:
     update: UpdateSpec = UpdateSpec()
     delta: DeltaSegment | None = None
     tombstones: jax.Array | None = None
+    # memoized QualitySpec -> PlannedSpec resolutions; static metadata (rides
+    # the treedef, persists in the v3 manifest, copies through shard())
+    plans: dict = dataclasses.field(default_factory=dict, compare=False)
 
     def __post_init__(self):
         # Synthesize empty mutation state when constructed without it (the
@@ -113,17 +135,19 @@ class Index:
                 (self.state.data.shape[0] + self.delta.capacity,), bool
             )
 
-    # -- pytree protocol (config + update policy are static aux data) -------
+    # -- pytree protocol (config + update policy are static aux data; the
+    # plan memo rides along as a hashable tuple so QualitySpec queries keep
+    # resolving AFTER a jit/shard_map crossing) ------------------------------
     def tree_flatten(self):
         return (
             (self.state, self.build_key, self.delta, self.tombstones),
-            (self.config, self.update),
+            (self.config, self.update, tuple(self.plans.items())),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         state, build_key, delta, tombstones = children
-        config, update = aux
+        config, update, plans = aux
         return cls(
             state=state,
             build_key=build_key,
@@ -131,6 +155,7 @@ class Index:
             update=update,
             delta=delta,
             tombstones=tombstones,
+            plans=dict(plans),
         )
 
     # -- construction -------------------------------------------------------
@@ -139,22 +164,70 @@ class Index:
         cls,
         key: jax.Array,
         data: jax.Array,
-        config: IndexConfig,
+        config: "IndexConfig | QualitySpec",
         impl: str = "auto",
         update: UpdateSpec = UpdateSpec(),
+        family: str = "auto",
+        M: int = 32,
+        planner=None,
     ) -> "Index":
         """Hash every point and sort each table — Theorem 1 preprocessing.
 
-        ``update=UpdateSpec(delta_capacity=C)`` reserves C delta slots and
-        makes the index mutable (``insert``/``delete``/``compact``).
+        ``config`` is either an explicit :class:`IndexConfig` (the classic
+        knob path, unchanged) or a :class:`QualitySpec` — then the geometry
+        (family, K, L, W, max_candidates, space) is DERIVED from theory
+        plus a data sample by :class:`repro.api.planner.Planner`, the
+        execution plan is calibrated and memoized immediately, and when
+        even the best calibrated plan misses ``recall_target`` the table
+        count is escalated (L doubled, bounded by the planner's caps) and
+        the build retried — theory proposes, measurement disposes. All of
+        it is deterministic given (data, quality.seed);
+        ``family``/``M``/``planner`` tune the derivation and are ignored on
+        the explicit path. ``update=UpdateSpec(delta_capacity=C)`` reserves
+        C delta slots and makes the index mutable (``insert``/``delete``/
+        ``compact``).
         """
         key = _as_key_data(key)
-        return cls(
-            state=build_index(key, data, config, impl=impl),
-            build_key=key,
-            config=config,
-            update=update,
-        )
+        if not isinstance(config, QualitySpec):
+            return cls(
+                state=build_index(key, data, config, impl=impl),
+                build_key=key,
+                config=config,
+                update=update,
+            )
+
+        import warnings
+
+        from repro.api.planner import Planner
+
+        quality = config
+        planner = planner or Planner()
+        cfg = planner.plan_config(data, quality, family=family, M=M)
+        last_round = 2  # escalation attempts: L x2 each, then accept best
+        for attempt in range(last_round + 1):
+            index = cls(
+                state=build_index(key, data, cfg, impl=impl),
+                build_key=key,
+                config=cfg,
+                update=update,
+            )
+            at_cap = cfg.L >= planner.max_L
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                index.plans[quality] = planner.plan_query(index, quality)
+            planned = index.plans[quality]
+            if planned.predicted_recall >= quality.recall_target - 1e-9 or (
+                attempt == last_round or at_cap
+            ):
+                # this attempt's plan is the one the caller gets — its
+                # warnings (budget exceeded, target unreachable) are real
+                for w in caught:
+                    warnings.warn(w.message, w.category, stacklevel=2)
+                return index
+            # recall miss with escalation headroom: the rebuild supersedes
+            # this attempt's warnings, so drop them
+            cfg = dataclasses.replace(cfg, L=min(2 * cfg.L, planner.max_L))
+        return index
 
     @property
     def n(self) -> int:
@@ -208,17 +281,56 @@ class Index:
                 f"weights.shape={tuple(weights.shape)}"
             )
 
-    def query(
-        self, queries: jax.Array, weights: jax.Array, spec: QuerySpec = QuerySpec()
-    ) -> QueryResult:
+    def resolve(self, spec) -> tuple[QuerySpec, IndexConfig, "PlannedSpec | None"]:
+        """Normalize any spec kind to (mechanism QuerySpec, effective
+        config, resolved PlannedSpec-or-None). QualitySpecs go through the
+        memoized planner; PlannedSpecs apply their candidate window to the
+        config. The same resolution backs ``query`` and ``explain`` — which
+        is what makes ``query(q, w, quality)`` bit-identical to
+        ``query(q, w, index.plan(quality))``."""
+        if isinstance(spec, QualitySpec):
+            spec = self.plan(spec)
+        if isinstance(spec, PlannedSpec):
+            return spec.to_query_spec(), spec.effective_config(self.config), spec
+        if not isinstance(spec, QuerySpec):
+            raise TypeError(
+                f"spec must be a QuerySpec, QualitySpec, or PlannedSpec; "
+                f"got {type(spec).__name__}"
+            )
+        return spec, self.config, None
+
+    def plan(self, quality: QualitySpec, planner=None) -> PlannedSpec:
+        """Resolve ``quality`` to a concrete :class:`PlannedSpec`, memoized
+        on this index (and on every index derived from it by insert/delete —
+        they share the memo; ``compact``/fresh builds re-plan).
+
+        Planning is deterministic given (index, ``quality.seed``): a
+        calibration sample is drawn from the build key, the plan ladder is
+        executed on it, and the cheapest plan meeting
+        ``quality.recall_target`` wins. The resolved plan rides the pytree
+        treedef, persists through ``save``/``load`` (v3 manifest), and
+        copies into ``shard()``-ed service handles.
+        """
+        planned = self.plans.get(quality)
+        if planned is None:
+            if planner is None:
+                from repro.api.planner import Planner
+
+                planner = Planner()
+            planned = planner.plan_query(self, quality)
+            self.plans[quality] = planned
+        return planned
+
+    def query(self, queries: jax.Array, weights: jax.Array, spec=QuerySpec()) -> QueryResult:
         """Batched k-NN under d_w^l1; ``spec`` picks the execution strategy.
 
         Args:
           queries: (b, d) float query points.
           weights: (b, d) per-query weight vectors (the paper's w — may be
             negative).
-          spec: policy — exact | probe | multiprobe; see
-            :class:`~repro.api.spec.QuerySpec`.
+          spec: policy — a mechanism :class:`QuerySpec` (exact | probe |
+            multiprobe), a resolved :class:`PlannedSpec`, or a declarative
+            :class:`QualitySpec` (planned on first use, memoized after).
 
         Mutable indexes run the two-segment path: sealed-table window probe
         + delta key match, tombstones masked before re-rank. Immutable
@@ -227,32 +339,34 @@ class Index:
         in every mode.
         """
         self._validate_query_args(queries, weights)
+        qspec, cfg, _ = self.resolve(spec)
+        _check_probe_reach(cfg, qspec)
         if self.mutable:
-            return self._query_segmented(queries, weights, spec)
-        if spec.mode == "exact":
+            return self._query_segmented(queries, weights, qspec, cfg)
+        if qspec.mode == "exact":
             from repro.kernels import ops
 
-            dists, ids = ops.wl1_scan_topk(self.state.data, queries, weights, spec.k)
+            dists, ids = ops.wl1_scan_topk(self.state.data, queries, weights, qspec.k)
             n_candidates = jnp.full(queries.shape[0], self.n, jnp.int32)
             return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
-        if spec.mode == "multiprobe":
+        if qspec.mode == "multiprobe":
             from repro.core.multiprobe import query_multiprobe
 
             return query_multiprobe(
                 self.state,
                 queries,
                 weights,
-                self.config,
-                k=spec.k,
-                n_probes=spec.n_probes,
-                max_flips=spec.max_flips,
+                cfg,
+                k=qspec.k,
+                n_probes=qspec.n_probes,
+                max_flips=qspec.max_flips,
             )
         return query_index(
-            self.state, queries, weights, self.config, k=spec.k, impl=spec.impl
+            self.state, queries, weights, cfg, k=qspec.k, impl=qspec.impl
         )
 
     def _query_segmented(
-        self, queries: jax.Array, weights: jax.Array, spec: QuerySpec
+        self, queries: jax.Array, weights: jax.Array, spec: QuerySpec, cfg: IndexConfig
     ) -> QueryResult:
         if spec.mode == "exact":
             from repro.core.index import query_exact_segmented
@@ -269,7 +383,7 @@ class Index:
                 self.tombstones,
                 queries,
                 weights,
-                self.config,
+                cfg,
                 k=spec.k,
                 n_probes=spec.n_probes,
                 max_flips=spec.max_flips,
@@ -280,9 +394,68 @@ class Index:
             self.tombstones,
             queries,
             weights,
-            self.config,
+            cfg,
             k=spec.k,
             impl=spec.impl,
+        )
+
+    def explain(self, queries: jax.Array, weights: jax.Array, spec=QuerySpec()):
+        """Run ``query`` and return a :class:`~repro.api.planner.QueryReport`
+        wrapping the result with per-query diagnostics: the resolved
+        parameters, the Thm 1 success probability predicted from Eq 25/27
+        at each query's own weight vector, candidate counts, and
+        truncation/sentinel flags. The answer arrays are bit-identical to a
+        plain ``query`` with the same spec — explain only adds the probe
+        bookkeeping (an extra pass over the sorted keys, host-side).
+        """
+        from repro.api.planner import QueryReport
+        from repro.core import theory
+        from repro.core.index import query_keys_for, table_window_sizes
+
+        self._validate_query_args(queries, weights)
+        quality = spec if isinstance(spec, QualitySpec) else None
+        qspec, cfg, planned = self.resolve(spec)
+        res = self.query(queries, weights, planned if planned is not None else qspec)
+
+        b = queries.shape[0]
+        if qspec.mode == "exact":
+            truncated = np.zeros((b,), np.int32)
+        else:
+            if qspec.mode == "multiprobe":
+                from repro.core.multiprobe import multiprobe_keys_for
+
+                keys = multiprobe_keys_for(
+                    self.state, queries, weights, cfg,
+                    qspec.n_probes, qspec.max_flips,
+                )  # (b, L, P)
+            else:
+                keys = query_keys_for(self.state, queries, weights, cfg)  # (b, L)
+            wins = table_window_sizes(self.state.sorted_keys, keys)
+            over = wins > cfg.max_candidates
+            truncated = np.asarray(
+                jnp.sum(over.reshape(b, -1), axis=1), dtype=np.int32
+            )
+
+        # Thm 1 success bound per query at its OWN w and observed top-1 r
+        # (result distances are raw-unit; Eq 25/27 want lattice units — x t)
+        top1 = res.dists[:, 0]
+        valid1 = jnp.isfinite(top1)
+        r1 = jnp.where(valid1, top1, 0.0) * cfg.space.t
+        if cfg.family == "l2":
+            p1 = theory.collision_prob_l2(r1, cfg.M, cfg.d, weights, cfg.W)
+        else:
+            p1 = theory.collision_prob_theta(r1, cfg.M, cfg.d, weights)
+        p1 = jnp.clip(p1, 1e-12, 1.0 - 1e-12)
+        success = jnp.where(valid1, 1.0 - (1.0 - p1**cfg.K) ** cfg.L, 0.0)
+
+        return QueryReport(
+            spec=planned if planned is not None else qspec,
+            quality=quality,
+            result=res,
+            predicted_success=np.asarray(success),
+            n_candidates=np.asarray(res.n_candidates),
+            truncated_tables=truncated,
+            n_invalid=np.asarray(jnp.sum(res.ids < 0, axis=1), dtype=np.int32),
         )
 
     # -- mutation (functional: every method returns a new Index) ------------
@@ -402,7 +575,8 @@ class Index:
         """Write a directory restorable by ``Index.load(directory)`` alone.
 
         The manifest records every segment (main rows, delta capacity/fill,
-        tombstone count), so a restored mutable index resumes its lifecycle
+        tombstone count) plus the resolved query plans, so a restored
+        mutable index resumes its lifecycle — and its memoized planning —
         exactly where it stopped."""
         from repro.api import persist
 
@@ -414,15 +588,18 @@ class Index:
             update=self.update,
             delta=self.delta,
             tombstones=self.tombstones,
+            plans=self.plans,
         )
 
     @classmethod
     def load(cls, directory: str | os.PathLike) -> "Index":
-        """Restore an index from a directory — config, update policy, and
-        segment state all travel with the data."""
+        """Restore an index from a directory — config, update policy,
+        segment state, and resolved query plans all travel with the data."""
         from repro.api import persist
 
-        state, build_key, cfg, update, delta, tombstones = persist.load_index(directory)
+        state, build_key, cfg, update, delta, tombstones, plans = persist.load_index(
+            directory
+        )
         return cls(
             state=state,
             build_key=build_key,
@@ -430,6 +607,7 @@ class Index:
             update=update,
             delta=delta,
             tombstones=tombstones,
+            plans=plans,
         )
 
     # -- distribution -------------------------------------------------------
@@ -464,6 +642,7 @@ class Index:
             merge_hierarchical=merge_hierarchical,
             update=self.update,
             build_key=self.build_key,
+            plans=dict(self.plans),
         )
         if self.mutable:
             sharded.delta_sharded, sharded.tombstones_sharded = make_sharded_delta(
@@ -508,6 +687,7 @@ class ShardedIndex:
     build_key: jax.Array | None = None
     delta_sharded: DeltaSegment | None = None  # leaf layout per local_delta_specs
     tombstones_sharded: jax.Array | None = None  # (S·(n_local+cap),) shard-major
+    plans: dict = dataclasses.field(default_factory=dict)  # from the source Index
 
     @property
     def n(self) -> int:
@@ -542,17 +722,35 @@ class ShardedIndex:
         fills = np.asarray(self.delta_sharded.fill)
         return bool((fills >= self.update.compact_threshold * self._cap_local).any())
 
-    def query(
-        self, queries: jax.Array, weights: jax.Array, spec: QuerySpec = QuerySpec()
-    ):
-        """Same facade contract as ``Index.query`` — hierarchical-merge path."""
+    def query(self, queries: jax.Array, weights: jax.Array, spec=QuerySpec()):
+        """Same facade contract as ``Index.query`` — hierarchical-merge path.
+
+        QualitySpecs resolve against the plan memo the source ``Index``
+        carried into ``shard()`` (calibration needs the single-host view, so
+        an UNPLANNED QualitySpec is rejected here with the fix spelled out).
+        """
         from repro.core.distributed import sharded_index_query
 
+        cfg = self.config
+        if isinstance(spec, QualitySpec):
+            planned = self.plans.get(spec)
+            if planned is None:
+                raise ValueError(
+                    "ShardedIndex cannot calibrate a new QualitySpec (planning "
+                    "needs the single-host index) — call index.plan(quality) "
+                    "BEFORE index.shard(mesh), or pass the resolved "
+                    "PlannedSpec/QuerySpec explicitly"
+                )
+            spec = planned
+        if isinstance(spec, PlannedSpec):
+            cfg = spec.effective_config(cfg)
+            spec = spec.to_query_spec()
+        _check_probe_reach(cfg, spec)
         return sharded_index_query(
             self.index_sharded,
             queries,
             weights,
-            self.config,
+            cfg,
             self.mesh,
             spec=spec,
             merge_hierarchical=self.merge_hierarchical,

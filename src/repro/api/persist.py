@@ -22,11 +22,19 @@ re-shard re-derives identical hash tables (delta hashes included) from the
 persisted build key. Version-1 directories (immutable, pre-lifecycle) still
 load, as immutable indexes.
 
+Format version 3 adds the PLAN memo: every resolved
+``QualitySpec -> PlannedSpec`` pair is recorded in the manifest's ``plans``
+list (pure JSON — no array payload change), so a restored index answers
+QualitySpec queries without re-running the calibration pass, with the
+exact same resolved parameters. Version-1/2 directories still load, with an
+empty memo.
+
 All entry points accept ``str`` or ``pathlib.Path`` directories.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 
@@ -34,14 +42,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import ckpt
-from repro.api.spec import UpdateSpec
+from repro.api.spec import PlannedSpec, QualitySpec, UpdateSpec
 from repro.core.hash_families import PrefixTables
 from repro.core.index import ALSHIndex, DeltaSegment, IndexConfig
 from repro.core.transforms import BoundedSpace
 
 FORMAT = "repro.api.index"
-VERSION = 2
-_READABLE_VERSIONS = (1, 2)
+VERSION = 3
+_READABLE_VERSIONS = (1, 2, 3)
 _META = "index.json"
 
 
@@ -86,6 +94,22 @@ def update_from_dict(d: dict) -> UpdateSpec:
     )
 
 
+def plans_to_list(plans: dict) -> list:
+    """The v3 ``plans`` manifest entry: one {quality, planned} record per
+    memoized resolution. Dataclass fields only — floats round-trip exactly
+    through JSON, so a reloaded plan compares equal to the original."""
+    return [
+        {"quality": dataclasses.asdict(q), "planned": dataclasses.asdict(p)}
+        for q, p in plans.items()
+    ]
+
+
+def plans_from_list(entries: list) -> dict:
+    return {
+        QualitySpec(**e["quality"]): PlannedSpec(**e["planned"]) for e in entries
+    }
+
+
 def _state_template() -> ALSHIndex:
     """Structure-only ALSHIndex (leaf values/shapes come from the payload)."""
     z = jnp.zeros((), jnp.float32)
@@ -112,8 +136,9 @@ def save_index(
     update: UpdateSpec = UpdateSpec(),
     delta: DeltaSegment | None = None,
     tombstones=None,
+    plans: dict | None = None,
 ) -> str:
-    """Write a self-describing index directory (format version 2).
+    """Write a self-describing index directory (format version 3).
 
     The array payload commits FIRST (ckpt COMMIT protocol), the meta file is
     atomically replaced LAST: a fresh directory that crashed mid-save has no
@@ -154,6 +179,7 @@ def save_index(
             },
         ],
         "tombstone_count": int(np.asarray(tombstones).sum()),
+        "plans": plans_to_list(plans or {}),
     }
     tmp = os.path.join(directory, _META + ".tmp")
     with open(tmp, "w") as f:
@@ -165,9 +191,12 @@ def save_index(
 
 def load_index(
     directory: str | os.PathLike,
-) -> tuple[ALSHIndex, "jnp.ndarray", IndexConfig, UpdateSpec, DeltaSegment, "jnp.ndarray"]:
-    """Restore (state, build_key, config, update, delta, tombstones) from a
-    directory alone. Version-1 directories restore as immutable indexes."""
+) -> tuple[
+    ALSHIndex, "jnp.ndarray", IndexConfig, UpdateSpec, DeltaSegment, "jnp.ndarray", dict
+]:
+    """Restore (state, build_key, config, update, delta, tombstones, plans)
+    from a directory alone. Version-1 directories restore as immutable
+    indexes; pre-v3 directories restore with an empty plan memo."""
     directory = os.fspath(directory)
     meta_path = os.path.join(directory, _META)
     if not os.path.exists(meta_path):
@@ -209,7 +238,8 @@ def load_index(
         delta = DeltaSegment.empty(cfg, 0, dtype=state.data.dtype)
         tombstones = jnp.zeros((state.data.shape[0],), bool)
     _check_consistent(state, delta, tombstones, cfg, update, meta, meta_path)
-    return state, tree["build_key"], cfg, update, delta, tombstones
+    plans = plans_from_list(meta.get("plans", [])) if version >= 3 else {}
+    return state, tree["build_key"], cfg, update, delta, tombstones, plans
 
 
 def _check_consistent(

@@ -1,0 +1,442 @@
+"""The query planner — quality targets in, mechanism out.
+
+The paper's Theorems 4/5 give closed-form collision probabilities for both
+ALSH families, so the index can SOLVE for its own knobs instead of making
+the user hand-pick ``(M, K, L, W, n_probes, max_candidates)``. The planner
+has two halves:
+
+**Build-time** (:meth:`Planner.plan_config`) — theory inversion on a data
+sample: discretize the data, measure each sampled query's kth-NN distance
+in lattice units, evaluate Eq 25/27 at the per-query radii ``r1_i`` /
+``r2_i = c * r1_i`` (anchoring the l2 family's bucket width ``W`` at a
+fixed collision prob on the 75th-percentile transformed near distance —
+scale-robust where the rho-minimizing width is not), then run the
+Theorem 1 solve: ``K = ceil(ln n / ln 1/P2)`` bounds far-point noise and
+``L`` is the smallest table count whose PER-SAMPLE mean success
+``mean_i[1-(1-p1_i^K)^L]`` reaches ``max(recall_target, 1-fail_prob)``,
+with a hash budget that walks K down when K*L overshoots. With
+``family="auto"`` both families are solved and the lower-rho one wins.
+
+**Query-time** (:meth:`Planner.plan_query`) — a cheap EMPIRICAL calibration
+pass against the built index: hash a deterministic sample of jittered data
+rows as queries once, score a short ladder of execution plans (single-probe
+at shrinking candidate windows; multiprobe at growing probe counts) against
+the exact oracle, and pick the cheapest plan whose measured recall@k meets
+``recall_target``. Calibration measures the EXACT programs the plan will
+run (each ladder rung is executed through ``Index.query`` with a
+:class:`~repro.api.spec.PlannedSpec`), so the resolved plan is
+bit-reproducible: ``query(q, w, quality) == query(q, w, plan)``.
+
+Planning is deterministic given (index, ``QualitySpec.seed``): the sample
+is drawn from the index's own ``build_key`` folded with the spec seed, and
+no wall clocks are read — the optional ``latency_budget_ms`` is applied
+through the coarse linear cost model ``candidates_per_ms``.
+
+``Index.plan`` memoizes resolved plans on the index (they ride the pytree
+treedef, persist in the v3 manifest, and survive ``shard()``), so the
+calibration pass runs once per (index, QualitySpec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.spec import PlannedSpec, QualitySpec, QuerySpec
+from repro.core import theory, transforms
+from repro.core.families import get_family, n_flip_subsets
+from repro.core.index import IndexConfig
+from repro.core.transforms import BoundedSpace
+
+__all__ = ["Planner", "QueryReport", "default_calibration_weights"]
+
+
+def default_calibration_weights(key: jax.Array, shape: tuple[int, int]) -> jax.Array:
+    """The planner's reference weight distribution: |N(0, 1)| + 0.1 per dim.
+
+    Matches the weight profile the repo's benchmarks/examples query with;
+    pass explicit ``weights`` to :class:`Planner` when the workload's
+    weights look different (e.g. retrieval's precision weights).
+    """
+    return jnp.abs(jax.random.normal(key, shape)) + 0.1
+
+
+def _prng(build_key, seed: int) -> jax.Array:
+    """Deterministic planning key: the index's own build key (raw uint32
+    data) folded with the QualitySpec seed."""
+    key = jnp.asarray(build_key, jnp.uint32).reshape(-1)[:2]
+    return jax.random.fold_in(key, seed)
+
+
+@dataclasses.dataclass
+class QueryReport:
+    """Per-query diagnostics from ``Index.explain`` — the resolved plan,
+    the theory prediction, and what actually happened.
+
+    Attributes:
+      spec: the spec that EXECUTED (a QuerySpec, or the PlannedSpec a
+        QualitySpec resolved to).
+      quality: the QualitySpec the caller stated (None for mechanism specs).
+      result: the :class:`~repro.core.index.QueryResult` (same arrays
+        ``Index.query`` returns — explain never changes the answer).
+      predicted_success: (b,) Thm 1 success bound 1-(1-p1^K)^L per query,
+        with p1 = Eq 25/27 at the query's OWN weight vector and observed
+        top-1 distance (0.0 where the query returned nothing). For
+        multiprobe this is the single-probe lower bound — extra probes only
+        add collisions.
+      n_candidates: (b,) unique candidates examined (the sublinearity metric).
+      truncated_tables: (b,) number of probed buckets whose window exceeded
+        the effective ``max_candidates`` clamp — non-zero means candidates
+        were dropped BEFORE re-rank (grow the window or raise K).
+      n_invalid: (b,) sentinel result slots (ids == -1): fewer than k
+        neighbours survived the probe.
+    """
+
+    spec: object
+    quality: QualitySpec | None
+    result: object
+    predicted_success: np.ndarray
+    n_candidates: np.ndarray
+    truncated_tables: np.ndarray
+    n_invalid: np.ndarray
+
+    def to_dict(self) -> dict:
+        """JSON-able summary (arrays reduced to batch means) for logging."""
+        return {
+            "spec": dataclasses.asdict(self.spec) if dataclasses.is_dataclass(self.spec) else str(self.spec),
+            "quality": dataclasses.asdict(self.quality) if self.quality else None,
+            "mean_predicted_success": float(np.mean(self.predicted_success)),
+            "mean_n_candidates": float(np.mean(self.n_candidates)),
+            "queries_with_truncation": int(np.sum(self.truncated_tables > 0)),
+            "queries_with_invalid_slots": int(np.sum(self.n_invalid > 0)),
+        }
+
+
+@dataclasses.dataclass
+class Planner:
+    """Resolves :class:`QualitySpec` targets to concrete parameters.
+
+    Attributes:
+      weights: optional (d,) or (m, d) calibration weight profile. Default
+        draws :func:`default_calibration_weights` — override when the
+        workload's weights are known (retrieval passes its precision
+        weights).
+      candidates_per_ms: the linear cost model behind
+        ``QualitySpec.latency_budget_ms``: a budget of B ms admits plans
+        examining at most ``B * candidates_per_ms`` candidates per query.
+        Calibrate per deployment (``BENCH_kernels.json`` has the measured
+        rerank throughput); the default is a conservative CPU figure.
+      slot_cost: relative cost of one probed (table, probe, slot) versus one
+        reranked candidate in the plan-ordering objective — charges the
+        dedupe sort so a 32-probe plan doesn't look free just because its
+        unique-candidate count matches an 8-probe plan.
+      max_K / max_L: geometry caps for the build-time solve.
+      max_hashes: build-time budget on K*L, the total hashes per point. The
+        raw Thm 1 solve happily asks for K=30, L=600 at high-collision
+        operating points — correct asymptotically, absurd as a memory/build
+        bill. When the solve exceeds the budget, K is walked down (each step
+        shrinks L exponentially since L ~ P1^-K) until K*L fits; the
+        query-time calibration pass then recovers recall through wider
+        windows/multiprobe if the slimmer geometry needs it.
+    """
+
+    weights: jax.Array | None = None
+    candidates_per_ms: float = 2000.0
+    slot_cost: float = 0.02
+    max_K: int = 32
+    max_L: int = 256
+    max_hashes: int = 512
+
+    # -- shared sampling -----------------------------------------------------
+    def _calibration_weights(self, key: jax.Array, m: int, d: int) -> jax.Array:
+        if self.weights is None:
+            return default_calibration_weights(key, (m, d))
+        w = jnp.asarray(self.weights)
+        return jnp.broadcast_to(w, (m, d))
+
+    def _sample(self, key: jax.Array, data: jax.Array, m: int, jitter: float):
+        """Deterministic (queries, weights) calibration sample: data rows
+        JITTERED by one lattice cell. Raw rows would calibrate too
+        optimistically — a data-row query's bucket key exists in every
+        table by construction (its own row is there), while a held-out
+        query can land in an empty bucket; the one-cell jitter decouples
+        the hash keys while keeping the sample in-distribution."""
+        n, d = data.shape
+        m = min(m, n)
+        k_rows, k_j, k_w = jax.random.split(key, 3)
+        rows = jax.random.choice(k_rows, n, (m,), replace=False)
+        qs = data[rows] + jax.random.uniform(
+            k_j, (m, d), minval=-jitter, maxval=jitter
+        )
+        return qs, self._calibration_weights(k_w, m, d)
+
+    # -- build-time: theory inversion ---------------------------------------
+    def plan_config(
+        self,
+        data: jax.Array,
+        quality: QualitySpec,
+        family: str = "auto",
+        M: int = 32,
+        space: BoundedSpace | None = None,
+    ) -> IndexConfig:
+        """Derive a full :class:`IndexConfig` from a data sample + targets.
+
+        ``family="auto"`` solves both families and keeps the lower rho.
+        ``space`` defaults to the sample's bounding box at resolution
+        ``M / (hi - lo)``. Deterministic given (data, quality.seed).
+        """
+        n, d = data.shape
+        key = _prng(jnp.zeros((2,), jnp.uint32), quality.seed)
+        if space is None:
+            lo = float(jnp.min(data))
+            hi = float(jnp.max(data))
+            if hi <= lo:
+                hi = lo + 1.0
+            space = BoundedSpace(lo, hi, M / (hi - lo))
+        M_eff = max(space.M, 1)
+        qs, ws = self._sample(
+            jax.random.fold_in(key, 0), data, quality.calibration_queries,
+            jitter=1.0 / space.t,
+        )
+
+        # k-NN distance distribution IN LATTICE UNITS (hashing sees levels,
+        # so Eq 24-27 radii must be measured on the discretized points)
+        from repro.kernels import ops
+
+        levels = transforms.discretize(data, space).astype(jnp.float32)
+        qlevels = transforms.discretize(qs, space).astype(jnp.float32)
+        # +1: each jittered query's source row sits at ~zero distance, so
+        # the (k+1)-th column approximates the true kth-NN radius
+        kk = min(quality.k + 1, n)
+        nn_d, _ = ops.wl1_scan_topk(levels, qlevels, ws, kk)
+        # per-query operating radii: each query must find ITS kth neighbour,
+        # so the solve aggregates per-query collision probs pessimistically
+        # instead of evaluating one mean-weight profile (which overpromises
+        # badly for the scale-sensitive l2 family under spread-out weights)
+        r1 = jnp.maximum(nn_d[:, kk - 1], 1e-6)  # (m,) lattice kth-NN dists
+        r2 = quality.approx_c * r1
+
+        candidates = ("theta", "l2") if family == "auto" else (family,)
+        best = None
+        for fam in candidates:
+            sol = self._solve_family(fam, r1, r2, M_eff, d, ws, n, quality)
+            if sol is not None and (best is None or sol["rho"] < best["rho"]):
+                best = sol
+        if best is None:
+            raise ValueError(
+                f"planner: no hash family yields usable collision probabilities "
+                f"at the sampled operating radii (family={family!r}) — the "
+                f"sample's neighbour distances may be degenerate; widen "
+                f"approx_c or pass an explicit IndexConfig"
+            )
+        # per-table window: expected far-point collisions n*P2^K plus the k
+        # requested neighbours, with 8x headroom, power-of-two, in [32, 1024]
+        exp_far = n * best["P2"] ** best["K"]
+        C = int(min(1024, max(32, 2 ** math.ceil(math.log2(8 * (exp_far + quality.k))))))
+        return IndexConfig(
+            d=d,
+            M=M_eff,
+            K=best["K"],
+            L=best["L"],
+            family=best["family"],
+            W=best["W"],
+            max_candidates=C,
+            space=space,
+        )
+
+    # collision prob the near-radius solve anchors W to: p_l2(s, c_star * s)
+    # == _P1_GOAL for any s (Eq 4 depends only on W/s)
+    _P1_GOAL = 0.9
+
+    def _solve_family(self, fam: str, r1, r2, M, d, ws, n, quality):
+        """One family's Thm 1 solve over PER-QUERY operating radii.
+
+        r1/r2: (m,) near/far lattice radii; ws: (m, d) sampled weights.
+        Near-side collision probs aggregate at the 25th percentile (a plan
+        that only works for the median query fails half the workload);
+        far-side at the median (far collisions are a cost, not a guarantee).
+        Returns None when the probabilities degenerate.
+        """
+        W = 4.0
+        if fam == "l2":
+            s1 = theory.l2_distance_from_wl1(r1, M, d, ws)  # (m,)
+            s2 = theory.l2_distance_from_wl1(r2, M, d, ws)
+            if not bool(jnp.all((s1 > 0) & (s2 > s1))):
+                return None
+            # anchor W so the near collision prob hits _P1_GOAL at the 75th
+            # percentile of s1 — the scale-robust choice (rho-minimizing W
+            # is optimal for ONE scale and collapses under weight spread)
+            c_star = 1.0 / theory.invert_p_l2(self._P1_GOAL, 1.0)
+            W = c_star * float(jnp.quantile(s1, 0.75))
+            p1 = theory.p_l2(s1, W)
+            p2 = theory.p_l2(s2, W)
+        else:
+            p1 = theory.collision_prob_theta(r1, M, d, ws)
+            p2 = theory.collision_prob_theta(r2, M, d, ws)
+        p1 = np.clip(np.asarray(p1, np.float64), 1e-9, 1 - 1e-9)
+        P1 = float(np.quantile(p1, 0.25))
+        P2 = float(jnp.median(p2))
+        if not (0.0 < P2 < P1 < 1.0):
+            return None
+        max_K = self.max_K
+        fam_cap = get_family(fam).max_K
+        if fam_cap is not None:
+            max_K = min(max_K, fam_cap)
+        # K bounds the far-point candidate load (Thm 1); L is then solved
+        # against the PER-SAMPLE success curve: mean_i 1-(1-p1_i^K)^L >=
+        # max(recall_target, 1-fail_prob). Solving on the sampled p1_i
+        # distribution (not one aggregate) is what provisions enough tables
+        # for the heavy-tailed weight profiles the scalar solve overpromises
+        # on. The hash budget walks K down when K*L overshoots (each step
+        # shrinks L exponentially).
+        goal = max(quality.recall_target, 1.0 - quality.fail_prob)
+        K = theory.solve_K(P2, n, max_K)
+        while True:
+            L = self._solve_L(p1, K, goal)
+            if K == 1 or K * L <= self.max_hashes:
+                break
+            K -= 1
+        return {
+            "family": fam,
+            "W": W,
+            "P1": P1,
+            "P2": P2,
+            "K": K,
+            "L": L,
+            "rho": math.log(P1) / math.log(P2),
+        }
+
+    def _solve_L(self, p1_samples: "np.ndarray", K: int, goal: float) -> int:
+        """Smallest L <= max_L with mean_i[1 - (1 - p1_i^K)^L] >= goal
+        (bisection on the monotone success curve; max_L when unreachable)."""
+        miss = 1.0 - p1_samples**K  # (m,) per-sample per-table miss prob
+
+        def mean_success(L: int) -> float:
+            return float(np.mean(1.0 - miss**L))
+
+        if mean_success(self.max_L) < goal:
+            return self.max_L
+        lo, hi = 1, self.max_L
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if mean_success(mid) >= goal:
+                hi = mid
+            else:
+                lo = mid + 1
+        return lo
+
+    # -- query-time: empirical calibration ----------------------------------
+    def _plan_ladder(self, cfg: IndexConfig, k: int) -> list[PlannedSpec]:
+        """The candidate execution plans, cheapest-intent first."""
+        C = cfg.max_candidates
+        windows = sorted({max(C >> s, min(C, max(2 * k, 16))) for s in (3, 2, 1, 0)})
+        ladder = [
+            PlannedSpec(k=k, mode="probe", max_candidates=c) for c in windows
+        ]
+        if get_family(cfg.family).supports_multiprobe:
+            max_flips = min(3, cfg.K)
+            cap = n_flip_subsets(cfg.K, max_flips)
+            for p in (2, 4, 8, 16, 32):
+                if p <= cap:
+                    ladder.append(
+                        PlannedSpec(
+                            k=k, mode="multiprobe", n_probes=p,
+                            max_flips=max_flips, max_candidates=C,
+                        )
+                    )
+        return ladder
+
+    def _plan_cost(self, cfg: IndexConfig, plan: PlannedSpec, mean_cand: float) -> float:
+        """Deterministic cost model: reranked candidates + charged probe slots."""
+        slots = cfg.L * plan.n_probes * plan.max_candidates
+        return mean_cand + self.slot_cost * slots
+
+    def plan_query(self, index, quality: QualitySpec) -> PlannedSpec:
+        """Calibrate the plan ladder on a data sample; return the cheapest
+        plan meeting ``quality.recall_target`` (best-effort + warning when
+        none does). ``index`` is a built ``repro.api.Index``."""
+        from repro.distance import recall_at_k
+
+        data = index.state.data
+        if isinstance(data, jax.core.Tracer):
+            raise ValueError(
+                "Planner.plan_query cannot calibrate under jit (the index "
+                "data is a tracer) — resolve the plan eagerly first via "
+                "index.plan(quality), then query inside jit; the memoized "
+                "plan crosses the jit boundary with the index"
+            )
+        cfg = index.config
+        key = _prng(index.build_key, quality.seed)
+        qs, ws = self._sample(
+            key, data, quality.calibration_queries, jitter=1.0 / cfg.space.t
+        )
+        exact = index.query(qs, ws, QuerySpec(k=quality.k, mode="exact"))
+
+        # theory side: success bound at the observed operating radius.
+        # exact distances are in RAW data units; Eq 25/27 operate on lattice
+        # points, so scale by the discretization resolution t
+        kth = exact.dists[:, -1]
+        r_op = float(jnp.median(jnp.where(jnp.isfinite(kth), kth, 0.0)))
+        r_op *= cfg.space.t
+        w_ref = jnp.mean(jnp.abs(ws), axis=0)
+        p1 = self._collision_prob(cfg, r_op, w_ref)
+        success = 1.0 - (1.0 - min(max(p1, 1e-12), 1 - 1e-12) ** cfg.K) ** cfg.L
+
+        scored = []
+        for rung in self._plan_ladder(cfg, quality.k):
+            res = index.query(qs, ws, rung)
+            recall = float(recall_at_k(res.ids, exact.ids, quality.k))
+            mean_cand = float(jnp.mean(res.n_candidates))
+            scored.append((rung, recall, mean_cand, self._plan_cost(cfg, rung, mean_cand)))
+
+        budget = None
+        if quality.latency_budget_ms is not None:
+            budget = quality.latency_budget_ms * self.candidates_per_ms
+        meets_recall = [s for s in scored if s[1] >= quality.recall_target - 1e-9]
+        feasible = [s for s in meets_recall if budget is None or s[2] <= budget]
+        if feasible:
+            plan, recall, mean_cand, _ = min(feasible, key=lambda s: s[3])
+        elif meets_recall:
+            # recall is reachable but not inside the budget: keep the recall
+            # guarantee, take the cheapest such plan, and say so — the budget
+            # is a coarse model, the recall target is the contract
+            plan, recall, mean_cand, _ = min(meets_recall, key=lambda s: s[3])
+            warnings.warn(
+                f"planner: no plan meets recall_target={quality.recall_target} "
+                f"within latency_budget_ms={quality.latency_budget_ms} "
+                f"(cheapest conforming plan examines ~{mean_cand:.0f} "
+                f"candidates/query, budget admits {budget:.0f}); keeping the "
+                f"recall target — relax one of the two",
+                stacklevel=2,
+            )
+        else:
+            # best effort: highest calibrated recall, cheapest among ties
+            plan, recall, mean_cand, _ = max(scored, key=lambda s: (s[1], -s[3]))
+            warnings.warn(
+                f"planner: no execution plan reaches recall_target="
+                f"{quality.recall_target} on this index "
+                f"(best calibrated recall {recall:.3f} via {plan.mode}); "
+                f"rebuild with a QualitySpec (or more tables / a wider "
+                f"max_candidates window) to close the gap",
+                stacklevel=2,
+            )
+        return dataclasses.replace(
+            plan,
+            predicted_recall=recall,
+            predicted_success=float(success),
+            expected_candidates=mean_cand,
+        )
+
+    @staticmethod
+    def _collision_prob(cfg: IndexConfig, r: float, w) -> float:
+        """Eq 25/27 at distance r under weight profile w (family dispatch)."""
+        if cfg.family == "l2":
+            return float(
+                theory.collision_prob_l2(jnp.asarray(r), cfg.M, cfg.d, w, cfg.W)
+            )
+        return float(theory.collision_prob_theta(jnp.asarray(r), cfg.M, cfg.d, w))

@@ -1,4 +1,5 @@
-"""QuerySpec / UpdateSpec — the policy objects of the ``repro.api`` facade.
+"""QuerySpec / QualitySpec / UpdateSpec — the policy objects of the
+``repro.api`` facade.
 
 One ``Index.query(q, w, spec)`` call reaches every execution strategy; the
 spec's *fields* select the behavior, so callers never pick a code path by
@@ -9,7 +10,19 @@ import:
   QuerySpec(k=10, mode="exact")                     # streaming exact scan
   sharded.query(q, w, QuerySpec(k=10))              # hierarchical-merge service
 
-The spec is a frozen (hashable) dataclass: it is a static argument to the
+``QuerySpec`` states MECHANISM (which knobs); :class:`QualitySpec` states
+the SCENARIO (what quality) and leaves the knobs to the planner:
+
+  QualitySpec(k=10, recall_target=0.95)             # "give me 95% recall@10"
+  index.query(q, w, QualitySpec(...))               # planned, memoized, cached
+
+The planner resolves a QualitySpec into a :class:`PlannedSpec` — a frozen,
+hashable record of the chosen execution parameters plus the calibrated
+quality predictions. A PlannedSpec is itself a valid ``spec`` argument, and
+``index.query(q, w, quality)`` is bit-identical to
+``index.query(q, w, index.plan(quality))``.
+
+Every spec is a frozen (hashable) dataclass: it is a static argument to the
 jit'd query dispatch, so two calls with equal specs share one compiled
 program.
 """
@@ -74,6 +87,146 @@ class QuerySpec:
                     f"QuerySpec.max_flips must be a non-negative int, "
                     f"got {self.max_flips!r}"
                 )
+
+
+@dataclasses.dataclass(frozen=True)
+class QualitySpec:
+    """What quality the caller needs — the planner derives the mechanism.
+
+    The paper's Theorems 4/5 give closed-form collision probabilities for
+    both ALSH families, which means the index can SOLVE for its own knobs:
+    state the scenario here and ``Index.build`` / ``Index.query`` resolve it
+    through :class:`repro.api.planner.Planner` (theory inversion plus a
+    one-shot on-data calibration pass, memoized per index).
+
+    Attributes:
+      k: neighbours to return (recall is measured @ k).
+      recall_target: minimum acceptable recall@k against the exact scan;
+        the planner picks the CHEAPEST execution plan whose calibrated
+        recall meets it (and warns if no plan can).
+      approx_c: Thm 1 approximation factor c > 1 — the far radius is
+        R2 = c * R1 where R1 is calibrated from the data.
+      fail_prob: per-query failure bound delta for the Thm 1 table-count
+        solve: build-time planning sizes L so an R1-near neighbour is
+        missed with probability <= delta.
+      latency_budget_ms: optional per-query latency ceiling. Deterministic
+        planning cannot time wall clocks, so the budget is applied through
+        a coarse linear cost model (candidates examined per ms; see
+        ``Planner.candidates_per_ms``) — treat it as a knee-point selector,
+        not an SLA.
+      calibration_queries: sample size of the calibration pass. Larger =
+        tighter recall estimates, slower planning.
+      seed: calibration sample seed. Planning is DETERMINISTIC given
+        (index, seed) — same index, same spec, same plan.
+    """
+
+    k: int = 10
+    recall_target: float = 0.9
+    approx_c: float = 2.0
+    fail_prob: float = 0.1
+    latency_budget_ms: float | None = None
+    calibration_queries: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        if not isinstance(self.k, int) or self.k <= 0:
+            raise ValueError(f"QualitySpec.k must be a positive int, got {self.k!r}")
+        if not (0.0 < self.recall_target <= 1.0):
+            raise ValueError(
+                f"QualitySpec.recall_target must be in (0, 1], got {self.recall_target!r}"
+            )
+        if not self.approx_c > 1.0:
+            raise ValueError(
+                f"QualitySpec.approx_c must be > 1 (Thm 1 needs R2 > R1), "
+                f"got {self.approx_c!r}"
+            )
+        if not (0.0 < self.fail_prob < 1.0):
+            raise ValueError(
+                f"QualitySpec.fail_prob must be in (0, 1), got {self.fail_prob!r}"
+            )
+        if self.latency_budget_ms is not None and not self.latency_budget_ms > 0:
+            raise ValueError(
+                f"QualitySpec.latency_budget_ms must be positive (or None), "
+                f"got {self.latency_budget_ms!r}"
+            )
+        if not isinstance(self.calibration_queries, int) or self.calibration_queries <= 0:
+            raise ValueError(
+                f"QualitySpec.calibration_queries must be a positive int, "
+                f"got {self.calibration_queries!r}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannedSpec:
+    """A QualitySpec resolved to concrete execution parameters.
+
+    Frozen, hashable, and jit-static: it rides in the Index pytree treedef
+    (so plans survive jit/shard_map crossings), round-trips through the v3
+    persistence manifest, and is a valid ``Index.query`` spec —
+    ``query(q, w, quality)`` and ``query(q, w, the_resolved_plan)`` run the
+    SAME compiled program, bit-identically.
+
+    Attributes:
+      k: neighbours returned.
+      mode: chosen execution strategy ("probe" | "multiprobe").
+      n_probes / max_flips: multiprobe knobs (1 / 0 in probe mode).
+      max_candidates: effective per-table probe window — always <= the
+        built ``IndexConfig.max_candidates`` (the window can shrink at
+        query time but the build padding caps it).
+      predicted_recall: calibrated recall@k of this plan on the planning
+        sample (NaN when calibration was skipped).
+      predicted_success: Thm 1 per-query success bound 1-(1-P1^K)^L at the
+        calibrated operating radius.
+      expected_candidates: mean unique candidates examined per query on the
+        calibration sample — the sublinearity/latency proxy.
+    """
+
+    k: int
+    mode: str
+    n_probes: int = 1
+    max_flips: int = 0
+    max_candidates: int = 64
+    predicted_recall: float = float("nan")
+    predicted_success: float = float("nan")
+    expected_candidates: float = float("nan")
+
+    def __post_init__(self):
+        if self.mode not in ("probe", "multiprobe"):
+            raise ValueError(
+                f"PlannedSpec.mode must be 'probe' or 'multiprobe', got {self.mode!r}"
+            )
+        for field in ("k", "n_probes", "max_candidates"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v <= 0:
+                raise ValueError(
+                    f"PlannedSpec.{field} must be a positive int, got {v!r}"
+                )
+        if not isinstance(self.max_flips, int) or self.max_flips < 0:
+            raise ValueError(
+                f"PlannedSpec.max_flips must be a non-negative int, got {self.max_flips!r}"
+            )
+
+    def to_query_spec(self) -> QuerySpec:
+        """The mechanism-level spec this plan executes as."""
+        if self.mode == "multiprobe":
+            return QuerySpec(
+                k=self.k, mode="multiprobe", n_probes=self.n_probes,
+                max_flips=self.max_flips,
+            )
+        return QuerySpec(k=self.k, mode="probe")
+
+    def effective_config(self, cfg):
+        """``cfg`` with this plan's probe window applied (never wider than
+        the built window — the sort-time perm padding caps it)."""
+        if self.max_candidates == cfg.max_candidates:
+            return cfg
+        if self.max_candidates > cfg.max_candidates:
+            raise ValueError(
+                f"PlannedSpec.max_candidates={self.max_candidates} exceeds the "
+                f"built IndexConfig.max_candidates={cfg.max_candidates} — this "
+                f"plan was made for a different index geometry"
+            )
+        return dataclasses.replace(cfg, max_candidates=self.max_candidates)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -56,6 +56,11 @@ class RetrievalConfig:
     # > 0 makes the datastore index mutable (streaming ingest of new
     # (hidden-state, token) records during serving; see runtime.retrieval)
     delta_capacity: int = 0
+    # quality-first retrieval: when set, build_datastore resolves a
+    # QualitySpec(k=topk, recall_target=...) through the planner EAGERLY
+    # (the memoized plan then drives every decode-step lookup; the explicit
+    # K/L/max_candidates above are the legacy path and still the default)
+    recall_target: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)

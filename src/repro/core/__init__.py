@@ -9,8 +9,15 @@
 
 This package is the ENGINE; ``repro.api`` is the facade consumers should
 use. ``build_index`` / ``query_index`` / ``query_multiprobe`` remain as
-thin shims over the same code paths the facade calls.
+thin shims over the same code paths the facade calls — importable from
+here for backward compatibility, but DEPRECATED: calling the package-level
+names emits ``DeprecationWarning`` pointing at ``repro.api.Index``. (The
+defining modules ``repro.core.index`` / ``repro.core.multiprobe`` stay
+warning-free — the facade itself executes through them.)
 """
+
+import functools as _functools
+import warnings as _warnings
 
 from repro.core.families import (
     FAMILIES,
@@ -50,11 +57,39 @@ from repro.core.index import (
     DeltaSegment,
     IndexConfig,
     QueryResult,
-    build_index,
     delta_insert,
-    query_index,
     query_index_segmented,
     tombstone_ids,
+)
+from repro.core.index import build_index as _build_index
+from repro.core.index import query_index as _query_index
+from repro.core.multiprobe import query_multiprobe as _query_multiprobe
+
+
+def _deprecated_shim(fn, name: str, facade: str):
+    @_functools.wraps(fn)
+    def shim(*args, **kwargs):
+        _warnings.warn(
+            f"repro.core.{name} is a legacy shim — use {facade} instead "
+            f"(one config-carrying Index; same engine, same results)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return fn(*args, **kwargs)
+
+    return shim
+
+
+build_index = _deprecated_shim(
+    _build_index, "build_index", "repro.api.Index.build"
+)
+query_index = _deprecated_shim(
+    _query_index, "query_index", "repro.api.Index.query"
+)
+query_multiprobe = _deprecated_shim(
+    _query_multiprobe,
+    "query_multiprobe",
+    "repro.api.Index.query with QuerySpec(mode='multiprobe')",
 )
 
 __all__ = [
@@ -91,5 +126,6 @@ __all__ = [
     "delta_insert",
     "query_index",
     "query_index_segmented",
+    "query_multiprobe",
     "tombstone_ids",
 ]

@@ -39,6 +39,7 @@ __all__ = [
     "FAMILIES",
     "get_family",
     "flip_subsets",
+    "n_flip_subsets",
 ]
 
 
@@ -160,6 +161,16 @@ class L2Family(HashFamily):
         # correctness, the candidate budget keeps cost bounded.
         mixed = codes_lk.astype(jnp.int32) * mixers  # wrapping int32 mul
         return jnp.sum(mixed, axis=-1)
+
+
+def n_flip_subsets(K: int, max_flips: int) -> int:
+    """How many distinct probe keys ``flip_subsets`` can reach: the number
+    of bit-flip subsets of size <= max_flips, INCLUDING the empty subset
+    (the query's own bucket). ``n_probes`` beyond this count can only probe
+    duplicate buckets — the facade rejects such specs up front."""
+    import math
+
+    return sum(math.comb(K, r) for r in range(0, min(max_flips, K) + 1))
 
 
 def flip_subsets(K: int, max_flips: int) -> jax.Array:

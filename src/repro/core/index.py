@@ -346,6 +346,37 @@ def build_index(
     )
 
 
+def table_window_sizes(sorted_keys: jax.Array, keys: jax.Array) -> jax.Array:
+    """How many rows share each probed bucket — the probe window BEFORE the
+    ``max_candidates`` clamp.
+
+    sorted_keys: (L, n) per-table sorted bucket keys.
+    keys: (b, L) single-probe keys or (b, L, P) multiprobe keys.
+    Returns window sizes of the same (b, L[, P]) shape. Windows larger than
+    the configured ``max_candidates`` are TRUNCATED by the probe — this is
+    the signal ``Index.explain`` surfaces so a recall miss can be told apart
+    from an unlucky hash draw."""
+    k3 = keys if keys.ndim == 3 else keys[..., None]  # (b, L, P)
+
+    def one_table(sk_row, key_row):  # (n,), (b, P) -> (b, P)
+        s = jnp.searchsorted(sk_row, key_row, side="left")
+        e = jnp.searchsorted(sk_row, key_row, side="right")
+        return (e - s).astype(jnp.int32)
+
+    out = jax.vmap(one_table, in_axes=(0, 1), out_axes=1)(sorted_keys, k3)
+    return out if keys.ndim == 3 else out[..., 0]
+
+
+def query_keys_for(
+    index: ALSHIndex, queries: jax.Array, weights: jax.Array, cfg: IndexConfig
+) -> jax.Array:
+    """(b, L) single-probe bucket keys of a query batch (diagnostic entry
+    point for the planner and ``Index.explain``; the query path computes
+    the same keys inside ``_probe_candidates``)."""
+    qlevels = transforms.discretize(queries, cfg.space)
+    return _keys_for(qlevels, weights, index.tables, cfg, index.mixers)
+
+
 def _probe_one_table(sorted_keys_row, perm_row, qkey, C: int):
     """One table probe: sorted lookup + bounded candidate window."""
     start = jnp.searchsorted(sorted_keys_row, qkey, side="left")

@@ -52,6 +52,32 @@ from repro.kernels import ops
 _flip_subsets = flip_subsets
 
 
+def multiprobe_keys_for(
+    index: ALSHIndex,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig,
+    n_probes: int,
+    max_flips: int,
+) -> jax.Array:
+    """The (b, L, P) query-directed probing sequence for a query batch —
+    the query's own bucket key first, then perturbed keys in increasing
+    flip-cost order. P may be clamped below ``n_probes`` by the family's
+    reachable-subset count. Shared by the query path, the planner's
+    calibration pass, and ``Index.explain`` window diagnostics."""
+    family = get_family(cfg.family)
+    if not family.supports_multiprobe:
+        raise ValueError(
+            f"family {cfg.family!r} does not support multiprobe querying; "
+            "build the index with family='theta' or query with "
+            "QuerySpec(mode='probe')"
+        )
+    b = queries.shape[0]
+    qlevels = transforms.discretize(queries, cfg.space)
+    proj = ops.alsh_project(qlevels, index.tables.folded, weights)  # (b, H)
+    return family.multiprobe_keys(proj.reshape(b, cfg.L, cfg.K), n_probes, max_flips)
+
+
 def _multiprobe_candidates(
     index: ALSHIndex,
     queries: jax.Array,
@@ -63,22 +89,11 @@ def _multiprobe_candidates(
     """Multiprobe front half: probing sequence + window-probe of every
     (table, probe) pair. Returns ((b, L·P·C) raw candidate ids, (b, L, P)
     probe keys — reused by the delta-segment probe)."""
-    family = get_family(cfg.family)
-    if not family.supports_multiprobe:
-        raise ValueError(
-            f"family {cfg.family!r} does not support multiprobe querying; "
-            "build the index with family='theta' or query with "
-            "QuerySpec(mode='probe')"
-        )
     b, d = queries.shape
     C = cfg.max_candidates
     K, L = cfg.K, cfg.L
 
-    qlevels = transforms.discretize(queries, cfg.space)
-    proj = ops.alsh_project(qlevels, index.tables.folded, weights)  # (b, H)
-    probe_keys = family.multiprobe_keys(
-        proj.reshape(b, L, K), n_probes, max_flips
-    )  # (b, L, P)
+    probe_keys = multiprobe_keys_for(index, queries, weights, cfg, n_probes, max_flips)
     n_probes = probe_keys.shape[-1]  # family may clamp to the subset count
 
     # probe every (table, probe) pair

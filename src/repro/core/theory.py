@@ -4,6 +4,28 @@ Everything here is closed-form and differentiable; benchmarks/collision.py
 Monte-Carlo-validates these curves against the actual hash implementations,
 and benchmarks/rho_tables.py reproduces the paper's complexity claims
 (rho < 1 => sublinear query time, Theorem 1).
+
+Besides the forward curves this module carries their INVERSES:
+
+  wl1_from_l2_distance / wl1_from_angular_distance   — Eq 24/26 inverted
+  invert_p_l2                                        — Eq 4 inverted (bisection)
+  solve_K / solve_tables(P1, P2, n, fail_prob)       — Thm 1 (K, L) for a
+                                                       requested failure bound
+  solve_bucket_width                                 — W minimizing rho for the
+                                                       l2 family at (s1, s2)
+  operating_radii                                    — (R1, R2) from a sample
+                                                       of observed NN distances
+
+These are the SCALAR Thm 1 solvers — one aggregate (P1, P2) operating
+point in, one (K, L) out — directly unit-tested in tests/test_theory.py.
+The declarative planner (``repro.api.planner``) shares ``solve_K`` and
+``invert_p_l2`` but deliberately replaces the scalar L / W / radius solves
+with PER-SAMPLE variants (L from the sampled success curve, W anchored at a
+collision-prob quantile): a single aggregate operating point overpromises
+badly for spread-out weight distributions — see DESIGN.md §5. Fixes to the
+scalar solvers here do NOT change planner behavior; they remain the
+closed-form reference (and the right tool when you have a known worst-case
+weight profile rather than a data sample).
 """
 
 from __future__ import annotations
@@ -132,3 +154,148 @@ def plan_index(
 def success_probability(plan: IndexPlan) -> float:
     """P[some table collides with an R1-near neighbour] = 1 - (1 - P1^K)^L."""
     return 1.0 - (1.0 - plan.P1**plan.K) ** plan.L
+
+
+# ---------------------------------------------------------------------------
+# Inverse solvers — quality targets in, mechanism out (the planner's substrate)
+# ---------------------------------------------------------------------------
+
+
+def wl1_from_l2_distance(s: jax.Array, M: int, d: int, w: jax.Array) -> jax.Array:
+    """Eq 24 inverted: the d_w^l1 distance r whose transformed l2 distance is s.
+
+    From s^2 = M (d + sum w_i^2) - 2 (M sum w_i - r):
+    r = M sum w_i - (M (d + sum w_i^2) - s^2) / 2.
+    """
+    sw = jnp.sum(w, axis=-1)
+    sw2 = jnp.sum(w * w, axis=-1)
+    return M * sw - (M * (d + sw2) - jnp.square(s)) / 2.0
+
+
+def wl1_from_angular_distance(ang: jax.Array, M: int, d: int, w: jax.Array) -> jax.Array:
+    """Eq 26 inverted: the d_w^l1 distance r whose transformed angle is ang."""
+    sw = jnp.sum(w, axis=-1)
+    sw2 = jnp.sum(w * w, axis=-1)
+    return M * sw - jnp.cos(ang) * M * jnp.sqrt(d * sw2)
+
+
+def invert_p_l2(p: float, W: float, r_hi: float = 1e9) -> float:
+    """Eq 4 inverted: the l2 distance r at which p_l2(r, W) == p.
+
+    ``p_l2`` is strictly decreasing in r with range (0, 1), so the root is
+    unique; solved by bisection on r in (0, r_hi]. Host-side (not
+    differentiable/jittable) — the planner calls it a handful of times.
+    """
+    if not (0.0 < p < 1.0):
+        raise ValueError(f"invert_p_l2: p must be in (0, 1), got {p}")
+    lo, hi = 1e-12, float(r_hi)
+    if float(p_l2(jnp.asarray(hi), W)) > p:  # p unreachably small even at r_hi
+        return hi
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if float(p_l2(jnp.asarray(mid), W)) > p:
+            lo = mid
+        else:
+            hi = mid
+        if hi - lo <= 1e-9 * max(1.0, hi):
+            break
+    return 0.5 * (lo + hi)
+
+
+def solve_K(P2: float, n: int, max_K: int = 32) -> int:
+    """Thm 1 hash count: K = ceil(ln n / ln(1/P2)) caps the expected
+    far-point collisions per table at O(1); clamped to [1, max_K]."""
+    if not (0.0 < P2 < 1.0):
+        raise ValueError(f"solve_K: P2 must be in (0, 1), got {P2}")
+    return max(1, min(max_K, math.ceil(math.log(n) / math.log(1.0 / P2))))
+
+
+def solve_tables(
+    P1: float,
+    P2: float,
+    n: int,
+    fail_prob: float = math.exp(-1.0),
+    max_K: int = 32,
+    max_L: int = 1024,
+) -> tuple[int, int]:
+    """Thm 1 construction solved for a REQUESTED failure bound.
+
+    K = ceil(ln n / ln(1/P2)) bounds the far-point candidate load at O(1)
+    per table; L = ceil(ln(1/delta) / P1^K) makes the miss probability of an
+    R1-near neighbour (1 - P1^K)^L <= delta = ``fail_prob``. The classic
+    L = P1^-K choice is the special case delta = 1/e.
+
+    Returns (K, L) clamped to [1, max_K] x [1, max_L]; the clamp can raise
+    the achieved failure probability above ``fail_prob`` — callers that need
+    the truth recompute 1-(1-P1^K)^L from the returned values (the planner
+    records it in ``PlannedSpec.predicted_success``).
+    """
+    if not (0.0 < P2 < P1 < 1.0):
+        raise ValueError(f"solve_tables: need 0 < P2 < P1 < 1, got P1={P1} P2={P2}")
+    if not (0.0 < fail_prob < 1.0):
+        raise ValueError(f"solve_tables: fail_prob must be in (0, 1), got {fail_prob}")
+    K = solve_K(P2, n, max_K)
+    # miss prob (1 - P1^K)^L <= delta  =>  L >= ln(delta) / ln(1 - P1^K)
+    p_hit = P1**K
+    if p_hit >= 1.0:
+        L = 1
+    else:
+        L = math.ceil(math.log(fail_prob) / math.log1p(-p_hit))
+    return K, max(1, min(max_L, L))
+
+
+def solve_bucket_width(
+    s1: float,
+    s2: float,
+    lo_factor: float = 0.05,
+    hi_factor: float = 8.0,
+    steps: int = 256,
+) -> float:
+    """Pick the l2 family's bucket width W minimizing rho at (s1, s2).
+
+    s1/s2 are the TRANSFORMED l2 distances of the near/far radii (Eq 24).
+    rho(W) = log p_l2(s1, W) / log p_l2(s2, W) is smooth and single-dipped
+    in W; a deterministic log-spaced grid search over [lo_factor*s2,
+    hi_factor*s2] is accurate to ~1% and has no convergence knobs.
+    """
+    if not (0.0 < s1 < s2):
+        raise ValueError(f"solve_bucket_width: need 0 < s1 < s2, got {s1}, {s2}")
+    ws = jnp.exp(
+        jnp.linspace(math.log(lo_factor * s2), math.log(hi_factor * s2), steps)
+    )
+    p1 = p_l2(jnp.asarray(s1), ws)
+    p2 = p_l2(jnp.asarray(s2), ws)
+    # guard the open ends where p -> 0 or 1 and the ratio degenerates
+    eps = 1e-12
+    rhos = jnp.log(jnp.clip(p1, eps, 1 - eps)) / jnp.log(jnp.clip(p2, eps, 1 - eps))
+    ok = (p1 > eps) & (p2 > eps) & (p1 < 1 - eps) & (p2 < 1 - eps)
+    rhos = jnp.where(ok, rhos, jnp.inf)
+    return float(ws[int(jnp.argmin(rhos))])
+
+
+def operating_radii(
+    nn_dists, approx_c: float, quantile: float = 0.5, r_max: float | None = None
+) -> tuple[float, float]:
+    """(R1, R2) from a calibration sample of observed NN distances.
+
+    R1 is the ``quantile`` of the sample (the radius a typical query's true
+    neighbour sits at); R2 = approx_c * R1 is the Thm 1 far radius. Both are
+    clamped to (0, r_max) when ``r_max`` (the geometric diameter
+    M * sum w_i) is given — degenerate samples (all-zero distances) fall
+    back to r_max / (2 * approx_c).
+    """
+    import numpy as np
+
+    if approx_c <= 1.0:
+        raise ValueError(f"operating_radii: approx_c must be > 1, got {approx_c}")
+    arr = np.asarray(nn_dists, dtype=np.float64).reshape(-1)
+    arr = arr[np.isfinite(arr)]
+    R1 = float(np.quantile(arr, quantile)) if arr.size else 0.0
+    if r_max is not None and (R1 <= 0.0 or approx_c * R1 >= r_max):
+        R1 = min(R1, r_max / (2.0 * approx_c)) or r_max / (2.0 * approx_c)
+    if R1 <= 0.0:
+        raise ValueError(
+            "operating_radii: calibration sample gave a non-positive near "
+            "radius and no r_max fallback was provided"
+        )
+    return R1, approx_c * R1

@@ -3,7 +3,12 @@
   ALSH vector-search service (the paper's workload), served end-to-end
   through the ``repro.api`` Index facade on the fused probe pipeline
   (probe → dedupe → gather_rerank_topk kernels; the exactness spot-check
-  is the same facade with QuerySpec(mode="exact")):
+  is the same facade with QuerySpec(mode="exact")). Configuration is
+  QUALITY-FIRST: state a recall target and the planner resolves the
+  execution knobs (and prints its resolution + per-batch diagnostics):
+    python -m repro.launch.serve --mode alsh --recall-target 0.9
+  The legacy knob path is untouched — give explicit knobs and no planning
+  happens (bit-identical to previous releases):
     python -m repro.launch.serve --mode alsh [--n 100000 --d 64 --batches 4]
     python -m repro.launch.serve --mode alsh --multiprobe --probes 8
 
@@ -31,7 +36,7 @@ def serve_alsh(args):
     import jax
     import jax.numpy as jnp
 
-    from repro.api import Index, QuerySpec
+    from repro.api import Index, QualitySpec, QuerySpec
     from repro.configs.paper_alsh import ALSHServiceConfig
     from repro.distance import recall_at_k
 
@@ -41,15 +46,28 @@ def serve_alsh(args):
     )
     key = jax.random.PRNGKey(0)
     data = jax.random.uniform(jax.random.fold_in(key, 1), (svc.n_per_shard, svc.d))
+
+    # quality-first: a stated recall target plans BOTH the geometry and the
+    # serving policy; explicit knobs (the legacy path) skip planning entirely
+    quality = None
+    if args.recall_target is not None:
+        quality = QualitySpec(k=svc.topk, recall_target=args.recall_target,
+                              latency_budget_ms=args.latency_budget_ms)
     t0 = time.time()
-    index = Index.build(jax.random.fold_in(key, 2), data, svc.index_config)
+    index = Index.build(jax.random.fold_in(key, 2), data,
+                        quality if quality is not None else svc.index_config)
     jax.block_until_ready(index.state.sorted_keys)
     cfg = index.config
     print(f"[alsh] built index over n={svc.n_per_shard} d={svc.d} "
-          f"K={cfg.K} L={cfg.L} in {time.time()-t0:.2f}s")
+          f"family={cfg.family} K={cfg.K} L={cfg.L} in {time.time()-t0:.2f}s"
+          + (" (planned from QualitySpec)" if quality is not None else ""))
 
-    # serving policy is a QuerySpec value, not a code path
-    if args.multiprobe:
+    # serving policy is a spec value, not a code path
+    if quality is not None:
+        t0 = time.time()
+        spec = index.plan(quality)  # calibration pass, memoized
+        print(f"[alsh] planned in {time.time()-t0:.2f}s: {spec}")
+    elif args.multiprobe:
         spec = QuerySpec(k=svc.topk, mode="multiprobe", n_probes=args.probes)
     else:
         spec = QuerySpec(k=svc.topk)
@@ -67,10 +85,16 @@ def serve_alsh(args):
         # spot-check recall on the first 16 queries (exact mode = the oracle)
         ref = index.query(q[:16], w[:16], exact)
         rec = recall_at_k(res.ids[:16], ref.ids, svc.topk)
-        print(f"[alsh] batch {b}: {svc.query_batch} queries in {dt*1e3:.1f} ms "
-              f"({dt/svc.query_batch*1e6:.1f} us/query) "
-              f"cand_frac={float(jnp.mean(res.n_candidates))/svc.n_per_shard:.4f} "
-              f"recall@{svc.topk}~{rec:.2f}")
+        line = (f"[alsh] batch {b}: {svc.query_batch} queries in {dt*1e3:.1f} ms "
+                f"({dt/svc.query_batch*1e6:.1f} us/query) "
+                f"cand_frac={float(jnp.mean(res.n_candidates))/svc.n_per_shard:.4f} "
+                f"recall@{svc.topk}~{rec:.2f}")
+        if quality is not None:
+            # per-query diagnostics: predicted success + truncation pressure
+            rep = index.explain(q[:16], w[:16], spec)
+            line += (f" pred_success~{float(rep.predicted_success.mean()):.2f} "
+                     f"truncated={int((rep.truncated_tables > 0).sum())}/16")
+        print(line)
 
 
 def serve_alsh_stream(args):
@@ -215,6 +239,13 @@ def main():
                     help="serve with QuerySpec(mode='multiprobe')")
     ap.add_argument("--probes", type=int, default=8,
                     help="multiprobe buckets per table")
+    ap.add_argument("--recall-target", type=float, default=None,
+                    help="alsh mode: quality-first serving — plan geometry "
+                         "and policy for this recall@topk (overrides "
+                         "--K/--L/--multiprobe/--probes)")
+    ap.add_argument("--latency-budget-ms", type=float, default=None,
+                    help="alsh mode: optional per-query latency budget for "
+                         "the planner's cost model (with --recall-target)")
     ap.add_argument("--ingest", type=int, default=512,
                     help="stream mode: rows inserted per tick")
     ap.add_argument("--retire", type=int, default=128,

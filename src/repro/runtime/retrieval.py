@@ -27,7 +27,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.api import Index, QuerySpec, UpdateSpec
+from repro.api import Index, QualitySpec, QuerySpec, UpdateSpec
 from repro.configs.base import RetrievalConfig
 from repro.core import BoundedSpace, IndexConfig
 
@@ -37,6 +37,19 @@ class RetrievalState(NamedTuple):
     values: jax.Array  # (n + delta_capacity,) int32 token ids of records
     proj: jax.Array  # (d_model, d_key) random key-reduction projection
     default_w: jax.Array  # (d_key,) default per-dimension weights
+
+
+def query_spec(rcfg: RetrievalConfig):
+    """The per-decode-step lookup spec this config asks for.
+
+    With ``rcfg.recall_target`` set this is a :class:`QualitySpec` — it
+    resolves through the plan memo ``build_datastore`` populated eagerly
+    (the memo rides the Index pytree, so resolution inside a jit'd decode
+    step is a Python dict hit at trace time, never a calibration run).
+    """
+    if rcfg.recall_target is not None:
+        return QualitySpec(k=rcfg.topk, recall_target=rcfg.recall_target)
+    return QuerySpec(k=rcfg.topk)
 
 
 def index_config(rcfg: RetrievalConfig) -> IndexConfig:
@@ -73,6 +86,13 @@ def build_datastore(
     index = Index.build(
         k4, keys, index_config(rcfg), update=UpdateSpec(delta_capacity=cap)
     )
+    if rcfg.recall_target is not None:
+        # resolve the lookup plan NOW (host-side), calibrated against the
+        # datastore's own precision-weight profile — decode steps then hit
+        # the memo, even across the jit boundary
+        from repro.api import Planner
+
+        index.plan(query_spec(rcfg), planner=Planner(weights=w))
     return RetrievalState(index=index, values=values, proj=proj, default_w=w)
 
 
@@ -120,7 +140,9 @@ def retrieve_logits(
     q = reduce_key(hidden, state)
     B = q.shape[0]
     w = weights if weights is not None else jnp.broadcast_to(state.default_w, q.shape)
-    res = state.index.query(q, w, QuerySpec(k=rcfg.topk))  # config rides with the index
+    # config rides with the index; quality-first configs resolve via the
+    # plan memo (populated by build_datastore, carried through jit)
+    res = state.index.query(q, w, query_spec(rcfg))
     # softmax(-d/T) over retrieved records, scattered onto their token ids
     valid = res.ids >= 0
     scores = jnp.where(valid, -res.dists / temperature, -jnp.inf)

@@ -24,6 +24,25 @@ def test_datastore_build_and_probe(rng):
     np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-3)
 
 
+def test_quality_first_datastore(rng):
+    """rcfg.recall_target plans the lookup eagerly (precision-weight
+    calibration) and the memoized plan drives jit'd retrieval."""
+    import dataclasses
+
+    rcfg = dataclasses.replace(RCFG, recall_target=0.7)
+    state = rt.build_datastore(rng, d_model=64, vocab=512, rcfg=rcfg)
+    spec = rt.query_spec(rcfg)
+    assert spec in state.index.plans  # resolved at build, not at decode
+    hidden = jax.random.normal(jax.random.fold_in(rng, 7), (4, 64))
+    logp = jax.jit(
+        lambda h, s: rt.retrieve_logits(h, s, rcfg, vocab=512)
+    )(hidden, state)  # memo must survive the jit crossing
+    assert logp.shape == (4, 512)
+    # and the planned path is bit-identical to executing the plan directly
+    want = rt.retrieve_logits(hidden, state, rcfg, vocab=512)
+    np.testing.assert_array_equal(np.asarray(logp), np.asarray(want))
+
+
 def test_interpolation_is_valid_distribution(rng):
     state = rt.build_datastore(rng, d_model=64, vocab=512, rcfg=RCFG)
     hidden = jax.random.normal(jax.random.fold_in(rng, 2), (2, 64))

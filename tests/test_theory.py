@@ -69,6 +69,105 @@ def test_plan_index_reasonable():
     assert theory.success_probability(plan) > 0.5
 
 
+def test_p_l2_closed_form_bounds_and_width_monotonicity():
+    """Eq 4 direct: p in (0, 1), decreasing in r, increasing in W."""
+    rs = jnp.linspace(0.1, 50.0, 64)
+    for W in (1.0, 4.0, 16.0):
+        ps = np.asarray(theory.p_l2(rs, W))
+        assert np.all((ps > 0) & (ps < 1))
+        assert np.all(np.diff(ps) <= 1e-7), "p_l2 must decrease with r"
+    p_by_W = [float(theory.p_l2(jnp.asarray(5.0), W)) for W in (1.0, 2.0, 4.0, 8.0)]
+    assert np.all(np.diff(p_by_W) > 0), "p_l2 must increase with W at fixed r"
+
+
+def test_p_theta_closed_form():
+    """Eq 6 direct: linear in the angle, 1 at 0, 0 at pi."""
+    np.testing.assert_allclose(float(theory.p_theta(jnp.asarray(0.0))), 1.0)
+    np.testing.assert_allclose(float(theory.p_theta(jnp.asarray(jnp.pi))), 0.0, atol=1e-7)
+    np.testing.assert_allclose(float(theory.p_theta(jnp.asarray(jnp.pi / 2))), 0.5)
+
+
+@pytest.mark.parametrize("family", ["theta", "l2"])
+def test_eq24_eq26_inverse_round_trip(family):
+    """wl1 -> transformed distance -> wl1 is the identity (Eq 24/26 inverted)."""
+    d, M = 9, 16
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (d,))) + 0.2
+    rs = jnp.linspace(0.5, 0.5 * M * float(jnp.sum(w)), 32)
+    if family == "l2":
+        back = theory.wl1_from_l2_distance(
+            theory.l2_distance_from_wl1(rs, M, d, w), M, d, w
+        )
+    else:
+        back = theory.wl1_from_angular_distance(
+            theory.angular_distance_from_wl1(rs, M, d, w), M, d, w
+        )
+    np.testing.assert_allclose(np.asarray(back), np.asarray(rs), rtol=1e-4, atol=1e-2)
+
+
+def test_invert_p_l2_round_trip():
+    for W in (2.0, 8.0):
+        for p in (0.2, 0.5, 0.9):
+            r = theory.invert_p_l2(p, W)
+            np.testing.assert_allclose(float(theory.p_l2(jnp.asarray(r), W)), p, rtol=1e-5)
+    with pytest.raises(ValueError, match="invert_p_l2"):
+        theory.invert_p_l2(1.5, 4.0)
+
+
+def test_solve_K():
+    assert theory.solve_K(0.5, 1024) == 10
+    assert theory.solve_K(0.5, 10**9, max_K=12) == 12  # clamped
+    assert theory.solve_K(0.999, 10) >= 1
+    with pytest.raises(ValueError, match="solve_K"):
+        theory.solve_K(1.0, 100)
+
+
+def test_solve_tables_meets_failure_bound():
+    """L returned by solve_tables achieves miss prob <= fail_prob (pre-clamp)."""
+    P1, P2, n = 0.8, 0.5, 100_000
+    for delta in (0.3, 0.1, 0.01):
+        K, L = theory.solve_tables(P1, P2, n, fail_prob=delta, max_L=100_000)
+        assert (1.0 - P1**K) ** L <= delta + 1e-12
+    # stricter target -> no fewer tables
+    _, L_loose = theory.solve_tables(P1, P2, n, fail_prob=0.3, max_L=100_000)
+    _, L_tight = theory.solve_tables(P1, P2, n, fail_prob=0.01, max_L=100_000)
+    assert L_tight >= L_loose
+    with pytest.raises(ValueError, match="fail_prob"):
+        theory.solve_tables(P1, P2, n, fail_prob=0.0)
+    with pytest.raises(ValueError, match="P2 < P1"):
+        theory.solve_tables(0.5, 0.8, n)
+
+
+def test_solve_bucket_width_minimizes_rho():
+    """The solved W beats nearby widths on rho = log p(s1)/log p(s2)."""
+    s1, s2 = 6.0, 18.0
+
+    def rho_at(W):
+        return float(
+            jnp.log(theory.p_l2(jnp.asarray(s1), W))
+            / jnp.log(theory.p_l2(jnp.asarray(s2), W))
+        )
+
+    W = theory.solve_bucket_width(s1, s2)
+    assert rho_at(W) < 1.0
+    for factor in (0.25, 0.5, 2.0, 4.0):
+        assert rho_at(W) <= rho_at(W * factor) + 1e-3, (W, factor)
+    with pytest.raises(ValueError, match="solve_bucket_width"):
+        theory.solve_bucket_width(5.0, 5.0)
+
+
+def test_operating_radii():
+    R1, R2 = theory.operating_radii([1.0, 2.0, 3.0, 4.0, 5.0], approx_c=2.0)
+    np.testing.assert_allclose(R1, 3.0)
+    np.testing.assert_allclose(R2, 6.0)
+    # degenerate sample falls back to the geometric diameter when given
+    R1, R2 = theory.operating_radii([0.0, 0.0], approx_c=2.0, r_max=40.0)
+    assert 0 < R1 and R2 == 2 * R1 and R2 <= 40.0
+    with pytest.raises(ValueError, match="approx_c"):
+        theory.operating_radii([1.0], approx_c=1.0)
+    with pytest.raises(ValueError, match="non-positive"):
+        theory.operating_radii([0.0], approx_c=2.0)
+
+
 def test_eq24_consistency(rng):
     """Eq 24: ||P(o)-Q_w(q)||_2 closed form == explicit vector computation."""
     from repro.core import transforms

@@ -105,6 +105,52 @@ def _fused_tail_rows(key):
     return out
 
 
+def _segmented_tail_rows(key):
+    """Engine two-segment tail: fused per-segment gather (``delta=``) vs
+    the superseded concat-table path (materialize [main; delta], single
+    gather) — same deduped candidate ids addressing both segments."""
+    from repro.core.index import _dedupe_candidates
+
+    n, cap, b, d, k = 65536, 4096, 64, 128, 10
+    main = jax.random.uniform(jax.random.fold_in(key, 0), (n, d))
+    delta = jax.random.uniform(jax.random.fold_in(key, 1), (cap, d))
+    q = jax.random.uniform(jax.random.fold_in(key, 2), (b, d))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (b, d))) + 0.1
+    n_tot = n + cap
+
+    fused = jax.jit(
+        lambda m, dl, ids, q, w: ops.gather_rerank_topk(m, ids, q, w, k, delta=dl)
+    )
+    concat = jax.jit(
+        lambda m, dl, ids, q, w: ops.gather_rerank_topk(
+            jnp.concatenate([m, dl]), ids, q, w, k
+        )
+    )
+    out = []
+    for P in (1024, 4096):
+        # ~1/8 of candidates land in the delta segment, ~20% sentinels —
+        # the id mix a full delta produces after dedupe
+        km = jax.random.fold_in(key, 100 + P)
+        ids_m = jax.random.randint(jax.random.fold_in(km, 0), (b, (P * 7) // 8), 0, n)
+        ids_d = jax.random.randint(
+            jax.random.fold_in(km, 1), (b, P - (P * 7) // 8), n, n_tot + n_tot // 4
+        )
+        ids, _ = jax.jit(_dedupe_candidates, static_argnums=1)(
+            jnp.concatenate([ids_m, ids_d], axis=1).astype(jnp.int32), n_tot
+        )
+        t_f = time_fn(fused, main, delta, ids, q, w)
+        t_c = time_fn(concat, main, delta, ids, q, w)
+        out.append(
+            row(
+                f"kernel_fused_tail_two_segment_P{P}",
+                t_f,
+                f"b={b},d={d},k={k},cap={cap};concat_us={t_c:.1f};"
+                f"speedup={t_c / t_f:.2f}x",
+            )
+        )
+    return out
+
+
 def _scan_topk_rows(key):
     """Streaming top-k scan vs materializing scan + top_k baseline."""
     n, b, d, k = 65536, 64, 128, 10
@@ -166,4 +212,5 @@ def run():
 
     out.extend(_scan_topk_rows(jax.random.fold_in(key, 7)))
     out.extend(_fused_tail_rows(jax.random.fold_in(key, 8)))
+    out.extend(_segmented_tail_rows(jax.random.fold_in(key, 9)))
     return out

@@ -6,11 +6,15 @@ What the numbers validate:
 
   * insert is O(H·d·m) hash + scatter — orders of magnitude cheaper than
     the O(H·d·n + L·n log n) rebuild a build-once index needs per batch;
-  * two-segment query latency grows mildly with delta fill (the dense
+  * two-segment query latency grows mildly with delta fill (the chunked
     delta match adds O(L·cap) key compares + its candidates to the fused
     tail) — the price of mutability between compactions;
   * compact() re-sorts WITHOUT re-hashing, so it undercuts a full
-    Index.build of the same rows.
+    Index.build of the same rows;
+  * the engine's fused two-segment tail (in-place per-segment gather +
+    chunked delta match) meets or beats the superseded concat-table tail
+    (per-batch (n_main+cap, d) concatenation + dense (b, L, P, cap) key
+    match) across delta capacities 1k/4k/16k — the ``engine/`` rows.
 
 Sizes default small enough for the CI smoke (``--only update_bench``); the
 shapes, not the absolute times, are the regression signal.
@@ -43,6 +47,44 @@ def _cfg() -> IndexConfig:
         d=D, M=M, K=10, L=32, family="theta", max_candidates=256,
         space=BoundedSpace(0.0, 1.0, float(M)),
     )
+
+
+def _legacy_two_segment_query(ix, q, w, k: int):
+    """The superseded pre-engine two-segment tail, inlined as the
+    benchmark comparator: dense (b, L, P, cap) delta key match + per-batch
+    (n_main + cap, d) concat-table gather (what query_index_segmented ran
+    before the engine refactor)."""
+    from repro.core import transforms
+    from repro.core.index import (
+        _dedupe_candidates,
+        _keys_for,
+        _mask_dead,
+        _probe_one_table,
+        delta_live_mask,
+    )
+    from repro.kernels import ops
+
+    state, cfg = ix.state, ix.config
+    n_main = state.n
+    cap = ix.delta.capacity
+    n_tot = n_main + cap
+    qlevels = transforms.discretize(q, cfg.space)
+    keys = _keys_for(qlevels, w, state.tables, cfg, state.mixers)  # (b, L)
+    probe = jax.vmap(
+        jax.vmap(_probe_one_table, in_axes=(0, 0, 0, None)),
+        in_axes=(None, None, 0, None),
+    )
+    cand = probe(state.sorted_keys, state.perm, keys, cfg.max_candidates)
+    cand = _mask_dead(cand.reshape(q.shape[0], -1), ix.tombstones, n_main, n_tot)
+    live = delta_live_mask(ix.delta, ix.tombstones, n_main)
+    pk = keys[:, :, None]
+    match = jnp.any(pk[:, :, :, None] == ix.delta.keys[None, :, None, :], axis=(1, 2))
+    slot_ids = n_main + jnp.arange(cap, dtype=jnp.int32)
+    dcand = jnp.where(match & live[None, :], slot_ids[None, :], n_tot).astype(jnp.int32)
+    cand = jnp.concatenate([cand, dcand], axis=1)
+    cand, _ = _dedupe_candidates(cand, n_tot)
+    table = jnp.concatenate([state.data, ix.delta.data.astype(state.data.dtype)])
+    return ops.gather_rerank_topk(table, cand, q, w, k)
 
 
 def run():
@@ -97,6 +139,28 @@ def run():
     ix_dead = jdelete(index, dead)
     us = time_fn(lambda: jquery(ix_dead, q, w))
     rows.append(row("update/query_tombstoned", us, f"{us / base_us:.2f}x clean"))
+
+    # --- engine: two-segment fused tail vs old concat tail, cap sweep -------
+    # full delta at each capacity; fused = the production engine path
+    # (in-place per-segment gather, chunked key match), legacy = the
+    # superseded dense-match + concat-table tail it replaced. cap=16384 was
+    # previously outside the dense match's comfort zone (DESIGN.md §7, now
+    # consumed).
+    jlegacy = jax.jit(lambda ix, qq, ww: _legacy_two_segment_query(ix, qq, ww, K_NN)[0])
+    for cap in (1024, 4096, 16384):
+        ix_cap = Index.build(
+            jax.random.fold_in(key, 40), data, cfg,
+            update=UpdateSpec(delta_capacity=cap),
+        )
+        fill_rows = jax.random.uniform(jax.random.fold_in(key, 41), (cap, D))
+        ix_cap, _ = ix_cap.insert(fill_rows)
+        us_fused = time_fn(lambda ix=ix_cap: jquery(ix, q, w))
+        us_legacy = time_fn(lambda ix=ix_cap: jlegacy(ix, q, w))
+        rows.append(
+            row(f"engine/two_segment_fused_cap{cap}", us_fused,
+                f"legacy_concat_us={us_legacy:.1f};"
+                f"speedup={us_legacy / us_fused:.2f}x (b={B}, full delta)")
+        )
 
     # --- compact vs rebuild -------------------------------------------------
     extra = jax.random.uniform(jax.random.fold_in(key, 30), (CAP, D))

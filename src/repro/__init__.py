@@ -8,8 +8,11 @@ A production-grade JAX framework reproducing and extending:
 Public API surface (stable):
     repro.api         — THE facade: config-carrying Index, QuerySpec policies,
                         self-describing save/load, mesh sharding
-    repro.core        — engine: ALSH transforms, hash family strategies,
-                        theory, Theorem-1 index (legacy shims live here)
+    repro.engine      — candidate-stream execution engine: one probe→merge→
+                        dedupe→rerank pipeline behind every query mode
+    repro.core        — data structures + primitives: ALSH transforms, hash
+                        family strategies, theory, Theorem-1 index (legacy
+                        shims live here)
     repro.distance    — d_w^l1 / d_w^l2 reference distances + brute force NN
     repro.kernels     — Pallas TPU kernels (ops wrappers fall back to jnp on CPU)
     repro.models      — assigned LM architectures

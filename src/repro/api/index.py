@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.api.spec import PlannedSpec, QualitySpec, QuerySpec, UpdateSpec
 from repro.core.families import n_flip_subsets
 from repro.core.index import (
@@ -57,8 +58,6 @@ from repro.core.index import (
     QueryResult,
     build_index,
     delta_insert,
-    query_index,
-    query_index_segmented,
     tombstone_ids,
 )
 
@@ -68,6 +67,25 @@ def _as_key_data(key: jax.Array) -> jax.Array:
     if jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key):
         return jax.random.key_data(key)
     return key
+
+
+def validate_query_args(d: int, queries: jax.Array, weights: jax.Array) -> None:
+    """Shape/batch validation shared by BOTH query facades (``Index.query``
+    and ``ShardedIndex.query``): malformed ``(queries, weights)`` raise a
+    ValueError naming the offending argument instead of surfacing as a
+    trace error deep inside jit/shard_map."""
+    for name, arr in (("queries", queries), ("weights", weights)):
+        if arr.ndim != 2 or arr.shape[-1] != d:
+            raise ValueError(
+                f"{name} must be (b, d) with trailing dim config.d={d}; "
+                f"got {name}.shape={tuple(arr.shape)}"
+            )
+    if tuple(queries.shape[:-1]) != tuple(weights.shape[:-1]):
+        raise ValueError(
+            f"queries and weights batch dims disagree: "
+            f"queries.shape={tuple(queries.shape)} vs "
+            f"weights.shape={tuple(weights.shape)}"
+        )
 
 
 def _check_probe_reach(cfg: IndexConfig, spec: QuerySpec) -> None:
@@ -267,19 +285,7 @@ class Index:
 
     # -- querying -----------------------------------------------------------
     def _validate_query_args(self, queries: jax.Array, weights: jax.Array) -> None:
-        d = self.config.d
-        for name, arr in (("queries", queries), ("weights", weights)):
-            if arr.ndim != 2 or arr.shape[-1] != d:
-                raise ValueError(
-                    f"{name} must be (b, d) with trailing dim config.d={d}; "
-                    f"got {name}.shape={tuple(arr.shape)}"
-                )
-        if tuple(queries.shape[:-1]) != tuple(weights.shape[:-1]):
-            raise ValueError(
-                f"queries and weights batch dims disagree: "
-                f"queries.shape={tuple(queries.shape)} vs "
-                f"weights.shape={tuple(weights.shape)}"
-            )
+        validate_query_args(self.config.d, queries, weights)
 
     def resolve(self, spec) -> tuple[QuerySpec, IndexConfig, "PlannedSpec | None"]:
         """Normalize any spec kind to (mechanism QuerySpec, effective
@@ -332,71 +338,28 @@ class Index:
             multiprobe), a resolved :class:`PlannedSpec`, or a declarative
             :class:`QualitySpec` (planned on first use, memoized after).
 
-        Mutable indexes run the two-segment path: sealed-table window probe
-        + delta key match, tombstones masked before re-rank. Immutable
-        indexes take the sealed fast path (bit-identical to the legacy
-        shims). Invalid result slots are ``ids == -1`` / ``dists == +inf``
-        in every mode.
+        Every mode runs the one :mod:`repro.engine` pipeline — a mutable
+        index adds the delta key-match source and the tombstone mask to the
+        sealed-table window source; an immutable index probes the sealed
+        source alone (bit-identical to the legacy shims, which wrap the
+        same engine). Invalid result slots are ``ids == -1`` /
+        ``dists == +inf`` in every mode.
         """
         self._validate_query_args(queries, weights)
         qspec, cfg, _ = self.resolve(spec)
         _check_probe_reach(cfg, qspec)
-        if self.mutable:
-            return self._query_segmented(queries, weights, qspec, cfg)
-        if qspec.mode == "exact":
-            from repro.kernels import ops
-
-            dists, ids = ops.wl1_scan_topk(self.state.data, queries, weights, qspec.k)
-            n_candidates = jnp.full(queries.shape[0], self.n, jnp.int32)
-            return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
-        if qspec.mode == "multiprobe":
-            from repro.core.multiprobe import query_multiprobe
-
-            return query_multiprobe(
-                self.state,
-                queries,
-                weights,
-                cfg,
-                k=qspec.k,
-                n_probes=qspec.n_probes,
-                max_flips=qspec.max_flips,
-            )
-        return query_index(
-            self.state, queries, weights, cfg, k=qspec.k, impl=qspec.impl
-        )
-
-    def _query_segmented(
-        self, queries: jax.Array, weights: jax.Array, spec: QuerySpec, cfg: IndexConfig
-    ) -> QueryResult:
-        if spec.mode == "exact":
-            from repro.core.index import query_exact_segmented
-
-            return query_exact_segmented(
-                self.state, self.delta, self.tombstones, queries, weights, k=spec.k
-            )
-        if spec.mode == "multiprobe":
-            from repro.core.multiprobe import query_multiprobe_segmented
-
-            return query_multiprobe_segmented(
-                self.state,
-                self.delta,
-                self.tombstones,
-                queries,
-                weights,
-                cfg,
-                k=spec.k,
-                n_probes=spec.n_probes,
-                max_flips=spec.max_flips,
-            )
-        return query_index_segmented(
+        return engine.query(
             self.state,
-            self.delta,
-            self.tombstones,
+            self.delta if self.mutable else None,
+            self.tombstones if self.mutable else None,
             queries,
             weights,
             cfg,
-            k=spec.k,
-            impl=spec.impl,
+            k=qspec.k,
+            mode=qspec.mode,
+            n_probes=qspec.n_probes,
+            max_flips=qspec.max_flips,
+            impl=qspec.impl,
         )
 
     def explain(self, queries: jax.Array, weights: jax.Array, spec=QuerySpec()):
@@ -723,7 +686,11 @@ class ShardedIndex:
         return bool((fills >= self.update.compact_threshold * self._cap_local).any())
 
     def query(self, queries: jax.Array, weights: jax.Array, spec=QuerySpec()):
-        """Same facade contract as ``Index.query`` — hierarchical-merge path.
+        """Same facade contract as ``Index.query`` — hierarchical-merge path,
+        including the same argument validation (malformed ``(queries,
+        weights)`` raise the named ValueError, never a shard_map trace
+        error). Each shard runs the shared :mod:`repro.engine` pipeline
+        over its slice; the hierarchical top-k merge composes the results.
 
         QualitySpecs resolve against the plan memo the source ``Index``
         carried into ``shard()`` (calibration needs the single-host view, so
@@ -732,6 +699,7 @@ class ShardedIndex:
         from repro.core.distributed import sharded_index_query
 
         cfg = self.config
+        validate_query_args(cfg.d, queries, weights)
         if isinstance(spec, QualitySpec):
             planned = self.plans.get(spec)
             if planned is None:

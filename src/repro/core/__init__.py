@@ -7,13 +7,15 @@
   index          — Theorem-1 multi-table index (sorted-key CSR, static probes)
   multiprobe     — beyond-paper: probe perturbation sequences (fewer tables)
 
-This package is the ENGINE; ``repro.api`` is the facade consumers should
-use. ``build_index`` / ``query_index`` / ``query_multiprobe`` remain as
-thin shims over the same code paths the facade calls — importable from
-here for backward compatibility, but DEPRECATED: calling the package-level
-names emits ``DeprecationWarning`` pointing at ``repro.api.Index``. (The
+This package holds the DATA STRUCTURES and probe primitives; query
+execution is the :mod:`repro.engine` candidate-stream pipeline and
+``repro.api`` is the facade consumers should use. ``build_index`` /
+``query_index`` / ``query_multiprobe`` remain as thin shims over the same
+engine-backed code paths the facade calls — importable from here for
+backward compatibility, but DEPRECATED: calling the package-level names
+emits ``DeprecationWarning`` pointing at ``repro.api.Index``. (The
 defining modules ``repro.core.index`` / ``repro.core.multiprobe`` stay
-warning-free — the facade itself executes through them.)
+warning-free — the facade executes through the same wrappers.)
 """
 
 import functools as _functools

@@ -22,6 +22,12 @@ Two entry points, both under shard_map with explicit collectives:
     indexes ONCE, query many times (what ``repro.api.Index.shard`` uses).
   * ``sharded_query`` — one-shot build+query (tests/benchmarks on small CPU
     meshes, where rebuild cost is irrelevant).
+
+Each shard's query body is :func:`repro.engine.dispatch` over the shard's
+slice — the same candidate-source composition and fused rerank tail the
+single-host facade runs (the shard's sorted tables + its private delta
+slice ARE its local candidate sources) — so sharded results can only
+differ from single-host results by the merge, which is exact.
 """
 
 from __future__ import annotations
@@ -33,6 +39,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import engine
 from repro.core.hash_families import PrefixTables
 from repro.core.index import (
     ALSHIndex,
@@ -41,6 +48,17 @@ from repro.core.index import (
     build_index,
     hash_rows,
 )
+
+
+def _local_query(idx_local, delta_local, ts_local, q, w, cfg, spec):
+    """One shard's query body: the SAME engine dispatch the single-host
+    facade runs, over this shard's slice (its sorted tables + its private
+    delta/tombstone slice form the shard-local candidate sources)."""
+    return engine.dispatch(
+        idx_local, delta_local, ts_local, q, w, cfg,
+        k=spec.k, mode=spec.mode, n_probes=spec.n_probes,
+        max_flips=spec.max_flips, impl=spec.impl,
+    )
 
 
 class ShardedQueryResult(NamedTuple):
@@ -182,13 +200,19 @@ def sharded_index_query(
     ``spec`` (a :class:`repro.api.QuerySpec`) selects the shard-local
     execution strategy — probe, multiprobe, or exact — so the sharded
     service exposes the same policy surface as a single-host ``Index``.
+    Each shard's body is :func:`repro.engine.dispatch` over its slice —
+    the identical pipeline (sources, dedupe, tombstone mask, fused rerank)
+    the single-host facade runs — with the hierarchical top-k merge
+    composing the per-shard results.
 
     With ``delta_sharded``/``tombstones_sharded`` (a mutable
-    ``ShardedIndex``), each shard runs the two-segment probe against its
+    ``ShardedIndex``), each shard adds the delta key-match source over its
     private delta and tombstone slice; merged ids use the global id scheme
-    of ``_globalize_and_merge``.
+    of ``_globalize_and_merge``. ``update`` is accepted for backward
+    compatibility and unused (the engine needs only the arrays).
     """
-    from repro.api import Index, QuerySpec, UpdateSpec  # facade (lazy: api builds on core)
+    del update  # kept for call-site compatibility
+    from repro.api import QuerySpec  # lazy: api builds on core
 
     if spec is None:
         spec = QuerySpec(k=k)
@@ -199,11 +223,7 @@ def sharded_index_query(
     if delta_sharded is None:
 
         def local(idx_local, q, w):
-            # build_key is irrelevant for querying — any placeholder works
-            facade = Index(
-                state=idx_local, build_key=jnp.zeros((2,), jnp.uint32), config=cfg
-            )
-            res = facade.query(q, w, spec)
+            res = _local_query(idx_local, None, None, q, w, cfg, spec)
             return _globalize_and_merge(
                 res, axes, mesh, spec.k, n_local, merge_hierarchical
             )
@@ -218,28 +238,14 @@ def sharded_index_query(
         d, i, nc = fn(index_sharded, queries, weights)
         return ShardedQueryResult(dists=d, ids=i, n_candidates=nc)
 
-    cap = delta_sharded.data.shape[0] // S
-    local_update = (
-        update
-        if update is not None and update.delta_capacity == cap
-        else UpdateSpec(delta_capacity=cap)
-    )
-
     def local_mut(idx_local, delta_local, ts_local, q, w):
-        facade = Index(
-            state=idx_local,
-            build_key=jnp.zeros((2,), jnp.uint32),
-            config=cfg,
-            update=local_update,
-            delta=DeltaSegment(
-                data=delta_local.data,
-                levels=delta_local.levels,
-                keys=delta_local.keys,
-                fill=delta_local.fill.reshape(()),
-            ),
-            tombstones=ts_local,
+        delta = DeltaSegment(
+            data=delta_local.data,
+            levels=delta_local.levels,
+            keys=delta_local.keys,
+            fill=delta_local.fill.reshape(()),
         )
-        res = facade.query(q, w, spec)
+        res = _local_query(idx_local, delta, ts_local, q, w, cfg, spec)
         return _globalize_and_merge(
             res, axes, mesh, spec.k, n_local, merge_hierarchical
         )
@@ -390,7 +396,7 @@ def sharded_query(
     ``k`` is kept for backward compatibility and ignored when ``spec`` is
     given.
     """
-    from repro.api import Index, QuerySpec  # facade (lazy: api builds on core)
+    from repro.api import QuerySpec  # lazy: api builds on core
 
     if spec is None:
         spec = QuerySpec(k=k)
@@ -398,8 +404,8 @@ def sharded_query(
     n_local = data_sharded.shape[0] // mesh.devices.size
 
     def local(data_local, q, w):
-        idx = Index.build(key, data_local, cfg)
-        res = idx.query(q, w, spec)
+        idx = build_index(key, data_local, cfg)
+        res = _local_query(idx, None, None, q, w, cfg, spec)
         return _globalize_and_merge(res, axes, mesh, spec.k, n_local, merge_hierarchical)
 
     fn = shard_map(

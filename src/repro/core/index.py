@@ -13,11 +13,12 @@ Combining K codes into one int32 key:
     spurious collisions only ADD candidates — the exact d_w^l1 re-rank keeps
     correctness, the candidate budget keeps cost bounded.
 
-The probe path retrieves at most ``max_candidates`` per table (static C),
-dedupes across tables by sort, then hands the candidate *ids* to the fused
-``gather_rerank_topk`` kernel, which gathers each needed row straight from
-the (n, d) table (scalar-prefetch DMA on TPU, chunked streaming on CPU),
-re-ranks exactly with d_w^l1, and maintains the running top-k on-chip.
+This module owns the DATA STRUCTURES (build, insert, tombstone, compact
+inputs) and the probe PRIMITIVES (sorted-window lookup, delta key match,
+dedupe, tombstone mask). Query execution — composing those primitives into
+the probe → merge → dedupe → mask → fused-rerank pipeline — lives in
+:mod:`repro.engine`; the ``query_*`` names kept here are thin wrappers over
+it (one pipeline serves probe, multiprobe, segmented, and sharded queries).
 
 Memory model of a query batch (b queries, P = L·C probed slots):
   HBM traffic  = probe windows (b·P int32) + one gather of the unique
@@ -246,14 +247,21 @@ def tombstone_ids(
     return tombstones.at[idx].set(True, mode="drop")
 
 
+# Delta-slot block size of the chunked key match: the per-step working set
+# is (b, L, P, block) bools, whatever the configured delta capacity — large
+# capacities (16k+) query under the same memory envelope as small ones.
+DELTA_MATCH_BLOCK = 1024
+
+
 def _delta_candidates(
     probe_keys: jax.Array,
     delta: DeltaSegment,
     live: jax.Array,
     n_main: int,
     sentinel: int,
+    block: int = DELTA_MATCH_BLOCK,
 ) -> jax.Array:
-    """Dense delta probe: which delta slots collide with the query's keys.
+    """Delta probe: which delta slots collide with the query's keys.
 
     probe_keys: (b, L) single-probe keys or (b, L, P) multiprobe keys.
     live: (cap,) bool — slot filled and not tombstoned.
@@ -261,19 +269,38 @@ def _delta_candidates(
     the slot doesn't collide or isn't live. A slot is a candidate iff its
     key matches one of the probe keys IN THE SAME TABLE — exactly the
     predicate the sorted-window probe applies to the main segment.
+
+    The match runs as a ``fori_loop`` over ``block``-slot chunks of the
+    capacity, so the (b, L, P, cap) comparison tensor of the naive
+    formulation is never materialized — only (b, L, P, block) per step.
+    Bit-identical to the dense match (same compares, same slot order).
     """
     cap = delta.capacity
     b = probe_keys.shape[0]
     if cap == 0:
         return jnp.zeros((b, 0), jnp.int32)
     pk = probe_keys if probe_keys.ndim == 3 else probe_keys[:, :, None]  # (b, L, P)
-    match = jnp.any(
-        pk[:, :, :, None] == delta.keys[None, :, None, :], axis=(1, 2)
-    )  # (b, cap)
-    slot_ids = n_main + jnp.arange(cap, dtype=jnp.int32)
-    return jnp.where(match & live[None, :], slot_ids[None, :], sentinel).astype(
-        jnp.int32
-    )
+    L = delta.keys.shape[0]
+    block = min(block, cap)
+    n_blocks = -(-cap // block)
+    pad = n_blocks * block - cap
+    keys_p = jnp.pad(delta.keys, ((0, 0), (0, pad)))
+    live_p = jnp.pad(live, (0, pad))  # padding slots are never live
+
+    def body(c, out):
+        kblk = jax.lax.dynamic_slice(keys_p, (0, c * block), (L, block))  # (L, block)
+        lblk = jax.lax.dynamic_slice(live_p, (c * block,), (block,))
+        match = jnp.any(
+            pk[:, :, :, None] == kblk[None, :, None, :], axis=(1, 2)
+        )  # (b, block)
+        ids_blk = n_main + c * block + jnp.arange(block, dtype=jnp.int32)
+        cand = jnp.where(match & lblk[None, :], ids_blk[None, :], sentinel).astype(
+            jnp.int32
+        )
+        return jax.lax.dynamic_update_slice(out, cand, (0, c * block))
+
+    out = jnp.full((b, n_blocks * block), sentinel, jnp.int32)
+    return jax.lax.fori_loop(0, n_blocks, body, out)[:, :cap]
 
 
 def _mask_dead(cand: jax.Array, tombstones: jax.Array, n_main: int, sentinel: int) -> jax.Array:
@@ -372,7 +399,7 @@ def query_keys_for(
 ) -> jax.Array:
     """(b, L) single-probe bucket keys of a query batch (diagnostic entry
     point for the planner and ``Index.explain``; the query path computes
-    the same keys inside ``_probe_candidates``)."""
+    the same keys inside ``repro.engine.probe_keys``)."""
     qlevels = transforms.discretize(queries, cfg.space)
     return _keys_for(qlevels, weights, index.tables, cfg, index.mixers)
 
@@ -405,61 +432,14 @@ def _dedupe_candidates(cand: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
     return jnp.sort(jnp.where(valid, cand, n), axis=1), jnp.sum(valid, axis=1)
 
 
-def rerank_topk(
-    data: jax.Array,
-    cand: jax.Array,
-    queries: jax.Array,
-    weights: jax.Array,
-    k: int,
-    n_valid: int,
-) -> QueryResult:
-    """Shared rerank tail over an arbitrary row table: dedupe → fused
-    gather/re-rank/top-k. ``cand`` (b, P) raw ids, entries >= ``n_valid``
-    are padding; ``data`` has at least ``n_valid`` rows."""
-    from repro.kernels import ops
-
-    cand, n_candidates = _dedupe_candidates(cand, n_valid)
-    dists, ids = ops.gather_rerank_topk(data, cand, queries, weights, k)
-    return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
+# ---------------------------------------------------------------------------
+# Query entry points — thin wrappers over the shared execution engine
+# (repro.engine: one probe → merge → dedupe → mask → fused-rerank pipeline
+# for every mode/segment/shard combination). Imported lazily: the engine
+# composes the primitives defined above, so it depends on this module.
+# ---------------------------------------------------------------------------
 
 
-def fused_rerank_topk(
-    index: ALSHIndex,
-    cand: jax.Array,
-    queries: jax.Array,
-    weights: jax.Array,
-    k: int,
-) -> QueryResult:
-    """Shared probe tail: dedupe → fused gather/re-rank/top-k (no (b, P, d)
-    candidate tensor). ``cand`` is (b, P) raw probe ids (>= n ⇒ padding)."""
-    return rerank_topk(index.data, cand, queries, weights, k, index.n)
-
-
-def _probe_candidates(
-    index: ALSHIndex,
-    queries: jax.Array,
-    weights: jax.Array,
-    cfg: IndexConfig,
-    impl: str = "auto",
-) -> tuple[jax.Array, jax.Array]:
-    """Single-probe front half: hash queries + window-probe every table.
-
-    Returns ((b, L·C) raw candidate ids, entries >= n ⇒ padding;
-    (b, L) per-table query keys — reused by the delta-segment probe)."""
-    b, d = queries.shape
-    C = cfg.max_candidates
-    qlevels = transforms.discretize(queries, cfg.space)
-    qkeys = _keys_for(qlevels, weights, index.tables, cfg, index.mixers, impl=impl)  # (b, L)
-
-    # probe all (table, query) pairs — vmap over tables, then queries
-    probe = jax.vmap(
-        jax.vmap(_probe_one_table, in_axes=(0, 0, 0, None)), in_axes=(None, None, 0, None)
-    )
-    cand = probe(index.sorted_keys, index.perm, qkeys, C)  # (b, L, C), sentinel = n+C pad id
-    return cand.reshape(b, cfg.L * C), qkeys
-
-
-@partial(jax.jit, static_argnames=("cfg", "k", "impl"))
 def query_index(
     index: ALSHIndex,
     queries: jax.Array,
@@ -475,18 +455,11 @@ def query_index(
       weights: (b, d) float per-query weight vectors (the paper's w — may be negative).
       k: neighbours to return.
     """
-    cand, _ = _probe_candidates(index, queries, weights, cfg, impl=impl)
-    return fused_rerank_topk(index, cand, queries, weights, k)
+    from repro.engine import query
+
+    return query(index, None, None, queries, weights, cfg, k=k, impl=impl)
 
 
-def segment_table(index: ALSHIndex, delta: DeltaSegment) -> jax.Array:
-    """The (n_main + cap, d) two-segment row table queries re-rank against."""
-    if delta.capacity == 0:
-        return index.data
-    return jnp.concatenate([index.data, delta.data.astype(index.data.dtype)], axis=0)
-
-
-@partial(jax.jit, static_argnames=("cfg", "k", "impl"))
 def query_index_segmented(
     index: ALSHIndex,
     delta: DeltaSegment,
@@ -498,30 +471,21 @@ def query_index_segmented(
     impl: str = "auto",
 ) -> QueryResult:
     """Two-segment ALSH query: sorted-window probe of the sealed main tables
-    + dense key-match probe of the delta segment, tombstoned ids masked to
-    the internal sentinel BEFORE dedupe/re-rank (a deleted row can never
-    appear in a result), then the same fused rerank/top-k tail over the
-    concatenated row table. Returned ids are global: main rows keep their
-    build ids ``[0, n_main)``; delta slot ``s`` is ``n_main + s``.
+    + key-match probe of the delta segment, tombstoned ids masked to the
+    internal sentinel BEFORE dedupe/re-rank (a deleted row can never appear
+    in a result), then one fused rerank/top-k tail gathering from both
+    segment tables. Returned ids are global: main rows keep their build ids
+    ``[0, n_main)``; delta slot ``s`` is ``n_main + s``.
 
     Static-shape in everything but the fill level and tombstone bits, so
     repeated insert→query→delete cycles at fixed capacity reuse one
     compiled program.
     """
-    n_main = index.n
-    cap = delta.capacity
-    n_tot = n_main + cap
-    cand, qkeys = _probe_candidates(index, queries, weights, cfg, impl=impl)
-    cand = _mask_dead(cand, tombstones, n_main, n_tot)
-    if cap:
-        live = delta_live_mask(delta, tombstones, n_main)
-        cand = jnp.concatenate(
-            [cand, _delta_candidates(qkeys, delta, live, n_main, n_tot)], axis=1
-        )
-    return rerank_topk(segment_table(index, delta), cand, queries, weights, k, n_tot)
+    from repro.engine import query
+
+    return query(index, delta, tombstones, queries, weights, cfg, k=k, impl=impl)
 
 
-@partial(jax.jit, static_argnames=("k",))
 def query_exact_segmented(
     index: ALSHIndex,
     delta: DeltaSegment,
@@ -533,20 +497,6 @@ def query_exact_segmented(
     """Exact oracle over the LIVE rows of both segments: every filled,
     non-tombstoned row is a candidate of the fused rerank tail. Reports the
     live-row count as ``n_candidates`` (what the scan actually examined)."""
-    n_main = index.n
-    cap = delta.capacity
-    n_tot = n_main + cap
-    live = ~tombstones[:n_main]
-    if cap:
-        live = jnp.concatenate([live, delta_live_mask(delta, tombstones, n_main)])
-    ids_row = jnp.where(live, jnp.arange(n_tot, dtype=jnp.int32), n_tot)
-    b = queries.shape[0]
-    # ascending with sentinels packed last — the chunked tail skips dead blocks
-    cand = jnp.broadcast_to(jnp.sort(ids_row)[None, :], (b, n_tot))
-    from repro.kernels import ops
+    from repro.engine import query
 
-    dists, ids = ops.gather_rerank_topk(
-        segment_table(index, delta), cand, queries, weights, k
-    )
-    n_candidates = jnp.broadcast_to(jnp.sum(live).astype(jnp.int32), (b,))
-    return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
+    return query(index, delta, tombstones, queries, weights, None, k=k, mode="exact")

@@ -15,20 +15,17 @@ subset scores).
 Effect measured in benchmarks/multiprobe_bench.py: matching recall with
 4-8x fewer tables (=> 4-8x less index memory and build hashing).
 
-The probe tail is the same fused pipeline as ``query_index``
-(``core.index.fused_rerank_topk``): the (b, L·P·C) probe ids are deduped by
-sort and handed to the ``gather_rerank_topk`` kernel, which gathers candidate
-rows directly from the (n, d) table and keeps the running top-k on-chip —
-multiprobe's larger probe fan-out (P buckets per table) never materializes a
-(b, L·P·C, d) candidate tensor.
+Execution-wise, multiprobe is ONLY a different key enumeration: this module
+contributes ``multiprobe_keys_for`` — the (b, L, P) probing sequence — and
+the :mod:`repro.engine` pipeline runs the identical sorted-window sources
+and fused merge/dedupe/gather/rerank tail as the single-probe path (which
+enumerates P = 1). The ``query_multiprobe*`` names below are thin wrappers
+over that engine.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
 from repro.core import transforms
 from repro.core.families import flip_subsets, get_family
@@ -37,13 +34,6 @@ from repro.core.index import (
     DeltaSegment,
     IndexConfig,
     QueryResult,
-    _delta_candidates,
-    _mask_dead,
-    _probe_one_table,
-    delta_live_mask,
-    fused_rerank_topk,
-    rerank_topk,
-    segment_table,
 )
 from repro.kernels import ops
 
@@ -63,8 +53,9 @@ def multiprobe_keys_for(
     """The (b, L, P) query-directed probing sequence for a query batch —
     the query's own bucket key first, then perturbed keys in increasing
     flip-cost order. P may be clamped below ``n_probes`` by the family's
-    reachable-subset count. Shared by the query path, the planner's
-    calibration pass, and ``Index.explain`` window diagnostics."""
+    reachable-subset count. Shared by the engine's key-enumeration stage,
+    the planner's calibration pass, and ``Index.explain`` window
+    diagnostics."""
     family = get_family(cfg.family)
     if not family.supports_multiprobe:
         raise ValueError(
@@ -78,37 +69,6 @@ def multiprobe_keys_for(
     return family.multiprobe_keys(proj.reshape(b, cfg.L, cfg.K), n_probes, max_flips)
 
 
-def _multiprobe_candidates(
-    index: ALSHIndex,
-    queries: jax.Array,
-    weights: jax.Array,
-    cfg: IndexConfig,
-    n_probes: int,
-    max_flips: int,
-) -> tuple[jax.Array, jax.Array]:
-    """Multiprobe front half: probing sequence + window-probe of every
-    (table, probe) pair. Returns ((b, L·P·C) raw candidate ids, (b, L, P)
-    probe keys — reused by the delta-segment probe)."""
-    b, d = queries.shape
-    C = cfg.max_candidates
-    K, L = cfg.K, cfg.L
-
-    probe_keys = multiprobe_keys_for(index, queries, weights, cfg, n_probes, max_flips)
-    n_probes = probe_keys.shape[-1]  # family may clamp to the subset count
-
-    # probe every (table, probe) pair
-    probe = jax.vmap(  # over batch
-        jax.vmap(  # over tables
-            jax.vmap(_probe_one_table, in_axes=(None, None, 0, None)),  # over probes
-            in_axes=(0, 0, 0, None),
-        ),
-        in_axes=(None, None, 0, None),
-    )
-    cand = probe(index.sorted_keys, index.perm, probe_keys, C)  # (b, L, P, C)
-    return cand.reshape(b, L * n_probes * C), probe_keys
-
-
-@partial(jax.jit, static_argnames=("cfg", "k", "n_probes", "max_flips"))
 def query_multiprobe(
     index: ALSHIndex,
     queries: jax.Array,
@@ -121,11 +81,14 @@ def query_multiprobe(
     """Multiprobe query: per table, probe the n_probes most likely buckets
     (query bucket + low-margin perturbations, ordered by the family's
     ``multiprobe_keys`` strategy)."""
-    cand, _ = _multiprobe_candidates(index, queries, weights, cfg, n_probes, max_flips)
-    return fused_rerank_topk(index, cand, queries, weights, k)
+    from repro.engine import query
+
+    return query(
+        index, None, None, queries, weights, cfg,
+        k=k, mode="multiprobe", n_probes=n_probes, max_flips=max_flips,
+    )
 
 
-@partial(jax.jit, static_argnames=("cfg", "k", "n_probes", "max_flips"))
 def query_multiprobe_segmented(
     index: ALSHIndex,
     delta: DeltaSegment,
@@ -142,16 +105,9 @@ def query_multiprobe_segmented(
     keys hits it in its own table, exactly the predicate the sorted-window
     probe applies to the sealed segment. See ``query_index_segmented`` for
     the id/tombstone contract."""
-    n_main = index.n
-    cap = delta.capacity
-    n_tot = n_main + cap
-    cand, probe_keys = _multiprobe_candidates(
-        index, queries, weights, cfg, n_probes, max_flips
+    from repro.engine import query
+
+    return query(
+        index, delta, tombstones, queries, weights, cfg,
+        k=k, mode="multiprobe", n_probes=n_probes, max_flips=max_flips,
     )
-    cand = _mask_dead(cand, tombstones, n_main, n_tot)
-    if cap:
-        live = delta_live_mask(delta, tombstones, n_main)
-        cand = jnp.concatenate(
-            [cand, _delta_candidates(probe_keys, delta, live, n_main, n_tot)], axis=1
-        )
-    return rerank_topk(segment_table(index, delta), cand, queries, weights, k, n_tot)

@@ -1,0 +1,45 @@
+"""The candidate-stream execution engine — ONE query pipeline for every mode.
+
+The paper's Theorem-1 query procedure is a single conceptual pipeline:
+probe the L sorted tables, union the candidates, re-rank exactly under
+d_w^l1. This package is that pipeline, factored so every query variant the
+repo serves — single-probe, multiprobe, two-segment (mutable), exact
+oracle, and the per-shard bodies of the distributed service — is a
+*composition of candidate sources over one shared tail* instead of its own
+copy of the probe/dedupe/mask/gather/rerank code:
+
+  keys     = probe_keys(...)            # (b, L, P) — probe vs multiprobe is
+                                        # just a different key enumeration
+  sources  = sources_for(...)           # CandidateSource per segment
+  blocks   = [s.emit(q, w) ...]         # fixed-shape (b, P_src) id blocks
+  result   = merge → dedupe → fused gather/rerank/top-k   (execute())
+
+``dispatch`` wires the stages for one index view (a single host, or one
+shard inside ``shard_map`` — the sharded service is exactly this engine per
+shard plus a hierarchical top-k merge on top); ``query`` is its jitted form
+that the legacy ``repro.core`` entry points and the ``repro.api`` facade
+both call, so every consumer shares one compiled-program cache and one set
+of invariants (sentinels, tombstone semantics, dedupe counts).
+
+See DESIGN.md §8 for the block-shape and merge-semantics contract.
+"""
+
+from repro.engine.pipeline import dispatch, execute, probe_keys, query, sources_for
+from repro.engine.sources import (
+    CandidateSource,
+    DeltaMatchSource,
+    ExhaustiveSource,
+    SortedTableSource,
+)
+
+__all__ = [
+    "CandidateSource",
+    "DeltaMatchSource",
+    "ExhaustiveSource",
+    "SortedTableSource",
+    "dispatch",
+    "execute",
+    "probe_keys",
+    "query",
+    "sources_for",
+]

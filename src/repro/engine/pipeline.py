@@ -1,0 +1,251 @@
+"""The shared execution pipeline: key enumeration → sources → one tail.
+
+Stage contract (DESIGN.md §8):
+
+  1. ``probe_keys`` — (b, L, P) int32 probing sequence. P = 1 is the
+     paper's single-probe lookup; P > 1 is the Lv et al. query-directed
+     sequence. This is the ONLY stage where probe and multiprobe differ.
+  2. ``sources_for`` — the :mod:`repro.engine.sources` composition of the
+     index view: sealed table windows, plus the delta key match when a
+     delta segment is present. Tombstone masking happens inside the
+     sources (before merge), so a deleted row can never reach a result.
+  3. ``execute`` — merge the fixed-shape blocks, dedupe by sort (unique
+     ids packed first; the unique count is the paper's sublinearity
+     metric), and hand the ids to the fused gather/rerank/top-k kernel,
+     which gathers straight from BOTH segment tables (scalar-prefetch DMA
+     on TPU, chunked streaming on CPU) — neither a (b, P, d) candidate
+     tensor nor an (n_main + cap, d) concatenated table is materialized.
+
+``dispatch`` wires the stages for one index view; inside ``shard_map``
+each shard runs ``dispatch`` over its slice (the per-shard local source)
+and the distributed service merges the per-shard results hierarchically.
+``query`` is the jitted entry every consumer shares — the legacy
+``repro.core`` wrappers, the ``repro.api`` facade, and the planner's
+calibration rungs all hit one compiled-program cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transforms
+from repro.core.index import (
+    ALSHIndex,
+    DeltaSegment,
+    IndexConfig,
+    QueryResult,
+    _dedupe_candidates,
+    _keys_for,
+    delta_live_mask,
+)
+from repro.engine.sources import (
+    CandidateSource,
+    DeltaMatchSource,
+    ExhaustiveSource,
+    SortedTableSource,
+)
+
+
+def probe_keys(
+    state: ALSHIndex,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig,
+    mode: str = "probe",
+    n_probes: int = 8,
+    max_flips: int = 3,
+    impl: str = "auto",
+) -> jax.Array:
+    """Enumerate the (b, L, P) probing sequence of a query batch.
+
+    mode="probe": each query's own bucket key per table (P = 1).
+    mode="multiprobe": the query-directed perturbation sequence (P <=
+    n_probes, clamped by the family's reachable-subset count).
+    """
+    if mode == "multiprobe":
+        from repro.core.multiprobe import multiprobe_keys_for
+
+        return multiprobe_keys_for(state, queries, weights, cfg, n_probes, max_flips)
+    qlevels = transforms.discretize(queries, cfg.space)
+    keys = _keys_for(qlevels, weights, state.tables, cfg, state.mixers, impl=impl)
+    return keys[:, :, None]  # (b, L, 1)
+
+
+def sources_for(
+    state: ALSHIndex,
+    delta: DeltaSegment | None,
+    tombstones: jax.Array | None,
+    cfg: IndexConfig,
+    keys: jax.Array,
+) -> list[CandidateSource]:
+    """The candidate-source composition of one index view (a single host,
+    or one shard's slice inside ``shard_map``): the sealed sorted-table
+    window probe, plus the delta key match when a delta segment is
+    present. One key enumeration feeds every source."""
+    n_main = state.n
+    cap = delta.capacity if delta is not None else 0
+    n_tot = n_main + cap
+    segmented = tombstones is not None or delta is not None
+    if segmented and tombstones is None:
+        tombstones = jnp.zeros((n_tot,), bool)
+    srcs: list[CandidateSource] = [
+        SortedTableSource(
+            state,
+            cfg,
+            keys,
+            tombstones=tombstones if segmented else None,
+            sentinel=n_tot,
+        )
+    ]
+    if cap:
+        live = delta_live_mask(delta, tombstones, n_main)
+        srcs.append(DeltaMatchSource(delta, keys, live, n_main, n_tot))
+    return srcs
+
+
+def execute(
+    sources: list[CandidateSource],
+    main_data: jax.Array,
+    delta_data: jax.Array | None,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+    n_valid: int,
+) -> QueryResult:
+    """The shared tail: merge source blocks → dedupe → fused
+    gather/rerank/top-k over the (optionally two-segment) row tables.
+
+    ``n_valid`` is the total addressable row count (main + delta
+    capacity); any id >= n_valid in a block is padding. A single
+    ``pre_deduped`` source skips the dedupe sort (its block is already
+    ascending-unique) and counts valid entries directly.
+    """
+    from repro.kernels import ops
+
+    blocks = [s.emit(queries, weights) for s in sources]
+    cand = blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=1)
+    if len(sources) == 1 and sources[0].pre_deduped:
+        n_candidates = jnp.sum(cand < n_valid, axis=1).astype(jnp.int32)
+    else:
+        cand, n_candidates = _dedupe_candidates(cand, n_valid)
+    dists, ids = ops.gather_rerank_topk(
+        main_data, cand, queries, weights, k, delta=delta_data
+    )
+    return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
+
+
+def dispatch(
+    state: ALSHIndex,
+    delta: DeltaSegment | None,
+    tombstones: jax.Array | None,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig | None,
+    k: int = 1,
+    mode: str = "probe",
+    n_probes: int = 8,
+    max_flips: int = 3,
+    impl: str = "auto",
+) -> QueryResult:
+    """One query dispatch for every index view — the single-host facade,
+    the legacy ``repro.core`` entry points, and each shard's body inside
+    ``shard_map`` all run THIS function, so mode/segment/tombstone
+    semantics cannot drift between deployments.
+
+    ``delta``/``tombstones`` are None for an immutable (sealed-only) view;
+    ``cfg`` may be None only for mode="exact" (no hashing happens).
+    Trace-compatible: call under jit/shard_map freely, or use the jitted
+    ``query`` wrapper from the host.
+    """
+    n_main = state.n
+    cap = delta.capacity if delta is not None else 0
+    segmented = tombstones is not None or delta is not None
+    if mode == "exact":
+        if not segmented:
+            from repro.kernels import ops
+
+            dists, ids = ops.wl1_scan_topk(state.data, queries, weights, k)
+            n_candidates = jnp.full(queries.shape[0], n_main, jnp.int32)
+            return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
+        if tombstones is None:
+            tombstones = jnp.zeros((n_main + cap,), bool)
+        src = ExhaustiveSource(state, delta, tombstones)
+        return execute(
+            [src],
+            state.data,
+            delta.data if cap else None,
+            queries,
+            weights,
+            k,
+            n_valid=n_main + cap,
+        )
+    keys = probe_keys(
+        state, queries, weights, cfg,
+        mode=mode, n_probes=n_probes, max_flips=max_flips, impl=impl,
+    )
+    srcs = sources_for(state, delta, tombstones, cfg, keys)
+    return execute(
+        srcs,
+        state.data,
+        delta.data if cap else None,
+        queries,
+        weights,
+        k,
+        n_valid=n_main + cap,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "k", "mode", "n_probes", "max_flips", "impl")
+)
+def _query_jit(
+    state: ALSHIndex,
+    delta: DeltaSegment | None,
+    tombstones: jax.Array | None,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig | None,
+    k: int,
+    mode: str,
+    n_probes: int,
+    max_flips: int,
+    impl: str,
+) -> QueryResult:
+    return dispatch(
+        state, delta, tombstones, queries, weights, cfg,
+        k=k, mode=mode, n_probes=n_probes, max_flips=max_flips, impl=impl,
+    )
+
+
+def query(
+    state: ALSHIndex,
+    delta: DeltaSegment | None,
+    tombstones: jax.Array | None,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig | None,
+    k: int = 1,
+    mode: str = "probe",
+    n_probes: int = 8,
+    max_flips: int = 3,
+    impl: str = "auto",
+) -> QueryResult:
+    """Jitted ``dispatch`` — the one compiled entry point every consumer
+    shares. Static args a mode does not read are normalized before the
+    compile-key lookup (probe ignores n_probes/max_flips, multiprobe and
+    exact ignore impl, exact ignores cfg entirely), so two calls that trace
+    the same program always reuse one executable — facade or legacy shim
+    alike, whatever defaults their spec happened to carry."""
+    if mode != "multiprobe":
+        n_probes, max_flips = 1, 0
+    if mode != "probe":
+        impl = "auto"
+    if mode == "exact":
+        cfg = None
+    return _query_jit(
+        state, delta, tombstones, queries, weights, cfg,
+        k=k, mode=mode, n_probes=n_probes, max_flips=max_flips, impl=impl,
+    )

@@ -1,0 +1,169 @@
+"""Candidate sources: where a query's candidate ids come from.
+
+A :class:`CandidateSource` turns one query batch into a fixed-shape block
+of candidate ids. The block contract (what lets arbitrary sources compose
+through one tail):
+
+  * ``emit(queries, weights)`` returns ``(b, P_src)`` int32 ids with a
+    STATIC ``P_src`` (shapes never depend on how many candidates actually
+    matched — jit/vmap/shard_map safe).
+  * entries ``>= n_valid`` (the engine's total addressable row count) mark
+    empty slots; any value past ``n_valid`` is a legal padding sentinel.
+  * live candidate ids are GLOBAL row ids — main rows keep their build ids
+    ``[0, n_main)``, delta slot ``s`` is ``n_main + s`` — so blocks from
+    different sources concatenate without translation.
+
+Three implementations cover the repo's whole query surface:
+
+  * :class:`SortedTableSource` — the sealed main segment: searchsorted
+    window probe of the L sorted key columns, one window per (table, probe
+    key) pair. Handles single-probe and multiprobe identically (the key
+    enumeration upstream decides P).
+  * :class:`DeltaMatchSource` — the unsealed delta segment: chunked dense
+    key match over the capacity (``core.index._delta_candidates``).
+  * :class:`ExhaustiveSource` — every live row (the exact oracle as a
+    source, so even the ground-truth scan runs the same tail).
+
+The per-shard local source of the distributed service is not a fourth
+class: inside ``shard_map`` each shard's view IS a (SortedTableSource,
+DeltaMatchSource) composition over its slice — ``pipeline.dispatch`` runs
+unchanged per shard and the hierarchical merge composes the shard results.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.index import (
+    _delta_candidates,
+    _mask_dead,
+    _probe_one_table,
+    delta_live_mask,
+)
+
+if TYPE_CHECKING:
+    from repro.core.index import ALSHIndex, DeltaSegment, IndexConfig
+
+
+class CandidateSource(Protocol):
+    """Protocol every candidate source implements.
+
+    ``pre_deduped`` declares the block already holds ascending unique ids
+    with sentinels packed last — the tail then skips the dedupe sort and
+    counts valid entries directly (the exact oracle uses this; probe
+    sources must leave it False since windows overlap across tables).
+    """
+
+    pre_deduped: bool
+
+    def emit(self, queries: jax.Array, weights: jax.Array) -> jax.Array:
+        """(b, d) queries/weights -> (b, P_src) int32 candidate ids."""
+        ...
+
+
+class SortedTableSource:
+    """Sealed-segment source: bounded sorted-window probe of every
+    (table, probe key) pair.
+
+    ``keys`` is the (b, L, P) probing sequence enumerated upstream —
+    P == 1 reproduces the paper's single-probe lookup, P > 1 the
+    query-directed multiprobe sequence. With ``tombstones`` given, window
+    ids are masked to ``sentinel`` before they leave the source (window
+    padding too), so deleted rows never reach the merge.
+    """
+
+    pre_deduped = False
+
+    def __init__(
+        self,
+        state: "ALSHIndex",
+        cfg: "IndexConfig",
+        keys: jax.Array,
+        tombstones: jax.Array | None = None,
+        sentinel: int | None = None,
+    ):
+        self.state = state
+        self.cfg = cfg
+        self.keys = keys
+        self.tombstones = tombstones
+        self.sentinel = sentinel
+
+    def emit(self, queries: jax.Array, weights: jax.Array) -> jax.Array:
+        b = self.keys.shape[0]
+        C = self.cfg.max_candidates
+        # vmap over batch, then tables, then probes — one probe per
+        # (query, table, key) triple, exactly the legacy enumeration order
+        probe = jax.vmap(
+            jax.vmap(
+                jax.vmap(_probe_one_table, in_axes=(None, None, 0, None)),
+                in_axes=(0, 0, 0, None),
+            ),
+            in_axes=(None, None, 0, None),
+        )
+        cand = probe(self.state.sorted_keys, self.state.perm, self.keys, C)
+        cand = cand.reshape(b, -1)  # (b, L·P·C)
+        if self.tombstones is not None:
+            cand = _mask_dead(cand, self.tombstones, self.state.n, self.sentinel)
+        return cand
+
+
+class DeltaMatchSource:
+    """Unsealed-segment source: chunked dense key match over the delta
+    capacity. A slot is a candidate iff its stored key equals one of the
+    query's probe keys IN THE SAME TABLE — the same predicate the sorted
+    window applies to the sealed segment, so one key enumeration serves
+    both sources."""
+
+    pre_deduped = False
+
+    def __init__(
+        self,
+        delta: "DeltaSegment",
+        keys: jax.Array,
+        live: jax.Array,
+        n_main: int,
+        sentinel: int,
+    ):
+        self.delta = delta
+        self.keys = keys
+        self.live = live
+        self.n_main = n_main
+        self.sentinel = sentinel
+
+    def emit(self, queries: jax.Array, weights: jax.Array) -> jax.Array:
+        return _delta_candidates(
+            self.keys, self.delta, self.live, self.n_main, self.sentinel
+        )
+
+
+class ExhaustiveSource:
+    """Every live row as a candidate — the exact oracle expressed as a
+    source, so the ground truth runs the IDENTICAL tail it validates.
+    Emits ascending live ids with sentinels packed last (``pre_deduped``:
+    the tail skips its dedupe sort and the chunked kernel skips dead
+    blocks)."""
+
+    pre_deduped = True
+
+    def __init__(
+        self,
+        state: "ALSHIndex",
+        delta: "DeltaSegment | None",
+        tombstones: jax.Array,
+    ):
+        n_main = state.n
+        cap = delta.capacity if delta is not None else 0
+        n_tot = n_main + cap
+        live = ~tombstones[:n_main]
+        if cap:
+            live = jnp.concatenate([live, delta_live_mask(delta, tombstones, n_main)])
+        self.ids_row = jnp.sort(
+            jnp.where(live, jnp.arange(n_tot, dtype=jnp.int32), n_tot)
+        )
+
+    def emit(self, queries: jax.Array, weights: jax.Array) -> jax.Array:
+        b = queries.shape[0]
+        return jnp.broadcast_to(self.ids_row[None, :], (b, self.ids_row.shape[0]))

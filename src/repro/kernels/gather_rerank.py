@@ -28,6 +28,18 @@ set is cache-resident, switching to `gather_rerank_topk_chunked` — a
 fori_loop over candidate chunks (gather chunk → re-rank → top-k merge) that
 keeps the live set at O(b·chunk·d) and skips all-sentinel chunks — once the
 monolith would spill.
+
+Two-segment mode (`delta=` on every entry point): a mutable index re-ranks
+against a sealed (n_main, d) main table PLUS an unsealed (cap, d) delta
+table, with candidate ids addressing their virtual concatenation (id i >=
+n_main is delta slot i - n_main). Rather than concatenating the tables per
+query batch — an O((n_main + cap)·d) HBM copy the old two-segment tail
+paid — every schedule gathers from whichever segment owns each id: the
+Pallas kernel runs BOTH tables as scalar-prefetch gather streams (the
+index maps clamp each id into its own segment; the kernel keeps the
+partial sum of the owning segment), and the jnp schedules select per
+candidate between two clamped row gathers. Bit-identical to the
+concatenated-table result.
 """
 
 from __future__ import annotations
@@ -81,6 +93,53 @@ def _gather_rerank_kernel(ids_ref, row_ref, q_ref, w_ref, outd_ref, outi_ref, ac
             outi_ref[...] = jnp.where(put, cid, cur_i)
 
 
+def _gather_rerank2_kernel(
+    ids_ref, main_ref, delta_ref, q_ref, w_ref, outd_ref, outi_ref, acc_ref,
+    *, n_main: int, n_tot: int,
+):
+    """Two-segment variant: the grid pipelines BOTH segment tables as
+    scalar-prefetch gather streams (each index map clamps the candidate id
+    into its own segment), and the accumulator keeps whichever partial sum
+    belongs to the segment that owns the id — the merge step is unchanged."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    kd = pl.program_id(2)
+    nd = pl.num_programs(2)
+
+    @pl.when((j == 0) & (kd == 0))
+    def _init_topk():
+        outd_ref[...] = jnp.full_like(outd_ref, jnp.inf)
+        outi_ref[...] = jnp.full_like(outi_ref, -1)
+
+    cid = ids_ref[i, j]
+    part_m = jnp.sum(w_ref[...] * jnp.abs(main_ref[...] - q_ref[...]))  # scalar
+    part_d = jnp.sum(w_ref[...] * jnp.abs(delta_ref[...] - q_ref[...]))
+    partial = jnp.where(cid < n_main, part_m, part_d)
+
+    @pl.when(kd == 0)
+    def _acc_init():
+        acc_ref[0, 0] = partial
+
+    @pl.when(kd != 0)
+    def _acc():
+        acc_ref[0, 0] += partial
+
+    @pl.when(kd == nd - 1)
+    def _merge():
+        dist = acc_ref[0, 0]
+        cur_d = outd_ref[...]  # (1, KP)
+        cur_i = outi_ref[...]
+        worst = jnp.max(cur_d)
+        slot = jnp.argmax(cur_d)  # first-occurrence ⇒ fills +inf slots in order
+
+        @pl.when((cid < n_tot) & (dist < worst))
+        def _insert():
+            lane = jax.lax.broadcasted_iota(jnp.int32, cur_d.shape, 1)
+            put = lane == slot
+            outd_ref[...] = jnp.where(put, dist, cur_d)
+            outi_ref[...] = jnp.where(put, cid, cur_i)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def gather_rerank_topk_pallas(
     data: jax.Array,
@@ -89,10 +148,12 @@ def gather_rerank_topk_pallas(
     weights: jax.Array,
     k: int,
     *,
+    delta: jax.Array | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """data (n, d), ids (b, P) int32 (>= n ⇒ invalid), queries/weights (b, d)
-    -> ((b, k) ascending dists, (b, k) ids)."""
+    -> ((b, k) ascending dists, (b, k) ids). With ``delta`` (cap, d), ids
+    address the virtual [data; delta] concatenation (never materialized)."""
     n, d = data.shape
     b, P = ids.shape
     kp = -min(k, P) % KP_LANE + min(k, P)
@@ -102,29 +163,44 @@ def gather_rerank_topk_pallas(
     w_p = jnp.pad(weights.astype(jnp.float32), ((0, 0), (0, pd)))
     dp = d + pd
     grid = (b, P, dp // BDR)
+    row_spec = pl.BlockSpec(
+        (1, BDR), lambda i, j, kd, ids_ref: (jnp.minimum(ids_ref[i, j], n - 1), kd)
+    )
+    qw_spec = pl.BlockSpec((1, BDR), lambda i, j, kd, ids_ref: (i, kd))
+    out_spec = pl.BlockSpec((1, kp), lambda i, j, kd, ids_ref: (i, 0))
+    if delta is None:
+        in_specs = [row_spec, qw_spec, qw_spec]
+        kernel = functools.partial(_gather_rerank_kernel, n=n)
+        tables = (data_p,)
+    else:
+        cap = delta.shape[0]
+        # round delta rows through the main table's dtype first — the same
+        # cast every other schedule (and the old concat path) applies, so
+        # mixed-dtype segments rerank identically across backends
+        delta_p = jnp.pad(delta.astype(data.dtype).astype(jnp.float32), ((0, 0), (0, pd)))
+        delta_spec = pl.BlockSpec(
+            (1, BDR),
+            lambda i, j, kd, ids_ref: (jnp.clip(ids_ref[i, j] - n, 0, cap - 1), kd),
+        )
+        in_specs = [row_spec, delta_spec, qw_spec, qw_spec]
+        kernel = functools.partial(_gather_rerank2_kernel, n_main=n, n_tot=n + cap)
+        tables = (data_p, delta_p)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, BDR), lambda i, j, kd, ids_ref: (jnp.minimum(ids_ref[i, j], n - 1), kd)),
-            pl.BlockSpec((1, BDR), lambda i, j, kd, ids_ref: (i, kd)),
-            pl.BlockSpec((1, BDR), lambda i, j, kd, ids_ref: (i, kd)),
-        ],
-        out_specs=(
-            pl.BlockSpec((1, kp), lambda i, j, kd, ids_ref: (i, 0)),
-            pl.BlockSpec((1, kp), lambda i, j, kd, ids_ref: (i, 0)),
-        ),
+        in_specs=in_specs,
+        out_specs=(out_spec, out_spec),
         scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
     )
     out_d, out_i = pl.pallas_call(
-        functools.partial(_gather_rerank_kernel, n=n),
+        kernel,
         grid_spec=grid_spec,
         out_shape=(
             jax.ShapeDtypeStruct((b, kp), jnp.float32),
             jax.ShapeDtypeStruct((b, kp), jnp.int32),
         ),
         interpret=interpret,
-    )(ids.astype(jnp.int32), data_p, q_p, w_p)
+    )(ids.astype(jnp.int32), *tables, q_p, w_p)
     # buffer is the kp smallest, unsorted — order + trim to k outside the kernel
     from repro.kernels.ref import _topk_ascending
 
@@ -144,6 +220,7 @@ def _gather_rerank_topk_monolith(
     queries: jax.Array,
     weights: jax.Array,
     k: int,
+    delta: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """One-shot fused tail: same math as the oracle but inside a single jit
     region, so XLA folds gather → re-rank → top-k into one pass with no
@@ -151,7 +228,9 @@ def _gather_rerank_topk_monolith(
     stays cache-resident."""
     from repro.kernels import ref
 
-    return ref.gather_rerank_topk(data, ids, queries, weights, k)
+    if delta is None:
+        return ref.gather_rerank_topk(data, ids, queries, weights, k)
+    return ref.gather_rerank_topk_segmented(data, delta, ids, queries, weights, k)
 
 
 def gather_rerank_topk_auto(
@@ -160,15 +239,19 @@ def gather_rerank_topk_auto(
     queries: jax.Array,
     weights: jax.Array,
     k: int,
+    delta: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """CPU production dispatch: pick the fused schedule by static footprint —
     monolithic single-pass when the (b, P, d) working set fits on-chip,
-    chunked streaming (skip-capable) when it would spill."""
+    chunked streaming (skip-capable) when it would spill. The two-segment
+    monolith materializes both per-segment gathers plus their select (~3x
+    the single-segment working set), so its budget is scaled to match."""
     b, P = ids.shape
     d = data.shape[1]
-    if b * P * d * 4 <= MONOLITH_BYTES:
-        return _gather_rerank_topk_monolith(data, ids, queries, weights, k)
-    return gather_rerank_topk_chunked(data, ids, queries, weights, k)
+    working_set = b * P * d * 4 * (3 if delta is not None else 1)
+    if working_set <= MONOLITH_BYTES:
+        return _gather_rerank_topk_monolith(data, ids, queries, weights, k, delta=delta)
+    return gather_rerank_topk_chunked(data, ids, queries, weights, k, delta=delta)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk"))
@@ -179,6 +262,7 @@ def gather_rerank_topk_chunked(
     weights: jax.Array,
     k: int,
     chunk: int = 256,
+    delta: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Pure-jnp fused tail (CPU production path): chunked gather → re-rank →
     streaming top-k merge. Never materializes the (b, P, d) tensor.
@@ -186,8 +270,11 @@ def gather_rerank_topk_chunked(
     Chunks whose every id is the invalid sentinel are skipped entirely
     (a cheap predicate guards the gather + reduction) — with the dedupe
     stage packing unique ids first, the loop does O(#unique) work however
-    large the L·C probe budget is."""
-    n, d = data.shape
+    large the L·C probe budget is. With ``delta``, each chunk gathers from
+    whichever segment owns each id (virtual concatenation, never built)."""
+    n_main, d = data.shape
+    cap = 0 if delta is None else delta.shape[0]
+    n = n_main + cap
     b, P = ids.shape
     pc = -P % chunk
     ids_p = jnp.pad(ids.astype(jnp.int32), ((0, 0), (0, pc)), constant_values=n)
@@ -195,6 +282,34 @@ def gather_rerank_topk_chunked(
     q = queries.astype(jnp.float32)
     w = weights.astype(jnp.float32)
     data_f = data.astype(jnp.float32)
+    delta_f = None if delta is None else delta.astype(data.dtype).astype(jnp.float32)
+
+    def gather(cid):  # (b, chunk) ids -> (b, chunk, d) rows
+        if delta_f is None:
+            return data_f[jnp.minimum(cid, n - 1)]
+
+        # dedupe packs ids ascending, so most chunks live entirely in one
+        # segment — branch to a single gather there and pay the two-gather
+        # select only on the (rare) boundary chunk. All branches produce
+        # identical rows for every valid id (invalid ids clamp to the same
+        # row and are masked to +inf downstream), so the specialization
+        # cannot change results.
+        def main_only(_):
+            return data_f[jnp.minimum(cid, n_main - 1)]
+
+        def delta_only(_):
+            return delta_f[jnp.clip(cid - n_main, 0, cap - 1)]
+
+        def mixed(_):
+            return jnp.where((cid < n_main)[..., None], main_only(None), delta_only(None))
+
+        in_main = cid < n_main
+        return jax.lax.cond(
+            jnp.all(in_main),
+            main_only,
+            lambda _: jax.lax.cond(jnp.any(in_main), mixed, delta_only, None),
+            None,
+        )
 
     def body(c, carry):
         cid = jax.lax.dynamic_slice_in_dim(ids_p, c * chunk, chunk, axis=1)  # (b, chunk)
@@ -202,7 +317,7 @@ def gather_rerank_topk_chunked(
 
         def compute(carry):
             top_d, top_i = carry
-            pts = data_f[jnp.minimum(cid, n - 1)]  # (b, chunk, d)
+            pts = gather(cid)  # (b, chunk, d)
             dists = jnp.sum(w[:, None, :] * jnp.abs(pts - q[:, None, :]), axis=-1)
             dists = jnp.where(valid, dists, jnp.inf)
             cand_d = jnp.concatenate([top_d, dists], axis=1)

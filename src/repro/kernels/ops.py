@@ -101,18 +101,29 @@ def gather_rerank_topk(
     weights: jax.Array,
     k: int,
     force: str | None = None,
+    delta: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused ALSH probe tail: (n, d) table + (b, P) candidate ids (>= n ⇒
     invalid) -> top-k ((b, k) dists, (b, k) ids) with no materialized
     (b, P, d) gather. CPU auto-dispatch picks monolithic vs chunked
-    streaming by candidate-tensor footprint."""
+    streaming by candidate-tensor footprint.
+
+    With ``delta`` (cap, d), ids address the virtual [data; delta]
+    concatenation (two-segment mutable index) — every backend gathers from
+    whichever segment owns each id instead of building the concatenated
+    table; results are bit-identical to the single-table call over
+    ``concat([data, delta])``."""
     mode = force or ("pallas" if _on_tpu() else "auto")
     if mode == "pallas":
-        return _gr.gather_rerank_topk_pallas(data, ids, queries, weights, k)
+        return _gr.gather_rerank_topk_pallas(data, ids, queries, weights, k, delta=delta)
     if mode == "interpret":
-        return _gr.gather_rerank_topk_pallas(data, ids, queries, weights, k, interpret=True)
+        return _gr.gather_rerank_topk_pallas(
+            data, ids, queries, weights, k, delta=delta, interpret=True
+        )
     if mode == "auto":
-        return _gr.gather_rerank_topk_auto(data, ids, queries, weights, k)
+        return _gr.gather_rerank_topk_auto(data, ids, queries, weights, k, delta=delta)
     if mode == "chunked":
-        return _gr.gather_rerank_topk_chunked(data, ids, queries, weights, k)
-    return _ref.gather_rerank_topk(data, ids, queries, weights, k)
+        return _gr.gather_rerank_topk_chunked(data, ids, queries, weights, k, delta=delta)
+    if delta is None:
+        return _ref.gather_rerank_topk(data, ids, queries, weights, k)
+    return _ref.gather_rerank_topk_segmented(data, delta, ids, queries, weights, k)

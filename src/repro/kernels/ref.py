@@ -104,3 +104,30 @@ def gather_rerank_topk(
     dists = wl1_rerank(pts, queries, weights)
     dists = jnp.where(valid, dists, jnp.inf)
     return _topk_ascending(dists, jnp.where(valid, ids, -1).astype(jnp.int32), k)
+
+
+def gather_rerank_topk_segmented(
+    data: jax.Array,
+    delta: jax.Array,
+    ids: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Two-segment candidate-tail oracle: the virtual concatenation of
+    ``data`` (n_main, d) and ``delta`` (cap, d) addressed by global ids —
+    id i < n_main is a main row, i in [n_main, n_main + cap) is delta slot
+    i - n_main, i >= n_main + cap is invalid. Bit-identical to
+    ``gather_rerank_topk(concat([data, delta]), ...)`` without ever
+    building the (n_main + cap, d) table."""
+    n_main = data.shape[0]
+    cap = delta.shape[0]
+    n = n_main + cap
+    valid = ids < n
+    delta = delta.astype(data.dtype)
+    pts_m = data[jnp.minimum(ids, n_main - 1)]  # (b, P, d)
+    pts_d = delta[jnp.clip(ids - n_main, 0, cap - 1)]
+    pts = jnp.where((ids < n_main)[..., None], pts_m, pts_d)
+    dists = wl1_rerank(pts, queries, weights)
+    dists = jnp.where(valid, dists, jnp.inf)
+    return _topk_ascending(dists, jnp.where(valid, ids, -1).astype(jnp.int32), k)

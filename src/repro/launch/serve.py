@@ -1,9 +1,11 @@
 """Serving launcher — three modes:
 
   ALSH vector-search service (the paper's workload), served end-to-end
-  through the ``repro.api`` Index facade on the fused probe pipeline
-  (probe → dedupe → gather_rerank_topk kernels; the exactness spot-check
-  is the same facade with QuerySpec(mode="exact")). Configuration is
+  through the ``repro.api`` Index facade on the shared ``repro.engine``
+  pipeline (key enumeration → candidate sources → dedupe →
+  gather_rerank_topk kernels; the exactness spot-check is the same facade
+  with QuerySpec(mode="exact") — the oracle runs the identical tail it
+  validates). Configuration is
   QUALITY-FIRST: state a recall target and the planner resolves the
   execution knobs (and prints its resolution + per-batch diagnostics):
     python -m repro.launch.serve --mode alsh --recall-target 0.9
@@ -15,9 +17,12 @@
   Streaming-ingest service — the mutable lifecycle under live traffic:
   every tick interleaves an insert batch and a retire batch with the query
   batches, all on one jit-compiled program (fixed delta capacity ⇒ no
-  retrace), compacting when the delta fills past the policy threshold:
+  retrace), compacting when the delta fills past the policy threshold.
+  The engine's chunked delta key match keeps per-query memory independent
+  of the capacity, so large deltas (16k+, fewer compaction stalls) are a
+  plain flag away:
     python -m repro.launch.serve --mode stream --ingest 512 --retire 128 \
-        --delta-capacity 8192
+        --delta-capacity 16384
 
   LM decode service with optional ALSH retrieval augmentation:
     python -m repro.launch.serve --mode lm --arch gemma3-1b --reduced --retrieval
@@ -251,7 +256,9 @@ def main():
     ap.add_argument("--retire", type=int, default=128,
                     help="stream mode: rows tombstoned per tick")
     ap.add_argument("--delta-capacity", type=int, default=8192,
-                    help="stream mode: delta-segment slots before a compact")
+                    help="stream mode: delta-segment slots before a compact "
+                         "(the chunked delta match keeps query memory flat "
+                         "in this, so 16k+ capacities are fine)")
     ap.add_argument("--compact-threshold", type=float, default=0.75,
                     help="stream mode: fill fraction that triggers compact")
     args = ap.parse_args()

@@ -14,10 +14,13 @@ the decode step; the index shards over the "data" axis in the distributed
 service (see core/distributed.py). The datastore index is a ``repro.api``
 :class:`Index` — a config-carrying pytree, so the RetrievalState crosses the
 jit boundary as one bundle and neighbour lookup is a single policy-driven
-``index.query(q, w, QuerySpec(k=topk))`` through the fused probe pipeline
-(probe → dedupe → gather_rerank_topk): a decode step's retrieval never
-materializes a (B, L·C, d_key) candidate tensor — the datastore rows stream
-through the kernel's on-chip top-k (DESIGN.md §3).
+``index.query(q, w, QuerySpec(k=topk))`` through the shared ``repro.engine``
+pipeline (candidate sources → dedupe → gather_rerank_topk): a decode step's
+retrieval never materializes a (B, L·C, d_key) candidate tensor — the
+datastore rows stream through the kernel's on-chip top-k (DESIGN.md §3/§8).
+A growing datastore (``delta_capacity > 0``) adds the delta key-match
+source to the same program; the chunked match keeps decode-step memory
+independent of the configured capacity.
 """
 
 from __future__ import annotations

@@ -8,8 +8,10 @@ Prints ``name,us_per_call,derived`` CSV. The roofline rows summarize the
 compiled dry-run artifacts if present (run repro.launch.dryrun first).
 
 The kernel rows are additionally snapshotted to ``BENCH_kernels.json``,
-the mutable-lifecycle rows to ``BENCH_updates.json``, and the planner
-adherence rows to ``BENCH_planner.json`` (cwd) — one record per row plus
+the mutable-lifecycle rows to ``BENCH_updates.json``, the planner
+adherence rows to ``BENCH_planner.json``, and the serving-broker rows
+(trace latency/throughput, degradation recall, chaos coverage) to
+``BENCH_serving.json`` (cwd) — one record per row plus
 backend/device metadata — so successive PRs leave a machine-readable perf
 trajectory.
 """
@@ -31,6 +33,7 @@ MODULES = [
     "planner_bench",  # declarative planning: recall-target adherence + cost
     "kernels_bench",  # kernel microbenchmarks
     "update_bench",  # mutable lifecycle: insert/query-vs-fill/compact
+    "serving_bench",  # broker: traces, degradation recall, chaos coverage
     "roofline",  # dry-run roofline summaries (if results exist)
 ]
 
@@ -73,6 +76,8 @@ def main() -> None:
                 _write_kernels_json(rows, path="BENCH_updates.json")
             if name == "planner_bench":
                 _write_kernels_json(rows, path="BENCH_planner.json")
+            if name == "serving_bench":
+                _write_kernels_json(rows, path="BENCH_serving.json")
         except Exception as e:
             failed.append(name)
             print(f"{name},NaN,ERROR:{type(e).__name__}:{e}")

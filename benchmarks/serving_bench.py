@@ -1,0 +1,163 @@
+"""Serving-tier benchmarks: broker latency/throughput under arrival traces,
+degraded-vs-full recall along the ladder, chaos coverage + recovery
+(benchmarks/run.py snapshots the rows into BENCH_serving.json).
+
+What the numbers validate:
+
+  * dynamic batching + the power-of-two bucket ladder serve ragged Poisson
+    and bursty arrivals through ONE warm jit cache (the broker asserts no
+    retrace after every run) — p50/p99/throughput/shed-rate rows per trace;
+  * the degradation ladder's rungs trade calibrated recall for candidate
+    volume — the rung recall rows measure each rung against the exact
+    oracle on the bench queries, which is the recall a degraded response's
+    label promises;
+  * under a mid-stream shard kill the broker keeps answering from
+    survivors with labeled ``coverage == (S-1)/S``, walks the capped
+    exponential backoff, recovers the shard from its persisted manifest,
+    and post-recovery answers are bit-identical to pre-failure ones.
+
+Arrival rates are derived from the measured full-bucket service time, so
+the load factors (not the absolute req/s) are the regression signal:
+poisson runs at ~0.6x capacity (healthy), bursty bursts at ~2.4x
+(overload — the degradation/shedding drill). SERVING_BENCH_N scales the
+database for CI smoke runs.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.api import Index, QualitySpec, QuerySpec
+from repro.distance import recall_at_k
+from repro.serving import (
+    Broker,
+    BrokerConfig,
+    ChaosPlan,
+    ShardSet,
+    SLOConfig,
+    bursty_trace,
+    poisson_trace,
+    requests_from_trace,
+)
+
+N = int(os.environ.get("SERVING_BENCH_N", 20_000))
+N_REQ = int(os.environ.get("SERVING_BENCH_REQUESTS", 600))
+D = 16
+K_NN = 10
+MAX_BATCH = 32
+SHARDS = 4
+
+
+def _queries(key, b: int = 256):
+    q = np.asarray(jax.random.uniform(jax.random.fold_in(key, 1), (b, D)))
+    w = np.abs(np.asarray(
+        jax.random.normal(jax.random.fold_in(key, 2), (b, D))
+    )) + 0.1
+    return q.astype(np.float32), w.astype(np.float32)
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(jax.random.fold_in(key, 0), (N, D))
+    quality = QualitySpec(k=K_NN, recall_target=0.9)
+    index = Index.build(jax.random.fold_in(key, 3), data, quality)
+    ladder = index.plan_ladder(quality)
+    q, w = _queries(key)
+    rows = []
+
+    # --- degraded-vs-full recall: what each rung's label promises ----------
+    exact = index.query(q, w, QuerySpec(k=K_NN, mode="exact"))
+    for r, spec in enumerate(ladder):
+        res = index.query(q, w, spec)
+        rec = float(recall_at_k(res.ids, exact.ids, K_NN))
+        rows.append(
+            row(f"serving/rung{r}_recall_pct", 100.0 * rec,
+                f"measured vs exact; label predicts "
+                f"{float(spec.predicted_recall):.3f} "
+                f"(mode={spec.mode}, probes={spec.n_probes})")
+        )
+
+    # --- capacity probe: full-bucket service time sets the arrival rates ---
+    spec0 = ladder[0]
+    qb, wb = q[:MAX_BATCH], w[:MAX_BATCH]
+    t_batch_us = time_fn(lambda: index.query(qb, wb, spec0).dists)
+    cap_rps = MAX_BATCH / (t_batch_us / 1e6)
+    rows.append(
+        row("serving/full_bucket_query", t_batch_us,
+            f"b={MAX_BATCH}; engine capacity ~{cap_rps:,.0f} req/s")
+    )
+    slo = SLOConfig(p99_ms=max(5.0, 4.0 * t_batch_us / 1e3))
+
+    traces = {
+        "poisson": poisson_trace(0.6 * cap_rps, N_REQ, seed=1),
+        "bursty": bursty_trace(0.3 * cap_rps, 2.4 * cap_rps, N_REQ, seed=2,
+                               period_s=max(0.05, 50 * t_batch_us / 1e6)),
+    }
+    for kind, trace in traces.items():
+        broker = Broker(index, quality, slo,
+                        BrokerConfig(max_batch=MAX_BATCH, max_queue=4 * MAX_BATCH))
+        responses, stats = broker.run(requests_from_trace(trace, q, w))
+        broker.assert_no_retrace()
+        extra = (f"SLO_p99_ms={slo.p99_ms:.1f};rungs={stats.rung_counts};"
+                 f"degraded_frac={stats.degraded_frac:.3f}")
+        rows.append(row(f"serving/{kind}_p50", stats.p50_ms * 1e3,
+                        f"p50 latency ({kind} arrivals, no retrace)"))
+        rows.append(row(f"serving/{kind}_p99", stats.p99_ms * 1e3, extra))
+        rows.append(row(f"serving/{kind}_throughput",
+                        1e6 / max(stats.throughput_rps, 1e-9),
+                        f"{stats.throughput_rps:,.0f} req/s served"))
+        rows.append(row(f"serving/{kind}_shed_rate_pct", 100.0 * stats.shed_rate,
+                        f"{stats.shed} of {len(responses)} shed"))
+
+    # --- chaos: mid-stream shard kill under the poisson trace ---------------
+    with tempfile.TemporaryDirectory(prefix="repro_serving_bench_") as root:
+        ss = ShardSet.build(index, SHARDS, root)
+        pre = ss.query(q, w, spec0)
+        kill_at = float(traces["poisson"][N_REQ // 4])
+        ss.chaos = ChaosPlan(
+            kill_shard=1, kill_at_s=kill_at, recovery_failures=2,
+            backoff_base_s=2 * t_batch_us / 1e6, backoff_cap_s=0.5,
+        )
+        broker = Broker(index, quality, slo,
+                        BrokerConfig(max_batch=MAX_BATCH, max_queue=4 * MAX_BATCH),
+                        shardset=ss)
+        responses, stats = broker.run(
+            requests_from_trace(traces["poisson"], q, w)
+        )
+        broker.assert_no_retrace()
+        served = [r for r in responses if r.status != "shed"]
+        expect = (SHARDS - 1) / SHARDS
+        n_degraded_cov = sum(
+            1 for r in served if abs(r.coverage - expect) < 1e-9
+        )
+        events = [e["event"] for e in ss.recovery_log]
+        post = ss.query(q, w, spec0)
+        identical = (np.array_equal(pre.ids, post.ids)
+                     and np.array_equal(pre.dists, post.dists))
+        rows.append(
+            row("serving/chaos_p99", stats.p99_ms * 1e3,
+                f"1 of {SHARDS} shards killed mid-stream; "
+                f"mean_coverage={stats.mean_coverage:.3f}")
+        )
+        rows.append(
+            row("serving/chaos_survivor_answers", float(n_degraded_cov),
+                f"responses labeled coverage={expect} while shard down; "
+                f"events={events}")
+        )
+        rows.append(
+            row("serving/chaos_recovery", float(events.count("recover_failed")),
+                f"injected failures before recovery; recovered="
+                f"{'recovered' in events}; post-recovery bit-identical="
+                f"{identical}")
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

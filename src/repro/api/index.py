@@ -70,10 +70,16 @@ def _as_key_data(key: jax.Array) -> jax.Array:
 
 
 def validate_query_args(d: int, queries: jax.Array, weights: jax.Array) -> None:
-    """Shape/batch validation shared by BOTH query facades (``Index.query``
-    and ``ShardedIndex.query``): malformed ``(queries, weights)`` raise a
-    ValueError naming the offending argument instead of surfacing as a
-    trace error deep inside jit/shard_map."""
+    """Shape/batch/value validation shared by BOTH query facades
+    (``Index.query`` and ``ShardedIndex.query``): malformed ``(queries,
+    weights)`` raise a ValueError naming the offending argument instead of
+    surfacing as a trace error deep inside jit/shard_map, and NON-FINITE
+    rows (NaN/Inf) raise a ValueError naming the offending row indices
+    instead of silently poisoning every distance in the rerank tail (a NaN
+    query compares false against every candidate, so the top-k would return
+    sentinel garbage with no hint why). The finiteness scan is skipped for
+    tracers — inside jit the caller has already validated the concrete
+    arrays at the boundary."""
     for name, arr in (("queries", queries), ("weights", weights)):
         if arr.ndim != 2 or arr.shape[-1] != d:
             raise ValueError(
@@ -86,6 +92,19 @@ def validate_query_args(d: int, queries: jax.Array, weights: jax.Array) -> None:
             f"queries.shape={tuple(queries.shape)} vs "
             f"weights.shape={tuple(weights.shape)}"
         )
+    for name, arr in (("queries", queries), ("weights", weights)):
+        if isinstance(arr, jax.core.Tracer):
+            continue
+        finite_rows = np.isfinite(np.asarray(arr)).all(axis=1)
+        if not finite_rows.all():
+            bad = np.nonzero(~finite_rows)[0]
+            head = ", ".join(map(str, bad[:8])) + (", …" if bad.size > 8 else "")
+            raise ValueError(
+                f"{name} contains non-finite values (NaN/Inf) in "
+                f"{bad.size} of {finite_rows.size} rows [{head}] — "
+                f"non-finite {name} would silently produce NaN distances "
+                f"through the rerank tail; filter or clamp them first"
+            )
 
 
 def _check_probe_reach(cfg: IndexConfig, spec: QuerySpec) -> None:
@@ -140,6 +159,11 @@ class Index:
     # memoized QualitySpec -> PlannedSpec resolutions; static metadata (rides
     # the treedef, persists in the v3 manifest, copies through shard())
     plans: dict = dataclasses.field(default_factory=dict, compare=False)
+    # memoized QualitySpec -> degradation-ladder resolutions (tuple of
+    # PlannedSpec, richest first). Host-side serving metadata only: it does
+    # NOT ride the treedef or the manifest — a jit/shard_map crossing or a
+    # save/load drops it, and plan_ladder() re-derives it deterministically
+    ladders: dict = dataclasses.field(default_factory=dict, compare=False)
 
     def __post_init__(self):
         # Synthesize empty mutation state when constructed without it (the
@@ -326,6 +350,29 @@ class Index:
             planned = planner.plan_query(self, quality)
             self.plans[quality] = planned
         return planned
+
+    def plan_ladder(self, quality: QualitySpec, planner=None) -> tuple:
+        """Resolve ``quality`` to the full DEGRADATION ladder (memoized):
+        a tuple of :class:`PlannedSpec` rungs, rung 0 being exactly what
+        ``plan(quality)`` returns (the contract-meeting operating point) and
+        every later rung strictly cheaper — fewer probes, then single-probe,
+        then shrinking candidate windows. Each rung carries its calibrated
+        ``predicted_recall``/``predicted_success``, which is what lets a
+        serving broker under SLO pressure step down the ladder and LABEL
+        each degraded response with the recall it traded away (see
+        :mod:`repro.serving`). One calibration pass scores every rung, and
+        the rung-0 resolution seeds the ``plans`` memo, so
+        ``plan_ladder`` + ``query(quality)`` costs one calibration total."""
+        ladder = self.ladders.get(quality)
+        if ladder is None:
+            if planner is None:
+                from repro.api.planner import Planner
+
+                planner = Planner()
+            ladder = planner.plan_ladder(self, quality)
+            self.ladders[quality] = ladder
+            self.plans.setdefault(quality, ladder[0])
+        return ladder
 
     def query(self, queries: jax.Array, weights: jax.Array, spec=QuerySpec()) -> QueryResult:
         """Batched k-NN under d_w^l1; ``spec`` picks the execution strategy.

@@ -356,10 +356,12 @@ class Planner:
         slots = cfg.L * plan.n_probes * plan.max_candidates
         return mean_cand + self.slot_cost * slots
 
-    def plan_query(self, index, quality: QualitySpec) -> PlannedSpec:
-        """Calibrate the plan ladder on a data sample; return the cheapest
-        plan meeting ``quality.recall_target`` (best-effort + warning when
-        none does). ``index`` is a built ``repro.api.Index``."""
+    def _calibrate(self, index, quality: QualitySpec):
+        """One calibration pass shared by ``plan_query`` and ``plan_ladder``:
+        run EVERY ladder rung through the real query path against the exact
+        oracle. Returns ``(scored, success)`` where ``scored`` is a list of
+        ``(rung, recall, mean_cand, cost)`` tuples and ``success`` the Thm 1
+        success bound at the calibrated operating radius."""
         from repro.distance import recall_at_k
 
         data = index.state.data
@@ -393,19 +395,25 @@ class Planner:
             recall = float(recall_at_k(res.ids, exact.ids, quality.k))
             mean_cand = float(jnp.mean(res.n_candidates))
             scored.append((rung, recall, mean_cand, self._plan_cost(cfg, rung, mean_cand)))
+        return scored, float(success)
 
+    def _select(self, scored, quality: QualitySpec):
+        """Pick the winning rung from a calibrated ``scored`` list: cheapest
+        meeting the recall target (then the latency budget), with the
+        documented best-effort fallbacks + warnings. Returns the scored
+        tuple ``(rung, recall, mean_cand, cost)``."""
         budget = None
         if quality.latency_budget_ms is not None:
             budget = quality.latency_budget_ms * self.candidates_per_ms
         meets_recall = [s for s in scored if s[1] >= quality.recall_target - 1e-9]
         feasible = [s for s in meets_recall if budget is None or s[2] <= budget]
         if feasible:
-            plan, recall, mean_cand, _ = min(feasible, key=lambda s: s[3])
-        elif meets_recall:
+            return min(feasible, key=lambda s: s[3])
+        if meets_recall:
             # recall is reachable but not inside the budget: keep the recall
             # guarantee, take the cheapest such plan, and say so — the budget
             # is a coarse model, the recall target is the contract
-            plan, recall, mean_cand, _ = min(meets_recall, key=lambda s: s[3])
+            plan, recall, mean_cand, cost = min(meets_recall, key=lambda s: s[3])
             warnings.warn(
                 f"planner: no plan meets recall_target={quality.recall_target} "
                 f"within latency_budget_ms={quality.latency_budget_ms} "
@@ -414,22 +422,53 @@ class Planner:
                 f"recall target — relax one of the two",
                 stacklevel=2,
             )
-        else:
-            # best effort: highest calibrated recall, cheapest among ties
-            plan, recall, mean_cand, _ = max(scored, key=lambda s: (s[1], -s[3]))
-            warnings.warn(
-                f"planner: no execution plan reaches recall_target="
-                f"{quality.recall_target} on this index "
-                f"(best calibrated recall {recall:.3f} via {plan.mode}); "
-                f"rebuild with a QualitySpec (or more tables / a wider "
-                f"max_candidates window) to close the gap",
-                stacklevel=2,
-            )
+            return plan, recall, mean_cand, cost
+        # best effort: highest calibrated recall, cheapest among ties
+        plan, recall, mean_cand, cost = max(scored, key=lambda s: (s[1], -s[3]))
+        warnings.warn(
+            f"planner: no execution plan reaches recall_target="
+            f"{quality.recall_target} on this index "
+            f"(best calibrated recall {recall:.3f} via {plan.mode}); "
+            f"rebuild with a QualitySpec (or more tables / a wider "
+            f"max_candidates window) to close the gap",
+            stacklevel=2,
+        )
+        return plan, recall, mean_cand, cost
+
+    @staticmethod
+    def _stamp(scored_entry, success: float) -> PlannedSpec:
+        rung, recall, mean_cand, _ = scored_entry
         return dataclasses.replace(
-            plan,
+            rung,
             predicted_recall=recall,
-            predicted_success=float(success),
+            predicted_success=success,
             expected_candidates=mean_cand,
+        )
+
+    def plan_query(self, index, quality: QualitySpec) -> PlannedSpec:
+        """Calibrate the plan ladder on a data sample; return the cheapest
+        plan meeting ``quality.recall_target`` (best-effort + warning when
+        none does). ``index`` is a built ``repro.api.Index``."""
+        scored, success = self._calibrate(index, quality)
+        return self._stamp(self._select(scored, quality), success)
+
+    def plan_ladder(self, index, quality: QualitySpec) -> tuple[PlannedSpec, ...]:
+        """The DEGRADATION ladder of an index for ``quality``: rung 0 is
+        exactly the plan ``plan_query`` would pick (the serving operating
+        point); every later rung is strictly cheaper under the plan cost
+        model — fewer probes, then single-probe, then shrinking candidate
+        windows — down to the cheapest rung the geometry supports. Every
+        rung is stamped with its CALIBRATED ``predicted_recall`` /
+        ``predicted_success`` (Eq 25/27 at the calibrated operating radius),
+        so a serving tier stepping down the ladder under load can label each
+        degraded response with the recall it gave up instead of degrading
+        silently. Deterministic given (index, ``quality.seed``) — one
+        calibration pass scores every rung."""
+        scored, success = self._calibrate(index, quality)
+        chosen = self._select(scored, quality)
+        cheaper = sorted((s for s in scored if s[3] < chosen[3]), key=lambda s: -s[3])
+        return tuple(
+            self._stamp(s, success) for s in [chosen, *cheaper]
         )
 
     @staticmethod

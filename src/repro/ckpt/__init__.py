@@ -1,8 +1,15 @@
 from repro.ckpt.checkpoint import (
     AsyncCheckpointer,
+    CorruptCheckpointError,
     latest_step,
     restore_checkpoint,
     save_checkpoint,
 )
 
-__all__ = ["AsyncCheckpointer", "latest_step", "restore_checkpoint", "save_checkpoint"]
+__all__ = [
+    "AsyncCheckpointer",
+    "CorruptCheckpointError",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

@@ -41,6 +41,12 @@ except ModuleNotFoundError:  # offline containers: fall back to stdlib zlib
     zstd = None
 import zlib
 
+class CorruptCheckpointError(ValueError):
+    """A committed checkpoint's bytes do not decode/verify — truncated or
+    bit-flipped payload (decompress/unpack failure, per-leaf CRC mismatch).
+    Restores raise this instead of handing back garbage arrays."""
+
+
 _ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 # extension says what the WRITER produced (don't put zlib bytes in a .zst
 # file); the reader accepts either and double-checks by frame magic.
@@ -95,14 +101,18 @@ def save_checkpoint(directory: str, step: int, tree: Any, shard_id: int = 0) -> 
     os.makedirs(tmp_dir, exist_ok=True)
 
     flat = _flatten(tree)
-    payload = {
-        k: {
+    payload = {}
+    for k, v in flat.items():
+        data = v.tobytes()
+        payload[k] = {
             "dtype": str(v.dtype),
             "shape": list(v.shape),
-            "data": v.tobytes(),
+            "data": data,
+            # per-leaf integrity: a bit-flip that survives decompression
+            # (or slips past the zlib fallback's weak framing) is caught at
+            # restore instead of loading as silently-garbage weights
+            "crc": zlib.crc32(data),
         }
-        for k, v in flat.items()
-    }
     raw = msgpack.packb(payload, use_bin_type=True)
     comp = _compress(raw)
     fname = os.path.join(tmp_dir, f"shard_{shard_id}{_WRITE_EXT}")
@@ -144,8 +154,22 @@ def restore_checkpoint(directory: str, step: int, template: Any, shard_id: int =
     else:
         raise FileNotFoundError(f"no shard_{shard_id} file in {step_dir}")
     with open(fname, "rb") as f:
-        raw = _decompress(f.read())
-    payload = msgpack.unpackb(raw, raw=False)
+        blob = f.read()
+    try:
+        raw = _decompress(blob)
+        payload = msgpack.unpackb(raw, raw=False)
+    except ModuleNotFoundError:
+        raise  # zstd-written file without zstandard installed: actionable as-is
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"checkpoint shard {fname} is corrupt (truncated or bit-flipped "
+            f"payload): {type(e).__name__}: {e}"
+        ) from e
+    if not isinstance(payload, dict):
+        raise CorruptCheckpointError(
+            f"checkpoint shard {fname} decoded to {type(payload).__name__}, "
+            f"not a leaf mapping — corrupt payload"
+        )
 
     leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
     out = []
@@ -154,20 +178,55 @@ def restore_checkpoint(directory: str, step: int, template: Any, shard_id: int =
         if key not in payload:
             raise KeyError(f"checkpoint missing leaf {key}")
         rec = payload[key]
-        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(
-            rec["shape"]
-        )
+        if "crc" in rec and zlib.crc32(rec["data"]) != rec["crc"]:
+            raise CorruptCheckpointError(
+                f"checkpoint shard {fname} leaf {key!r} fails its CRC — "
+                f"bytes were corrupted after commit; restore from another step"
+            )
+        try:
+            arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(
+                rec["shape"]
+            )
+        except (ValueError, TypeError) as e:
+            raise CorruptCheckpointError(
+                f"checkpoint shard {fname} leaf {key!r} does not match its "
+                f"recorded dtype/shape ({e}) — corrupt payload"
+            ) from e
         out.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, [l for l in out])
 
 
 class AsyncCheckpointer:
-    """Overlap checkpoint IO with training (one in-flight save)."""
+    """Overlap checkpoint IO with training (one in-flight save).
+
+    Use as a context manager: ``__exit__`` flushes the in-flight save even
+    when an exception unwinds the training loop, so a restart's
+    ``latest_step`` read can never race the writer thread (the failure-
+    injection drills raise ``SimulatedFailure`` mid-loop — without the
+    flush, the last commit is nondeterministically visible). When the body
+    is already unwinding, a save error is swallowed (the restart recovers
+    from the previous commit, which is exactly the crash contract); on the
+    clean path it propagates.
+    """
 
     def __init__(self, directory: str):
         self.directory = directory
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+
+    def __enter__(self) -> "AsyncCheckpointer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        try:
+            self.wait()
+        except BaseException:
+            if exc_type is None:
+                raise
+            # already unwinding (e.g. an injected failure): don't mask the
+            # primary error — a failed async save just means the restart
+            # resumes from the previous commit
+        return False
 
     def save(self, step: int, tree: Any) -> None:
         self.wait()

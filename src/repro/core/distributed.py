@@ -36,6 +36,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
@@ -65,6 +66,57 @@ class ShardedQueryResult(NamedTuple):
     dists: jax.Array  # (b, k) global ascending
     ids: jax.Array  # (b, k) global ids (shard_offset + local id)
     n_candidates: jax.Array  # (b,) summed over shards
+
+
+def shard_row_ranges(n: int, n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous equal row partition [start, stop) per shard — the id
+    scheme of ``_globalize_and_merge`` (shard s owns [s·n_local, (s+1)·
+    n_local)) and of the serving tier's host-side shard set. Requires
+    ``n % n_shards == 0`` so every shard compiles one program shape."""
+    if n_shards <= 0 or n % n_shards:
+        raise ValueError(
+            f"n={n} database rows cannot be split into {n_shards} equal "
+            f"shards — the contiguous-partition id scheme (and the one-"
+            f"compiled-program-per-bucket serving contract) needs n % "
+            f"n_shards == 0"
+        )
+    n_local = n // n_shards
+    return [(s * n_local, (s + 1) * n_local) for s in range(n_shards)]
+
+
+def merge_topk_host(dists: np.ndarray, ids: np.ndarray, k: int):
+    """Host-side top-k merge of per-shard results — the serving-tier mirror
+    of ``_globalize_and_merge``'s on-device merge (there the shards live on
+    one mesh and merge with collectives; here each shard is its own host
+    process and the broker merges replies).
+
+    Args:
+      dists: (S, b, k') per-shard ascending distances. Sentinel slots
+        (``+inf``, incl. ENTIRE dead-shard blocks — a killed shard
+        contributes only sentinels) sink to the tail, exactly like the §8
+        engine merge.
+      ids: (S, b, k') matching global ids (``-1`` on sentinel slots).
+      k: result width.
+
+    Returns:
+      (dists (b, k), ids (b, k)) numpy arrays, ascending per row; ids are
+      ``-1`` wherever fewer than k finite candidates exist across the
+      surviving shards. Deterministic (stable sort), so a recovered shard
+      set answers bit-identically to the pre-failure one.
+    """
+    dists = np.asarray(dists)
+    ids = np.asarray(ids)
+    S, b, kk = dists.shape
+    flat_d = np.moveaxis(dists, 0, 1).reshape(b, S * kk)
+    flat_i = np.moveaxis(ids, 0, 1).reshape(b, S * kk)
+    # sentinel ids must not win ties against real rows at equal distance
+    order = np.argsort(
+        np.where(flat_i < 0, np.inf, flat_d), axis=1, kind="stable"
+    )[:, :k]
+    out_d = np.take_along_axis(flat_d, order, axis=1)
+    out_i = np.take_along_axis(flat_i, order, axis=1)
+    out_d = np.where(out_i < 0, np.inf, out_d)
+    return out_d, out_i
 
 
 def local_index_specs(mesh: Mesh) -> ALSHIndex:

@@ -1,4 +1,4 @@
-"""Serving launcher — three modes:
+"""Serving launcher — four modes:
 
   ALSH vector-search service (the paper's workload), served end-to-end
   through the ``repro.api`` Index facade on the shared ``repro.engine``
@@ -23,6 +23,15 @@
   plain flag away:
     python -m repro.launch.serve --mode stream --ingest 512 --retire 128 \
         --delta-capacity 16384
+
+  Fault-tolerant broker service — the full serving tier (repro.serving):
+  dynamic batching over an arrival trace, SLO admission control with the
+  calibrated degradation ladder, and optional shard chaos (mid-stream
+  kill, survivors-only answers with labeled coverage, backoff recovery):
+    python -m repro.launch.serve --mode broker --recall-target 0.9 \
+        --slo-p99-ms 50 --arrival bursty --rate 500 --requests 2000
+    python -m repro.launch.serve --mode broker --shards 4 --kill-shard 1 \
+        --kill-at 0.5
 
   LM decode service with optional ALSH retrieval augmentation:
     python -m repro.launch.serve --mode lm --arch gemma3-1b --reduced --retrieval
@@ -175,6 +184,91 @@ def serve_alsh_stream(args):
                   f"in {time.time()-t0:.2f}s")
 
 
+def serve_broker(args):
+    """Fault-tolerant broker drill: arrival trace -> batched engine calls
+    under an SLO, with optional scripted shard failure."""
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro.api import Index, QualitySpec
+    from repro.serving import (
+        Broker,
+        BrokerConfig,
+        ChaosPlan,
+        ShardSet,
+        SLOConfig,
+        make_trace,
+        requests_from_trace,
+    )
+
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(jax.random.fold_in(key, 1), (args.n, args.d))
+    quality = QualitySpec(
+        k=args.topk,
+        recall_target=args.recall_target if args.recall_target is not None else 0.9,
+    )
+    t0 = time.time()
+    index = Index.build(jax.random.fold_in(key, 2), data, quality)
+    ladder = index.plan_ladder(quality)
+    print(f"[broker] built+planned n={args.n} d={args.d} in {time.time()-t0:.2f}s; "
+          f"ladder has {len(ladder)} rungs "
+          f"(recalls {[round(float(r.predicted_recall), 3) for r in ladder]})")
+
+    shardset = None
+    tmp = None
+    if args.shards > 1:
+        tmp = tempfile.TemporaryDirectory(prefix="repro_shards_")
+        t0 = time.time()
+        shardset = ShardSet.build(index, args.shards, tmp.name)
+        print(f"[broker] built {args.shards} shards (persisted for recovery) "
+              f"in {time.time()-t0:.2f}s")
+        if args.kill_shard is not None:
+            shardset.chaos = ChaosPlan(
+                kill_shard=args.kill_shard, kill_at_s=args.kill_at
+            )
+            print(f"[broker] chaos armed: kill shard {args.kill_shard} "
+                  f"at t={args.kill_at}s")
+
+    slo = SLOConfig(p99_ms=args.slo_p99_ms)
+    broker = Broker(
+        index, quality, slo,
+        BrokerConfig(max_batch=args.max_batch, max_queue=args.max_queue),
+        shardset=shardset,
+    )
+    kq = jax.random.fold_in(key, 3)
+    q = np.asarray(jax.random.uniform(kq, (256, args.d)))
+    w = np.abs(np.asarray(jax.random.normal(jax.random.fold_in(kq, 1), (256, args.d)))) + 0.1
+    trace = make_trace(args.arrival, args.rate, args.requests, seed=0)
+    reqs = requests_from_trace(trace, q, w)
+    t0 = time.time()
+    responses, stats = broker.run(reqs)
+    broker.assert_no_retrace()
+    print(f"[broker] {args.arrival} trace: {len(reqs)} requests at ~{args.rate}/s "
+          f"served in {time.time()-t0:.2f}s wall")
+    print(f"[broker] p50={stats.p50_ms:.2f}ms p99={stats.p99_ms:.2f}ms "
+          f"(SLO {slo.p99_ms}ms) throughput={stats.throughput_rps:.0f} req/s")
+    print(f"[broker] shed_rate={stats.shed_rate:.3f} "
+          f"degraded_frac={stats.degraded_frac:.3f} rungs={stats.rung_counts} "
+          f"mean_coverage={stats.mean_coverage:.3f}")
+    if shardset is not None and args.kill_shard is not None:
+        served = [r for r in responses if r.status != "shed"]
+        covs = sorted({round(r.coverage, 6) for r in served})
+        expect = (args.shards - 1) / args.shards
+        events = [e["event"] for e in shardset.recovery_log]
+        print(f"[broker] chaos: coverages seen {covs}; recovery log events {events}")
+        assert any(abs(c - expect) < 1e-9 for c in covs), (
+            f"expected some survivors-only answers at coverage {expect}, got {covs}"
+        )
+        assert "killed" in events, "scripted kill never fired"
+        assert "recovered" in events, "shard never recovered within the trace"
+        assert shardset.coverage == 1.0, "shard set did not return to full coverage"
+        print("[broker] chaos assertions passed: labeled degraded coverage + recovery")
+    if tmp is not None:
+        tmp.cleanup()
+
+
 def serve_lm(args):
     import jax
     import jax.numpy as jnp
@@ -226,7 +320,8 @@ def serve_lm(args):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["alsh", "stream", "lm"], default="alsh")
+    ap.add_argument("--mode", choices=["alsh", "stream", "broker", "lm"],
+                    default="alsh")
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--retrieval", action="store_true")
@@ -261,11 +356,33 @@ def main():
                          "in this, so 16k+ capacities are fine)")
     ap.add_argument("--compact-threshold", type=float, default=0.75,
                     help="stream mode: fill fraction that triggers compact")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="broker mode: target p99 latency; breaches walk "
+                         "down the degradation ladder")
+    ap.add_argument("--arrival", choices=["poisson", "bursty"],
+                    default="poisson", help="broker mode: arrival trace shape")
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="broker mode: mean arrival rate (req/s)")
+    ap.add_argument("--requests", type=int, default=1000,
+                    help="broker mode: trace length")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="broker mode: >1 serves a host-side ShardSet")
+    ap.add_argument("--kill-shard", type=int, default=None,
+                    help="broker mode: chaos — shard to kill mid-stream "
+                         "(needs --shards > 1)")
+    ap.add_argument("--kill-at", type=float, default=0.5,
+                    help="broker mode: virtual time (s) of the shard kill")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="broker mode: largest dynamic-batch bucket")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="broker mode: admission queue bound (overflow sheds)")
     args = ap.parse_args()
     if args.mode == "alsh":
         serve_alsh(args)
     elif args.mode == "stream":
         serve_alsh_stream(args)
+    elif args.mode == "broker":
+        serve_broker(args)
     else:
         serve_lm(args)
 

@@ -20,6 +20,7 @@ re-coordination because batch(step, shard) is stateless — see data/pipeline.
 
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -39,6 +40,16 @@ class SimulatedFailure(RuntimeError):
 
 @dataclass
 class StragglerMonitor:
+    """EWMA mean/variance over per-step (or per-request) durations.
+
+    Two consumers share it: the training loop's straggler rule (``observe``
+    flags k·sigma outliers WITHOUT folding them into the estimate — a
+    straggler must not drag the baseline up), and the serving tier's latency
+    tracker (``ewma_quantile`` — there ``k_sigma=inf`` so overload latencies
+    DO update the estimate; an admission controller that ignored its own
+    overload signal would never degrade).
+    """
+
     alpha: float = 0.2
     k_sigma: float = 3.0
     mean: float = 0.0
@@ -57,6 +68,13 @@ class StragglerMonitor:
         self.var = (1 - self.alpha) * (self.var + self.alpha * delta * delta)
         self.n += 1
         return False
+
+    def ewma_quantile(self, z: float = 2.326) -> float:
+        """Normal-approximation EWMA quantile: ``mean + z·sd`` (z=2.326 is
+        the 99th percentile). A smoothed tail estimate, not an exact order
+        statistic — what an SLO admission controller wants: responsive to
+        sustained shifts, calm about single spikes."""
+        return self.mean + z * max(self.var, 0.0) ** 0.5
 
 
 def train_loop(
@@ -87,26 +105,31 @@ def train_loop(
         step = 0
         ckpt.save_checkpoint(ckpt_dir, 0, state)
 
-    saver = ckpt.AsyncCheckpointer(ckpt_dir) if async_ckpt else None
     monitor = StragglerMonitor()
-    while step < steps:
-        batch = {k: jax.numpy.asarray(v) for k, v in stream.batch(step).items()}
-        t0 = time.monotonic()
-        state, metrics = step_fn(state, batch)
-        jax.block_until_ready(metrics["loss"])
-        monitor.observe(step, time.monotonic() - t0)
-        step += 1
-        if on_metrics:
-            on_metrics(step, {k: float(v) for k, v in metrics.items()})
-        if fail_at is not None and step == fail_at:
-            raise SimulatedFailure(f"injected failure at step {step}")
-        if step % ckpt_every == 0 or step == steps:
-            if saver is not None:
-                saver.save(step, state)
-            else:
-                ckpt.save_checkpoint(ckpt_dir, step, state)
-    if saver is not None:
-        saver.wait()
+    # the async saver is a context manager so an in-flight save is flushed
+    # even when an exception (e.g. an injected SimulatedFailure) unwinds the
+    # loop — otherwise the restart's latest_step read races the writer
+    # thread and can resume from an OLDER commit than the one in flight
+    with contextlib.ExitStack() as stack:
+        saver = None
+        if async_ckpt:
+            saver = stack.enter_context(ckpt.AsyncCheckpointer(ckpt_dir))
+        while step < steps:
+            batch = {k: jax.numpy.asarray(v) for k, v in stream.batch(step).items()}
+            t0 = time.monotonic()
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            monitor.observe(step, time.monotonic() - t0)
+            step += 1
+            if on_metrics:
+                on_metrics(step, {k: float(v) for k, v in metrics.items()})
+            if fail_at is not None and step == fail_at:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            if step % ckpt_every == 0 or step == steps:
+                if saver is not None:
+                    saver.save(step, state)
+                else:
+                    ckpt.save_checkpoint(ckpt_dir, step, state)
     return state
 
 

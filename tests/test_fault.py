@@ -110,3 +110,97 @@ def test_grad_compression_modes_run(tiny_bundle, tmp_path):
         state = train_loop(b, DCFG, 3, str(tmp_path / mode), ckpt_every=100)
         for leaf in jax.tree.leaves(state.params):
             assert np.all(np.isfinite(np.asarray(leaf, np.float32))), mode
+
+
+# --- async checkpoint lifecycle (context manager: flush on exception) -------
+
+
+def test_async_checkpointer_flushes_in_flight_save_on_failure(tmp_path, monkeypatch):
+    """A SimulatedFailure raised while an async save is in flight must NOT
+    lose that save: AsyncCheckpointer.__exit__ joins the writer thread, so
+    the commit is deterministically visible to the restarting process.
+    (The pre-context-manager train_loop leaked the thread here — whether
+    the restart saw the last commit was a race.)"""
+    import time as _time
+
+    from repro.ckpt import checkpoint as ckpt_mod
+
+    real_save = ckpt_mod.save_checkpoint
+    monkeypatch.setattr(
+        ckpt_mod,
+        "save_checkpoint",
+        lambda *a, **k: (_time.sleep(0.3), real_save(*a, **k))[1],
+    )
+    d = str(tmp_path)
+    with pytest.raises(SimulatedFailure):
+        with ckpt.AsyncCheckpointer(d) as saver:
+            saver.save(7, {"x": jax.numpy.arange(3)})
+            # the slow writer is still running when the "node" dies
+            raise SimulatedFailure("die with a save in flight")
+    assert ckpt.latest_step(d) == 7  # flushed, not raced
+
+
+def test_async_checkpointer_exit_clean_path_raises_save_errors(tmp_path):
+    """On a clean exit a failed async save must propagate (nothing else
+    will surface it); while unwinding another exception it must not mask
+    the primary error."""
+    import pytest as _pytest
+
+    bad = os.path.join(str(tmp_path), "file")  # parent is a FILE: save fails
+    with open(bad, "w") as f:
+        f.write("x")
+    with _pytest.raises(OSError):
+        with ckpt.AsyncCheckpointer(os.path.join(bad, "sub")) as saver:
+            saver.save(1, {"x": jax.numpy.zeros((1,))})
+    # unwinding path: the primary error wins over the save error
+    with _pytest.raises(SimulatedFailure):
+        with ckpt.AsyncCheckpointer(os.path.join(bad, "sub")) as saver:
+            saver.save(1, {"x": jax.numpy.zeros((1,))})
+            raise SimulatedFailure("primary")
+
+
+def test_train_loop_failure_with_async_ckpt_commits_in_flight_save(
+    tiny_bundle, tmp_path, monkeypatch
+):
+    """End-to-end: train_loop with async_ckpt dies right after handing the
+    step-5 save to the writer thread; the restart must resume FROM step 5
+    and reproduce the clean run bitwise."""
+    import time as _time
+
+    from repro.ckpt import checkpoint as ckpt_mod
+
+    real_save = ckpt_mod.save_checkpoint
+    monkeypatch.setattr(
+        ckpt_mod,
+        "save_checkpoint",
+        lambda *a, **k: (_time.sleep(0.2), real_save(*a, **k))[1],
+    )
+    d = str(tmp_path / "faulty")
+    with pytest.raises(SimulatedFailure):
+        train_loop(tiny_bundle, DCFG, 10, d, ckpt_every=5, fail_at=6,
+                   async_ckpt=True)
+    assert ckpt.latest_step(d) == 5  # the in-flight save was flushed
+
+    faulty = run_with_restarts(tiny_bundle, DCFG, 10, d, failures=(),
+                               ckpt_every=5, async_ckpt=True)
+    clean = train_loop(tiny_bundle, DCFG, 10, str(tmp_path / "clean"),
+                       ckpt_every=5)
+    for a, b in zip(_leaves(faulty), _leaves(clean)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ewma_quantile_tracks_sustained_shift():
+    """The serving-tier consumer: with k_sigma=inf every sample folds in,
+    so a sustained latency shift moves the p99 estimate (the training
+    straggler rule would have frozen it as an outlier)."""
+    import math
+
+    mon = StragglerMonitor(alpha=0.2, k_sigma=math.inf)
+    for s in range(30):
+        mon.observe(s, 10.0)
+    calm = mon.ewma_quantile()
+    assert calm == pytest.approx(10.0, abs=1.0)
+    for s in range(30, 60):
+        mon.observe(s, 100.0)  # overload: 10x latencies
+    assert mon.ewma_quantile() > 50.0  # the estimate followed the shift
+    assert mon.ewma_quantile(0.0) == pytest.approx(mon.mean)

@@ -1,0 +1,289 @@
+"""Serving tier: degradation ladder, dynamic batching (no retrace),
+admission control, SLO degradation, shard chaos + recovery.
+
+The broker tests run in VIRTUAL time with an injected ``service_time_fn``,
+so queueing/degradation/shedding dynamics are deterministic on any
+machine — wall-clock only enters through the (asserted-warm) jit cache.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import Index, QualitySpec, QuerySpec
+from repro.api.index import validate_query_args
+from repro.serving import (
+    Broker,
+    BrokerConfig,
+    ChaosPlan,
+    ShardSet,
+    SLOConfig,
+    bursty_trace,
+    poisson_trace,
+    requests_from_trace,
+)
+
+N, D, K = 512, 8, 5
+
+
+@pytest.fixture(scope="module")
+def built():
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(N, D)).astype(np.float32)
+    quality = QualitySpec(k=K, recall_target=0.8)
+    index = Index.build(jax.random.PRNGKey(0), data, quality)
+    return index, quality
+
+
+@pytest.fixture(scope="module")
+def qw():
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(64, D)).astype(np.float32)
+    w = np.abs(rng.normal(size=(64, D))).astype(np.float32) + 0.1
+    return q, w
+
+
+# --- degradation ladder -----------------------------------------------------
+
+
+def test_plan_ladder_rung0_is_the_planned_spec(built):
+    index, quality = built
+    ladder = index.plan_ladder(quality)
+    assert ladder[0] == index.plan(quality)
+    assert len(ladder) >= 2  # this config must leave degradation headroom
+
+
+def test_plan_ladder_strictly_cheaper_and_labeled(built):
+    index, quality = built
+    ladder = index.plan_ladder(quality)
+    for spec in ladder:
+        # every rung carries the calibrated label a degraded response stamps
+        assert 0.0 <= spec.predicted_recall <= 1.0
+        assert 0.0 <= spec.predicted_success <= 1.0
+        assert spec.expected_candidates >= 0.0
+    recalls = [float(s.predicted_recall) for s in ladder]
+    assert recalls[0] == max(recalls)
+
+
+def test_plan_ladder_memoized_and_seeds_plan(built):
+    index, quality = built
+    ladder = index.plan_ladder(quality)
+    assert index.plan_ladder(quality) is ladder  # memo hit
+    assert index.plans[quality] == ladder[0]
+
+
+# --- argument validation (satellite) ---------------------------------------
+
+
+def test_nonfinite_queries_rejected(built, qw):
+    index, _ = built
+    q, w = (x.copy() for x in qw)
+    q[3, 0] = np.nan
+    q[7, 2] = np.inf
+    with pytest.raises(ValueError, match=r"queries.*non-finite.*\b3\b.*\b7\b"):
+        index.query(q, w, QuerySpec(k=K))
+
+
+def test_nonfinite_weights_rejected():
+    w = np.ones((4, 3), np.float32)
+    w[2, 1] = -np.inf
+    with pytest.raises(ValueError, match="weights.*non-finite.*2"):
+        validate_query_args(3, np.zeros((4, 3), np.float32), w)
+
+
+def test_finite_args_pass_validation(qw):
+    validate_query_args(D, *qw)
+
+
+# --- arrival traces ---------------------------------------------------------
+
+
+def test_traces_deterministic_and_ascending():
+    a = poisson_trace(100.0, 50, seed=7)
+    b = poisson_trace(100.0, 50, seed=7)
+    np.testing.assert_array_equal(a, b)
+    assert (np.diff(a) > 0).all()
+    c = bursty_trace(50.0, 500.0, 50, seed=7)
+    assert (np.diff(c) > 0).all()
+    with pytest.raises(ValueError, match="rate_hz"):
+        poisson_trace(0.0, 5)
+    with pytest.raises(ValueError, match="burst_hz"):
+        bursty_trace(100.0, 10.0, 5)
+
+
+# --- dynamic batching: bucket ladder + asserted no-retrace ------------------
+
+
+def test_bucket_ladder_covers_and_rounds_up(built):
+    index, quality = built
+    broker = Broker(index, quality, SLOConfig(p99_ms=50.0),
+                    BrokerConfig(max_batch=8, warmup=False))
+    assert broker.buckets == [1, 2, 4, 8]
+    assert broker.bucket_for(1) == 1
+    assert broker.bucket_for(3) == 4
+    assert broker.bucket_for(8) == 8
+    assert broker.bucket_for(99) == 8  # clamped to max_batch
+
+
+def test_ragged_arrivals_never_retrace(built, qw):
+    index, quality = built
+    broker = Broker(index, quality, SLOConfig(p99_ms=1e6),
+                    BrokerConfig(max_batch=8, max_queue=64))
+    # ragged gaps force every bucket size through the engine
+    arrivals = np.cumsum(np.resize([1e-4, 1e-4, 1e-4, 0.05, 1e-4, 0.05], 60))
+    responses, stats = broker.run(requests_from_trace(arrivals, *qw))
+    broker.assert_no_retrace()
+    assert stats.served == 60 and stats.shed == 0
+    assert all(r.status == "ok" for r in responses)
+
+
+def test_assert_no_retrace_needs_warmup(built):
+    index, quality = built
+    broker = Broker(index, quality, SLOConfig(p99_ms=50.0),
+                    BrokerConfig(warmup=False))
+    with pytest.raises(RuntimeError, match="warmup"):
+        broker.assert_no_retrace()
+
+
+# --- admission control: bounded queue + deadlines ---------------------------
+
+
+def test_queue_overflow_and_deadline_shed_are_labeled(built, qw):
+    index, quality = built
+    # service is 10x slower than arrivals: the bounded queue must overflow
+    # and the stragglers must blow their deadline — both shed WITH a reason
+    slo = SLOConfig(p99_ms=10.0, deadline_ms=25.0, patience=10_000)
+    broker = Broker(index, quality, slo,
+                    BrokerConfig(max_batch=2, max_queue=4),
+                    service_time_fn=lambda bucket, rung, spec: 0.02)
+    arrivals = np.arange(40) * 1e-3  # 1000/s vs ~100/s service
+    responses, stats = broker.run(requests_from_trace(arrivals, *qw))
+    reasons = {r.shed_reason for r in responses if r.status == "shed"}
+    assert reasons == {"queue_full", "deadline"}
+    assert stats.shed > 0 and stats.shed_rate > 0.0
+    assert stats.served + stats.shed == 40
+    # the deadline gates DEQUEUE: a served request waited at most the
+    # deadline in queue, then accrued one 20ms modeled service round
+    for r in responses:
+        if r.status != "shed":
+            assert r.latency_ms <= slo.effective_deadline_ms + 20.0 + 1e-6
+
+
+# --- SLO degradation: overload served within SLO, labeled -------------------
+
+
+def test_overload_degrades_within_slo_and_labels(built, qw):
+    index, quality = built
+    ladder = index.plan_ladder(quality)
+    slo = SLOConfig(p99_ms=30.0, patience=10_000)  # never walk back up
+
+    # rung 0 can't sustain the offered load; deeper rungs can (modeled)
+    def svc(bucket, rung, spec):
+        return 0.02 if rung == 0 else 0.002
+
+    broker = Broker(index, quality, slo,
+                    BrokerConfig(max_batch=4, max_queue=512),
+                    service_time_fn=svc)
+    arrivals = np.arange(300) * (1 / 400.0)  # 400/s vs 200/s rung-0 capacity
+    responses, stats = broker.run(requests_from_trace(arrivals, *qw))
+    broker.assert_no_retrace()
+
+    assert stats.shed == 0  # degradation absorbed the overload, not shedding
+    assert stats.degrades >= 1 and max(stats.rung_counts) > 0
+    # steady state: the EWMA p99 settled back inside the SLO
+    assert broker.tracker.p99_ms <= slo.p99_ms
+    # the tail of the run is actually served within the SLO
+    tail = [r for r in responses if r.status != "shed"][-50:]
+    assert max(r.latency_ms for r in tail) <= slo.p99_ms
+    # degraded responses are labeled with their rung's calibrated prediction
+    for r in responses:
+        if r.rung > 0:
+            assert r.status == "degraded"
+            assert r.predicted_recall == float(ladder[r.rung].predicted_recall)
+            assert r.predicted_success == float(ladder[r.rung].predicted_success)
+
+
+# --- chaos: shard kill, labeled coverage, backoff recovery ------------------
+
+
+@pytest.fixture(scope="module")
+def shardset_env(built, tmp_path_factory):
+    index, quality = built
+    root = tmp_path_factory.mktemp("shards")
+    return index, quality, str(root)
+
+
+def test_shardset_exact_matches_single_host(built, qw, tmp_path):
+    """Shard-exact + host merge == single-host exact: the merge is exact."""
+    index, _ = built
+    ss = ShardSet.build(index, 4, str(tmp_path))
+    spec = QuerySpec(k=K, mode="exact")
+    got = ss.query(*qw, spec)
+    ref = index.query(*qw, spec)
+    np.testing.assert_array_equal(got.ids, np.asarray(ref.ids))
+    np.testing.assert_allclose(got.dists, np.asarray(ref.dists), rtol=1e-6)
+    assert got.coverage == 1.0
+
+
+def test_shard_kill_mid_stream_coverage_and_recovery(built, qw, tmp_path):
+    index, quality = built
+    spec = index.plan(quality)
+    ss = ShardSet.build(index, 4, str(tmp_path))
+    pre = ss.query(*qw, spec)
+
+    base, cap = 0.01, 0.015
+    ss.chaos = ChaosPlan(kill_shard=2, kill_at_s=0.05, recovery_failures=2,
+                         backoff_base_s=base, backoff_cap_s=cap)
+    broker = Broker(index, quality, SLOConfig(p99_ms=1e6),
+                    BrokerConfig(max_batch=4, max_queue=256), shardset=ss,
+                    service_time_fn=lambda b, r, s: 0.004)
+    arrivals = np.arange(200) * (1 / 500.0)
+    responses, stats = broker.run(requests_from_trace(arrivals, *qw))
+    broker.assert_no_retrace()
+
+    served = [r for r in responses if r.status != "shed"]
+    covs = {round(r.coverage, 6) for r in served}
+    # survivors kept answering, labeled with exactly (S-1)/S coverage
+    assert covs == {0.75, 1.0}
+    for r in served:
+        if r.coverage < 1.0:
+            assert r.status == "degraded"
+            k_ids = r.ids
+            assert k_ids is not None and len(k_ids) == K
+
+    # dead shard's rows never appear while it is down
+    lo, hi = 2 * (N // 4), 3 * (N // 4)
+    for r in served:
+        if r.coverage < 1.0:
+            in_dead = (r.ids >= lo) & (r.ids < hi)
+            assert not in_dead.any()
+
+    events = [e["event"] for e in ss.recovery_log]
+    assert events == ["killed", "recover_failed", "recover_failed", "recovered"]
+    # capped exponential backoff: base, then min(2*base, cap)
+    backoffs = [e["next_backoff_s"] for e in ss.recovery_log
+                if e["event"] == "recover_failed"]
+    assert backoffs == [base, cap]
+
+    # recovered shard answers bit-identically to the pre-failure set
+    assert ss.coverage == 1.0
+    post = ss.query(*qw, spec)
+    np.testing.assert_array_equal(pre.ids, post.ids)
+    np.testing.assert_array_equal(pre.dists, post.dists)
+    assert stats.mean_coverage < 1.0  # the outage shows up in the aggregate
+
+
+def test_shard_row_ranges_validation():
+    from repro.core.distributed import merge_topk_host, shard_row_ranges
+
+    assert shard_row_ranges(8, 2) == [(0, 4), (4, 8)]
+    with pytest.raises(ValueError, match="equal"):
+        shard_row_ranges(10, 4)
+
+    # host merge: sentinels (dead shard) sink; ties broken stably
+    d = np.array([[[0.5, np.inf]], [[np.inf, np.inf]], [[0.2, 0.7]]])
+    i = np.array([[[3, -1]], [[-1, -1]], [[10, 11]]])
+    md, mi = merge_topk_host(d, i, 3)
+    np.testing.assert_array_equal(mi[0], [10, 3, 11])
+    np.testing.assert_allclose(md[0], [0.2, 0.5, 0.7])

@@ -2,16 +2,17 @@
 paper — no experimental tables — so benchmarks validate its equations and
 complexity claims; see DESIGN.md §1 "Validation targets").
 
-    PYTHONPATH=src python -m benchmarks.run [--only collision,...]
+    PYTHONPATH=src python -m benchmarks.run [--only collision,...] [--skip roofline,...]
 
 Prints ``name,us_per_call,derived`` CSV. The roofline rows summarize the
 compiled dry-run artifacts if present (run repro.launch.dryrun first).
 
 The kernel rows are additionally snapshotted to ``BENCH_kernels.json``,
 the mutable-lifecycle rows to ``BENCH_updates.json``, the planner
-adherence rows to ``BENCH_planner.json``, and the serving-broker rows
+adherence rows to ``BENCH_planner.json``, the serving-broker rows
 (trace latency/throughput, degradation recall, chaos coverage) to
-``BENCH_serving.json`` (cwd) — one record per row plus
+``BENCH_serving.json``, and the autotuner rows (prior-vs-calibrated
+plan speedup + adherence) to ``BENCH_tuner.json`` (cwd) — one record per row plus
 backend/device metadata — so successive PRs leave a machine-readable perf
 trajectory.
 """
@@ -34,8 +35,31 @@ MODULES = [
     "kernels_bench",  # kernel microbenchmarks
     "update_bench",  # mutable lifecycle: insert/query-vs-fill/compact
     "serving_bench",  # broker: traces, degradation recall, chaos coverage
+    "tuner_bench",  # offline autotuner: prior-vs-calibrated speedup + adherence
     "roofline",  # dry-run roofline summaries (if results exist)
 ]
+
+# benchmark modules whose rows also snapshot to a machine-readable artifact
+SNAPSHOTS = {
+    "kernels_bench": "BENCH_kernels.json",
+    "update_bench": "BENCH_updates.json",
+    "planner_bench": "BENCH_planner.json",
+    "serving_bench": "BENCH_serving.json",
+    "tuner_bench": "BENCH_tuner.json",
+}
+
+
+def select_modules(only: str | None, skip: str | None) -> list:
+    """Apply ``--only`` then ``--skip``; unknown names fail fast (a typo'd
+    filter silently running the full suite costs minutes)."""
+    mods = only.split(",") if only else list(MODULES)
+    skipped = skip.split(",") if skip else []
+    unknown = [m for m in [*mods, *skipped] if m not in MODULES]
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark module(s) {unknown}; known: {', '.join(MODULES)}"
+        )
+    return [m for m in mods if m not in skipped]
 
 
 def _write_kernels_json(rows, path: str = "BENCH_kernels.json") -> None:
@@ -58,8 +82,10 @@ def _write_kernels_json(rows, path: str = "BENCH_kernels.json") -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated module list")
+    ap.add_argument("--skip", default=None,
+                    help="comma-separated modules to exclude from the run")
     args = ap.parse_args()
-    mods = args.only.split(",") if args.only else MODULES
+    mods = select_modules(args.only, args.skip)
 
     print("name,us_per_call,derived")
     failed = []
@@ -70,14 +96,8 @@ def main() -> None:
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}")
             sys.stdout.flush()
-            if name == "kernels_bench":
-                _write_kernels_json(rows)
-            if name == "update_bench":
-                _write_kernels_json(rows, path="BENCH_updates.json")
-            if name == "planner_bench":
-                _write_kernels_json(rows, path="BENCH_planner.json")
-            if name == "serving_bench":
-                _write_kernels_json(rows, path="BENCH_serving.json")
+            if name in SNAPSHOTS:
+                _write_kernels_json(rows, path=SNAPSHOTS[name])
         except Exception as e:
             failed.append(name)
             print(f"{name},NaN,ERROR:{type(e).__name__}:{e}")

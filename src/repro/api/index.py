@@ -164,6 +164,16 @@ class Index:
     # NOT ride the treedef or the manifest — a jit/shard_map crossing or a
     # save/load drops it, and plan_ladder() re-derives it deterministically
     ladders: dict = dataclasses.field(default_factory=dict, compare=False)
+    # wall seconds each QualitySpec resolution cost on THIS process (audit
+    # metadata for explain/benchmarks). Host-side only: wall clocks must
+    # never ride the treedef (they would fracture the jit cache) or the
+    # manifest (plans are bit-reproducible, their timings are not)
+    plan_times: dict = dataclasses.field(default_factory=dict, compare=False)
+    # provenance stamp of the offline tuning table that backed a
+    # prior-based plan (repro.tuner TuningTable.provenance()). None until a
+    # table-backed planner resolves a plan here; persisted in the v4
+    # manifest so shipped indexes carry their tuning lineage
+    tuning: dict | None = dataclasses.field(default=None, compare=False)
 
     def __post_init__(self):
         # Synthesize empty mutation state when constructed without it (the
@@ -238,6 +248,7 @@ class Index:
                 update=update,
             )
 
+        import time as _time
         import warnings
 
         from repro.api.planner import Planner
@@ -256,8 +267,11 @@ class Index:
             at_cap = cfg.L >= planner.max_L
             with warnings.catch_warnings(record=True) as caught:
                 warnings.simplefilter("always")
-                index.plans[quality] = planner.plan_query(index, quality)
-            planned = index.plans[quality]
+                t0 = _time.perf_counter()
+                planned = planner.plan_query(index, quality)
+                index._record_plan(
+                    quality, planned, planner, _time.perf_counter() - t0
+                )
             if planned.predicted_recall >= quality.recall_target - 1e-9 or (
                 attempt == last_round or at_cap
             ):
@@ -343,13 +357,25 @@ class Index:
         """
         planned = self.plans.get(quality)
         if planned is None:
+            import time
+
             if planner is None:
                 from repro.api.planner import Planner
 
                 planner = Planner()
+            t0 = time.perf_counter()
             planned = planner.plan_query(self, quality)
-            self.plans[quality] = planned
+            self._record_plan(quality, planned, planner, time.perf_counter() - t0)
         return planned
+
+    def _record_plan(self, quality, planned, planner, elapsed: float) -> None:
+        """Memoize a resolution + its audit metadata: wall time (host-side,
+        surfaces as ``QueryReport.plan_build_s``) and — for prior-based
+        plans — the provenance stamp of the tuning table that shipped it."""
+        self.plans[quality] = planned
+        self.plan_times[quality] = elapsed
+        if planned.provenance == "prior" and getattr(planner, "table", None) is not None:
+            self.tuning = planner.table.provenance()
 
     def plan_ladder(self, quality: QualitySpec, planner=None) -> tuple:
         """Resolve ``quality`` to the full DEGRADATION ladder (memoized):
@@ -466,6 +492,10 @@ class Index:
             n_candidates=np.asarray(res.n_candidates),
             truncated_tables=truncated,
             n_invalid=np.asarray(jnp.sum(res.ids < 0, axis=1), dtype=np.int32),
+            provenance=planned.provenance if planned is not None else None,
+            plan_build_s=(
+                self.plan_times.get(quality) if quality is not None else None
+            ),
         )
 
     # -- mutation (functional: every method returns a new Index) ------------
@@ -599,6 +629,7 @@ class Index:
             delta=self.delta,
             tombstones=self.tombstones,
             plans=self.plans,
+            tuning=self.tuning,
         )
 
     @classmethod
@@ -607,8 +638,8 @@ class Index:
         segment state, and resolved query plans all travel with the data."""
         from repro.api import persist
 
-        state, build_key, cfg, update, delta, tombstones, plans = persist.load_index(
-            directory
+        state, build_key, cfg, update, delta, tombstones, plans, tuning = (
+            persist.load_index(directory)
         )
         return cls(
             state=state,
@@ -618,6 +649,7 @@ class Index:
             delta=delta,
             tombstones=tombstones,
             plans=plans,
+            tuning=tuning,
         )
 
     # -- distribution -------------------------------------------------------

@@ -29,6 +29,13 @@ QualitySpec queries without re-running the calibration pass, with the
 exact same resolved parameters. Version-1/2 directories still load, with an
 empty memo.
 
+Format version 4 adds the TUNING provenance stamp: when any memoized plan
+was resolved from an offline :mod:`repro.tuner` Pareto table
+(``PlannedSpec.provenance == "prior"``), the manifest's ``tuning`` entry
+records which table justified it (format/version/space_id/trial counts) —
+a shipped index is auditable back to the scan that tuned it. Pure JSON, no
+payload change; pre-v4 directories load with ``tuning=None``.
+
 All entry points accept ``str`` or ``pathlib.Path`` directories.
 """
 
@@ -48,8 +55,8 @@ from repro.core.index import ALSHIndex, DeltaSegment, IndexConfig
 from repro.core.transforms import BoundedSpace
 
 FORMAT = "repro.api.index"
-VERSION = 3
-_READABLE_VERSIONS = (1, 2, 3)
+VERSION = 4
+_READABLE_VERSIONS = (1, 2, 3, 4)
 _META = "index.json"
 
 
@@ -137,8 +144,9 @@ def save_index(
     delta: DeltaSegment | None = None,
     tombstones=None,
     plans: dict | None = None,
+    tuning: dict | None = None,
 ) -> str:
-    """Write a self-describing index directory (format version 3).
+    """Write a self-describing index directory (format version 4).
 
     The array payload commits FIRST (ckpt COMMIT protocol), the meta file is
     atomically replaced LAST: a fresh directory that crashed mid-save has no
@@ -180,6 +188,7 @@ def save_index(
         ],
         "tombstone_count": int(np.asarray(tombstones).sum()),
         "plans": plans_to_list(plans or {}),
+        "tuning": tuning,
     }
     tmp = os.path.join(directory, _META + ".tmp")
     with open(tmp, "w") as f:
@@ -192,11 +201,19 @@ def save_index(
 def load_index(
     directory: str | os.PathLike,
 ) -> tuple[
-    ALSHIndex, "jnp.ndarray", IndexConfig, UpdateSpec, DeltaSegment, "jnp.ndarray", dict
+    ALSHIndex,
+    "jnp.ndarray",
+    IndexConfig,
+    UpdateSpec,
+    DeltaSegment,
+    "jnp.ndarray",
+    dict,
+    dict | None,
 ]:
-    """Restore (state, build_key, config, update, delta, tombstones, plans)
-    from a directory alone. Version-1 directories restore as immutable
-    indexes; pre-v3 directories restore with an empty plan memo."""
+    """Restore (state, build_key, config, update, delta, tombstones, plans,
+    tuning) from a directory alone. Version-1 directories restore as
+    immutable indexes; pre-v3 directories restore with an empty plan memo;
+    pre-v4 directories restore with no tuning provenance."""
     directory = os.fspath(directory)
     meta_path = os.path.join(directory, _META)
     if not os.path.exists(meta_path):
@@ -239,7 +256,8 @@ def load_index(
         tombstones = jnp.zeros((state.data.shape[0],), bool)
     _check_consistent(state, delta, tombstones, cfg, update, meta, meta_path)
     plans = plans_from_list(meta.get("plans", [])) if version >= 3 else {}
-    return state, tree["build_key"], cfg, update, delta, tombstones, plans
+    tuning = meta.get("tuning") if version >= 4 else None
+    return state, tree["build_key"], cfg, update, delta, tombstones, plans, tuning
 
 
 def _check_consistent(

@@ -35,6 +35,19 @@ through the coarse linear cost model ``candidates_per_ms``.
 ``Index.plan`` memoizes resolved plans on the index (they ride the pytree
 treedef, persist in the v3 manifest, and survive ``shard()``), so the
 calibration pass runs once per (index, QualitySpec).
+
+**Empirical prior** (``Planner(table=...)``) — a third source of truth
+between theory and calibration: an offline :class:`repro.tuner.TuningTable`
+(per-profile recall/cost/memory Pareto frontiers from a distributed
+parameter scan). When the index's profile (family, n, d, weight skew) lands
+inside a scanned bucket, BOTH planner halves consult it first:
+``plan_config`` takes the cheapest frontier geometry meeting the recall
+target instead of running theory inversion, and ``plan_query`` executes ONE
+confirmation probe of the frontier's execution plan instead of the full
+calibration ladder — the resolved plan is stamped
+``provenance="prior"``. A failed confirmation, an out-of-bucket profile, or
+no table at all falls back to the calibrated path (stamped
+``provenance="calibrated"``) bit-identically to a table-less planner.
 """
 
 from __future__ import annotations
@@ -95,6 +108,13 @@ class QueryReport:
         were dropped BEFORE re-rank (grow the window or raise K).
       n_invalid: (b,) sentinel result slots (ids == -1): fewer than k
         neighbours survived the probe.
+      provenance: how the executed plan was resolved — "calibrated" |
+        "prior" for planned specs, None for raw mechanism QuerySpecs. A
+        query served off a PRIOR plan skipped the full calibration ladder;
+        this stamp is what makes that degradation auditable per query.
+      plan_build_s: wall seconds the plan resolution cost on THIS process
+        (None for mechanism specs and for plans restored from a manifest —
+        those were planned elsewhere).
     """
 
     spec: object
@@ -104,12 +124,16 @@ class QueryReport:
     n_candidates: np.ndarray
     truncated_tables: np.ndarray
     n_invalid: np.ndarray
+    provenance: str | None = None
+    plan_build_s: float | None = None
 
     def to_dict(self) -> dict:
         """JSON-able summary (arrays reduced to batch means) for logging."""
         return {
             "spec": dataclasses.asdict(self.spec) if dataclasses.is_dataclass(self.spec) else str(self.spec),
             "quality": dataclasses.asdict(self.quality) if self.quality else None,
+            "provenance": self.provenance,
+            "plan_build_s": self.plan_build_s,
             "mean_predicted_success": float(np.mean(self.predicted_success)),
             "mean_n_candidates": float(np.mean(self.n_candidates)),
             "queries_with_truncation": int(np.sum(self.truncated_tables > 0)),
@@ -143,6 +167,15 @@ class Planner:
         shrinks L exponentially since L ~ P1^-K) until K*L fits; the
         query-time calibration pass then recovers recall through wider
         windows/multiprobe if the slimmer geometry needs it.
+      table: optional :class:`repro.tuner.TuningTable` empirical prior (see
+        module docstring). None (default) plans exactly as before.
+      profile_skew: the weight-skew coordinate this planner's workload
+        occupies in the table's profile space — 1.0 is the reference
+        ``default_calibration_weights`` distribution; planners constructed
+        with explicit ``weights`` should state the matching skew.
+      confirm_slack: recall slack the single confirmation probe tolerates
+        before rejecting a prior plan (the probe measures on a finite
+        sample; the 2 pt default matches the repo's adherence bar).
     """
 
     weights: jax.Array | None = None
@@ -151,6 +184,9 @@ class Planner:
     max_K: int = 32
     max_L: int = 256
     max_hashes: int = 512
+    table: object | None = None
+    profile_skew: float = 1.0
+    confirm_slack: float = 0.02
 
     # -- shared sampling -----------------------------------------------------
     def _calibration_weights(self, key: jax.Array, m: int, d: int) -> jax.Array:
@@ -189,6 +225,11 @@ class Planner:
         ``family="auto"`` solves both families and keeps the lower rho.
         ``space`` defaults to the sample's bounding box at resolution
         ``M / (hi - lo)``. Deterministic given (data, quality.seed).
+
+        With a tuning ``table``, a frontier geometry for the matching data
+        profile short-circuits the theory inversion (the space still comes
+        from the data's bounding box); out-of-bucket profiles run the full
+        solve unchanged.
         """
         n, d = data.shape
         key = _prng(jnp.zeros((2,), jnp.uint32), quality.seed)
@@ -199,6 +240,9 @@ class Planner:
                 hi = lo + 1.0
             space = BoundedSpace(lo, hi, M / (hi - lo))
         M_eff = max(space.M, 1)
+        prior_cfg = self._config_from_prior(n, d, quality, family, M_eff, space)
+        if prior_cfg is not None:
+            return prior_cfg
         qs, ws = self._sample(
             jax.random.fold_in(key, 0), data, quality.calibration_queries,
             jitter=1.0 / space.t,
@@ -356,14 +400,12 @@ class Planner:
         slots = cfg.L * plan.n_probes * plan.max_candidates
         return mean_cand + self.slot_cost * slots
 
-    def _calibrate(self, index, quality: QualitySpec):
-        """One calibration pass shared by ``plan_query`` and ``plan_ladder``:
-        run EVERY ladder rung through the real query path against the exact
-        oracle. Returns ``(scored, success)`` where ``scored`` is a list of
-        ``(rung, recall, mean_cand, cost)`` tuples and ``success`` the Thm 1
-        success bound at the calibrated operating radius."""
-        from repro.distance import recall_at_k
-
+    def _calibration_sample(self, index, quality: QualitySpec):
+        """The shared deterministic calibration setup: jittered-data-row
+        queries + weights + the exact oracle's answer. Used by the full
+        ladder calibration AND the single prior-confirmation probe (same
+        sample, so a confirmed prior is measured on exactly the evidence a
+        calibrated plan would have been)."""
         data = index.state.data
         if isinstance(data, jax.core.Tracer):
             raise ValueError(
@@ -378,16 +420,32 @@ class Planner:
             key, data, quality.calibration_queries, jitter=1.0 / cfg.space.t
         )
         exact = index.query(qs, ws, QuerySpec(k=quality.k, mode="exact"))
+        return qs, ws, exact
 
-        # theory side: success bound at the observed operating radius.
-        # exact distances are in RAW data units; Eq 25/27 operate on lattice
-        # points, so scale by the discretization resolution t
+    def _operating_success(self, cfg: IndexConfig, exact, ws) -> float:
+        """Thm 1 success bound at the observed operating radius. Exact
+        distances are in RAW data units; Eq 25/27 operate on lattice points,
+        so scale by the discretization resolution t."""
         kth = exact.dists[:, -1]
         r_op = float(jnp.median(jnp.where(jnp.isfinite(kth), kth, 0.0)))
         r_op *= cfg.space.t
         w_ref = jnp.mean(jnp.abs(ws), axis=0)
         p1 = self._collision_prob(cfg, r_op, w_ref)
-        success = 1.0 - (1.0 - min(max(p1, 1e-12), 1 - 1e-12) ** cfg.K) ** cfg.L
+        return float(
+            1.0 - (1.0 - min(max(p1, 1e-12), 1 - 1e-12) ** cfg.K) ** cfg.L
+        )
+
+    def _calibrate(self, index, quality: QualitySpec):
+        """One calibration pass shared by ``plan_query`` and ``plan_ladder``:
+        run EVERY ladder rung through the real query path against the exact
+        oracle. Returns ``(scored, success)`` where ``scored`` is a list of
+        ``(rung, recall, mean_cand, cost)`` tuples and ``success`` the Thm 1
+        success bound at the calibrated operating radius."""
+        from repro.distance import recall_at_k
+
+        cfg = index.config
+        qs, ws, exact = self._calibration_sample(index, quality)
+        success = self._operating_success(cfg, exact, ws)
 
         scored = []
         for rung in self._plan_ladder(cfg, quality.k):
@@ -395,7 +453,7 @@ class Planner:
             recall = float(recall_at_k(res.ids, exact.ids, quality.k))
             mean_cand = float(jnp.mean(res.n_candidates))
             scored.append((rung, recall, mean_cand, self._plan_cost(cfg, rung, mean_cand)))
-        return scored, float(success)
+        return scored, success
 
     def _select(self, scored, quality: QualitySpec):
         """Pick the winning rung from a calibrated ``scored`` list: cheapest
@@ -443,12 +501,122 @@ class Planner:
             predicted_recall=recall,
             predicted_success=success,
             expected_candidates=mean_cand,
+            provenance="calibrated",
+        )
+
+    # -- empirical prior (offline tuning table) ------------------------------
+    def _config_from_prior(
+        self, n: int, d: int, quality: QualitySpec, family: str, M_eff: int,
+        space: BoundedSpace,
+    ) -> "IndexConfig | None":
+        """Build geometry from the tuning table's nearest-profile frontier:
+        the cheapest entry meeting the recall target. None (→ run the
+        theory inversion) when there is no table, no in-tolerance bucket,
+        or the scanned grid never reached the target on this profile."""
+        if self.table is None:
+            return None
+        # family="auto" must consider every family's bucket: the nearest
+        # bucket alone may be a family whose frontier never reached the
+        # goal while another family's did.
+        candidates = ("theta", "l2") if family == "auto" else (family,)
+        goal = max(quality.recall_target, 1.0 - quality.fail_prob)
+        entry = None
+        for fam in candidates:
+            bucket = self.table.nearest_bucket(fam, n, d, self.profile_skew)
+            if bucket is None:
+                continue
+            e = self.table.best_entry(bucket, goal)
+            if e is None:
+                continue
+            if entry is None or (e["cost"], e["trial_id"]) < (
+                entry["cost"], entry["trial_id"]
+            ):
+                entry = e
+        if entry is None:
+            return None
+        return IndexConfig(
+            d=d, M=M_eff, K=entry["K"], L=entry["L"], family=entry["family"],
+            W=float(entry["W"]), max_candidates=entry["window"], space=space,
+        )
+
+    def _entry_matches_config(self, entry: dict, cfg: IndexConfig) -> bool:
+        """A frontier entry's execution plan only transfers to an index
+        whose BUILT geometry matches the scanned trial's."""
+        if entry["family"] != cfg.family or entry["K"] != cfg.K or entry["L"] != cfg.L:
+            return False
+        if cfg.family == "l2" and not math.isclose(
+            float(entry["W"]), cfg.W, rel_tol=1e-6
+        ):
+            return False
+        if entry["window"] > cfg.max_candidates:
+            return False
+        if entry["n_probes"] > 1 and entry["n_probes"] > n_flip_subsets(
+            cfg.K, entry["max_flips"]
+        ):
+            return False
+        return True
+
+    def _plan_from_prior(self, index, quality: QualitySpec) -> "PlannedSpec | None":
+        """Resolve the execution plan from the tuning table: nearest-profile
+        frontier entry meeting the target, confirmed by ONE probe of the
+        real query path on the calibration sample (instead of the full
+        ladder). None → caller falls back to full calibration. The
+        confirmation is what keeps the 2 pt adherence bar honest when the
+        prior's profile only approximately matches this index."""
+        if self.table is None:
+            return None
+        from repro.distance import recall_at_k
+
+        cfg = index.config
+        bucket = self.table.nearest_bucket(
+            cfg.family, index.n, cfg.d, self.profile_skew
+        )
+        if bucket is None:
+            return None
+        candidates = [
+            e for e in bucket["entries"]
+            if e["recall"] >= quality.recall_target - 1e-9
+            and self._entry_matches_config(e, cfg)
+        ]
+        if not candidates:
+            return None
+        entry = min(candidates, key=lambda e: (e["cost"], e["trial_id"]))
+        rung = PlannedSpec(
+            k=quality.k,
+            mode="multiprobe" if entry["n_probes"] > 1 else "probe",
+            n_probes=entry["n_probes"] if entry["n_probes"] > 1 else 1,
+            max_flips=entry["max_flips"] if entry["n_probes"] > 1 else 0,
+            max_candidates=entry["window"],
+        )
+        qs, ws, exact = self._calibration_sample(index, quality)
+        res = index.query(qs, ws, rung)
+        recall = float(recall_at_k(res.ids, exact.ids, quality.k))
+        if recall < quality.recall_target - self.confirm_slack:
+            return None  # prior overpromised on THIS index — calibrate fully
+        mean_cand = float(jnp.mean(res.n_candidates))
+        if quality.latency_budget_ms is not None and mean_cand > (
+            quality.latency_budget_ms * self.candidates_per_ms
+        ):
+            return None  # budget-infeasible prior: let _select arbitrate
+        return dataclasses.replace(
+            rung,
+            predicted_recall=recall,
+            predicted_success=self._operating_success(cfg, exact, ws),
+            expected_candidates=mean_cand,
+            provenance="prior",
         )
 
     def plan_query(self, index, quality: QualitySpec) -> PlannedSpec:
-        """Calibrate the plan ladder on a data sample; return the cheapest
-        plan meeting ``quality.recall_target`` (best-effort + warning when
-        none does). ``index`` is a built ``repro.api.Index``."""
+        """Resolve the execution plan for ``quality`` on ``index`` (a built
+        ``repro.api.Index``). With a tuning-table prior whose profile covers
+        this index, a single confirmation probe replaces the calibration
+        ladder (plan stamped ``provenance="prior"``); otherwise calibrate
+        every ladder rung and return the cheapest plan meeting
+        ``quality.recall_target`` (best-effort + warning when none does;
+        ``provenance="calibrated"``)."""
+        planned = self._plan_from_prior(index, quality)
+        if planned is not None:
+            return planned
         scored, success = self._calibrate(index, quality)
         return self._stamp(self._select(scored, quality), success)
 
@@ -463,7 +631,9 @@ class Planner:
         so a serving tier stepping down the ladder under load can label each
         degraded response with the recall it gave up instead of degrading
         silently. Deterministic given (index, ``quality.seed``) — one
-        calibration pass scores every rung."""
+        calibration pass scores every rung. Ladders always calibrate in
+        full (every rung needs its own measured recall label), so the
+        tuning-table prior never shortcuts this path."""
         scored, success = self._calibrate(index, quality)
         chosen = self._select(scored, quality)
         cheaper = sorted((s for s in scored if s[3] < chosen[3]), key=lambda s: -s[3])

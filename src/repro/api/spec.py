@@ -179,6 +179,13 @@ class PlannedSpec:
         calibrated operating radius.
       expected_candidates: mean unique candidates examined per query on the
         calibration sample — the sublinearity/latency proxy.
+      provenance: how the plan was resolved — "calibrated" (the full
+        empirical ladder ran on this index) or "prior" (interpolated from
+        an offline :mod:`repro.tuner` Pareto table and accepted after a
+        single confirmation probe). Prior-based plans trade the 13–24 s
+        calibration pass for a cheap confirmation; the stamp keeps that
+        trade auditable per query (``Index.explain``) and per shipped
+        artifact (the persistence manifest).
     """
 
     k: int
@@ -189,11 +196,17 @@ class PlannedSpec:
     predicted_recall: float = float("nan")
     predicted_success: float = float("nan")
     expected_candidates: float = float("nan")
+    provenance: str = "calibrated"
 
     def __post_init__(self):
         if self.mode not in ("probe", "multiprobe"):
             raise ValueError(
                 f"PlannedSpec.mode must be 'probe' or 'multiprobe', got {self.mode!r}"
+            )
+        if self.provenance not in ("calibrated", "prior"):
+            raise ValueError(
+                f"PlannedSpec.provenance must be 'calibrated' or 'prior', "
+                f"got {self.provenance!r}"
             )
         for field in ("k", "n_probes", "max_candidates"):
             v = getattr(self, field)

@@ -1,0 +1,53 @@
+"""repro.tuner — the offline autotuner (distributed Pareto parameter scan).
+
+Per-build planner calibration costs 13–24 s per plan (BENCH_planner
+``plan_build_s``); at fleet scale, where thousands of tenant indexes get
+(re)planned, that bill is paid over and over for the SAME answer. This
+subsystem moves the search offline:
+
+  1. :mod:`repro.tuner.space` — declare the scan: the five ALSH knobs
+     (family × K × L × W × probes × window) crossed with data profiles
+     (n / d / weight skew, synthetic or sampled-real rows). Trials are
+     content-addressed and seeded from their own ids.
+  2. :mod:`repro.tuner.scan` — execute it: worker-process fan-out, each
+     trial measuring held-out recall@k, candidate fraction, and query cost
+     through the REAL engine path, persisted incrementally to a crash-safe
+     JSONL store (resume skips completed ids; reruns are bit-identical).
+  3. :mod:`repro.tuner.pareto` — reduce it: per-(family, profile)
+     recall/cost/memory Pareto frontiers, serialized as the versioned
+     ``tuning_table.json`` artifact.
+  4. ``repro.api.planner.Planner(table=...)`` — consume it: planning
+     interpolates the nearest-profile frontier entry, confirms it with a
+     single probe instead of the full calibration ladder, and stamps the
+     resolved plan ``provenance="prior"``; profiles outside every bucket
+     fall back to today's calibrated path bit-identically.
+
+CLI: ``python -m repro.launch.tune`` (scan + table in one command, resumable).
+"""
+
+from repro.tuner.pareto import TuningTable, build_table, pareto_front
+from repro.tuner.scan import TrialStore, run_scan, run_trial, scan_is_complete
+from repro.tuner.space import (
+    DataProfile,
+    ScanSpace,
+    TrialSpec,
+    grid,
+    log_range,
+    seeded_choice,
+)
+
+__all__ = [
+    "DataProfile",
+    "ScanSpace",
+    "TrialSpec",
+    "grid",
+    "log_range",
+    "seeded_choice",
+    "TrialStore",
+    "run_scan",
+    "run_trial",
+    "scan_is_complete",
+    "TuningTable",
+    "build_table",
+    "pareto_front",
+]

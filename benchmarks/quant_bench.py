@@ -1,0 +1,89 @@
+"""Quantized table tier benchmarks: memory ratio, latency, recall delta per
+codec and screening factor (benchmarks/run.py snapshots the rows into
+BENCH_quant.json).
+
+What the numbers validate:
+
+  * the int8 table is ≥3x smaller than f32 (bf16 exactly 2x) — the tier's
+    reason to exist; candidate generation hashes RAW rows before encoding,
+    so compression costs recall ONLY through rerank precision;
+  * recall delta vs the f32 build stays within a point at the calibrated
+    screening factors (α ∈ {0, 2, 4}) — the proxy screen keeps k·α
+    survivors for the exact decoded rerank, so the final ranking is f32
+    arithmetic over quantized rows either way;
+  * screened query latency vs the unscreened quantized query and vs the
+    f32 baseline — the screen reads 1–2 bytes/value instead of 4, then
+    reranks a fraction of the candidate set.
+
+Sizes default small enough for the CI smoke (``--only quant``); the memory
+ratios and recall deltas, not the absolute times, are the regression signal.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.api import BoundedSpace, Index, IndexConfig, QuerySpec
+from repro.distance import recall_at_k
+
+N = int(os.environ.get("QUANT_BENCH_N", 20_000))
+D = 16
+M = 32
+B = 64
+K_NN = 10
+ALPHAS = (2.0, 4.0)
+
+
+def _cfg(storage: str) -> IndexConfig:
+    return IndexConfig(
+        d=D, M=M, K=10, L=32, family="theta", max_candidates=256,
+        space=BoundedSpace(0.0, 1.0, float(M)), storage=storage,
+    )
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(jax.random.fold_in(key, 1), (N, D))
+    q = jax.random.uniform(jax.random.fold_in(key, 2), (B, D))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (B, D))) + 0.2
+
+    bkey = jax.random.fold_in(key, 4)
+    rows = []
+
+    f32_ix = Index.build(bkey, data, _cfg("f32"))
+    oracle = f32_ix.query(q, w, QuerySpec(k=K_NN, mode="exact"))
+    spec = QuerySpec(k=K_NN)
+    base_us = time_fn(lambda: f32_ix.query(q, w, spec)) / B
+    base_res = f32_ix.query(q, w, spec)
+    base_rec = recall_at_k(base_res.ids, oracle.ids, K_NN)
+    rows.append(row("quant/f32/query", base_us,
+                    f"recall@{K_NN}={base_rec:.3f} "
+                    f"table_mb={f32_ix.table_bytes / 2**20:.2f}"))
+
+    for storage in ("bf16", "int8"):
+        ix = Index.build(bkey, data, _cfg(storage))
+        ratio = f32_ix.table_bytes / ix.table_bytes
+        res = ix.query(q, w, spec)
+        us = time_fn(lambda ix=ix: ix.query(q, w, spec)) / B
+        rec = recall_at_k(res.ids, oracle.ids, K_NN)
+        rows.append(row(
+            f"quant/{storage}/query", us,
+            f"recall@{K_NN}={rec:.3f} delta={rec - base_rec:+.3f} "
+            f"mem_ratio={ratio:.2f}x"))
+        for alpha in ALPHAS:
+            sspec = QuerySpec(k=K_NN, screen_alpha=alpha)
+            sres = ix.query(q, w, sspec)
+            sus = time_fn(lambda ix=ix, sspec=sspec: ix.query(q, w, sspec)) / B
+            srec = recall_at_k(sres.ids, oracle.ids, K_NN)
+            rep = ix.explain(q[:8], w[:8], sspec)
+            import numpy as np
+            rows.append(row(
+                f"quant/{storage}/screen_a{alpha:g}", sus,
+                f"recall@{K_NN}={srec:.3f} delta={srec - base_rec:+.3f} "
+                f"reranked~{float(np.mean(rep.rows_reranked)):.0f}/"
+                f"{float(np.mean(rep.rows_screened)):.0f}"))
+    return rows

@@ -36,8 +36,12 @@ MODULES = [
     "update_bench",  # mutable lifecycle: insert/query-vs-fill/compact
     "serving_bench",  # broker: traces, degradation recall, chaos coverage
     "tuner_bench",  # offline autotuner: prior-vs-calibrated speedup + adherence
+    "quant_bench",  # quantized tier: memory ratio, latency, recall delta
     "roofline",  # dry-run roofline summaries (if results exist)
 ]
+
+# convenience aliases accepted by --only/--skip
+ALIASES = {"quant": "quant_bench"}
 
 # benchmark modules whose rows also snapshot to a machine-readable artifact
 SNAPSHOTS = {
@@ -46,6 +50,7 @@ SNAPSHOTS = {
     "planner_bench": "BENCH_planner.json",
     "serving_bench": "BENCH_serving.json",
     "tuner_bench": "BENCH_tuner.json",
+    "quant_bench": "BENCH_quant.json",
 }
 
 
@@ -54,6 +59,8 @@ def select_modules(only: str | None, skip: str | None) -> list:
     filter silently running the full suite costs minutes)."""
     mods = only.split(",") if only else list(MODULES)
     skipped = skip.split(",") if skip else []
+    mods = [ALIASES.get(m, m) for m in mods]
+    skipped = [ALIASES.get(m, m) for m in skipped]
     unknown = [m for m in [*mods, *skipped] if m not in MODULES]
     if unknown:
         raise SystemExit(

@@ -304,6 +304,16 @@ class Index:
         return self.state.n + self.delta.capacity
 
     @property
+    def table_bytes(self) -> int:
+        """Resident bytes of the row tables (main payload + delta payload +
+        decode scales) — the memory the storage codec is compressing. Hash
+        tables/permutations are excluded: they are storage-invariant."""
+        total = self.state.data.nbytes + self.delta.data.nbytes
+        if self.state.scales is not None:
+            total += self.state.scales.nbytes
+        return int(total)
+
+    @property
     def delta_fill(self) -> int:
         """Delta slots used (device sync — don't poll inside jit)."""
         return int(self.delta.fill)
@@ -433,6 +443,7 @@ class Index:
             n_probes=qspec.n_probes,
             max_flips=qspec.max_flips,
             impl=qspec.impl,
+            screen_alpha=qspec.screen_alpha,
         )
 
     def explain(self, queries: jax.Array, weights: jax.Array, spec=QuerySpec()):
@@ -484,6 +495,29 @@ class Index:
         p1 = jnp.clip(p1, 1e-12, 1.0 - 1e-12)
         success = jnp.where(valid1, 1.0 - (1.0 - p1**cfg.K) ** cfg.L, 0.0)
 
+        # storage-tier accounting: what the fused tail actually moved.
+        # Screening gathers every unique candidate once at the ENCODED row
+        # width; the exact rerank then re-gathers only the survivors (all
+        # candidates when the screen is statically off).
+        from repro import quant
+
+        n_cand = np.asarray(res.n_candidates, dtype=np.int64)
+        row_bytes = self.state.data.dtype.itemsize * cfg.d
+        screening = (
+            qspec.mode != "exact" and self.state.data.dtype != jnp.float32
+        )
+        if screening:
+            p_slots = qspec.n_probes if qspec.mode == "multiprobe" else 1
+            n_slots = cfg.L * p_slots * cfg.max_candidates + (
+                self.delta.capacity if self.mutable else 0
+            )
+            keep = quant.screen_keep(qspec.k, qspec.screen_alpha, n_slots)
+        else:
+            keep = 0
+        rows_screened = n_cand if keep else np.zeros_like(n_cand)
+        rows_reranked = np.minimum(n_cand, keep) if keep else n_cand
+        bytes_gathered = (rows_screened + rows_reranked) * row_bytes
+
         return QueryReport(
             spec=planned if planned is not None else qspec,
             quality=quality,
@@ -496,6 +530,11 @@ class Index:
             plan_build_s=(
                 self.plan_times.get(quality) if quality is not None else None
             ),
+            storage=self.config.storage,
+            rows_screened=rows_screened,
+            rows_reranked=rows_reranked,
+            bytes_gathered=bytes_gathered,
+            table_bytes=self.table_bytes,
         )
 
     # -- mutation (functional: every method returns a new Index) ------------
@@ -579,8 +618,22 @@ class Index:
             jnp.arange(cfg.L, dtype=jnp.int32)[:, None], perm
         ].set(state.sorted_keys)
 
+        # survivors are decoded to f32 and RE-ENCODED as a fresh segment —
+        # int8 scales are refit to the surviving rows (the delta rows were
+        # saturating against the OLD segment's range; the new sealed segment
+        # gets its own). f32 storage: decode and encode are both the
+        # identity, bit-identical to concatenating the raw arrays.
+        from repro import quant
+        from repro.core.index import get_codec
+
         data = jnp.concatenate(
-            [state.data[main_keep], self.delta.data[delta_keep].astype(state.data.dtype)]
+            [
+                quant.decode_table(state.data[main_keep], state.scales),
+                quant.decode_table(
+                    self.delta.data[delta_keep].astype(state.data.dtype),
+                    state.scales,
+                ),
+            ]
         )
         levels = jnp.concatenate(
             [state.levels[main_keep], self.delta.levels[delta_keep]]
@@ -595,13 +648,15 @@ class Index:
         sorted_keys = jnp.take_along_axis(keys_ln, perm_new, axis=1)
         pad = jnp.full((cfg.L, cfg.max_candidates), n_new, dtype=jnp.int32)
         perm_new = jnp.concatenate([perm_new, pad], axis=1)
+        payload, scales = get_codec(cfg.storage).encode(data)
         new_state = ALSHIndex(
             tables=state.tables,
             mixers=state.mixers,
             sorted_keys=sorted_keys,
             perm=perm_new,
-            data=data,
+            data=payload,
             levels=levels,
+            scales=scales,
         )
         return Index(
             state=new_state,
@@ -667,6 +722,17 @@ class Index:
         """
         from repro.core.distributed import build_local_indexes, make_sharded_delta
 
+        if self.config.storage != "f32":
+            raise ValueError(
+                f"Index.shard() supports storage='f32' only (this index was "
+                f"built with storage={self.config.storage!r}) — the mesh path "
+                f"re-discretizes raw rows per shard, and per-shard re-encoding "
+                f"would drift the quantization grid away from the single-host "
+                f"index it must answer bit-identically to. Use the host-side "
+                f"serving shard set (repro.serving.chaos.ShardSet), which "
+                f"re-encodes each shard self-consistently, or build with "
+                f"storage='f32' before sharding"
+            )
         S = mesh.devices.size
         if self.mutable and self.update.delta_capacity % S:
             raise ValueError(

@@ -36,6 +36,14 @@ records which table justified it (format/version/space_id/trial counts) —
 a shipped index is auditable back to the scan that tuned it. Pure JSON, no
 payload change; pre-v4 directories load with ``tuning=None``.
 
+Format version 5 adds QUANTIZED storage: the config carries ``storage``
+(the :mod:`repro.quant` row codec), the manifest's ``codec`` entry records
+the payload dtype/bytes-per-value, and scaled codecs (int8) persist the
+``(d,)`` decode-scale leaf inside the state payload. ``load_index``
+cross-checks codec against the restored payload dtype and the scales leaf
+shape, so a torn overwrite mixing codecs is a named error, never silently
+garbled distances. Pre-v5 directories load as ``storage="f32"``.
+
 All entry points accept ``str`` or ``pathlib.Path`` directories.
 """
 
@@ -53,10 +61,11 @@ from repro.api.spec import PlannedSpec, QualitySpec, UpdateSpec
 from repro.core.hash_families import PrefixTables
 from repro.core.index import ALSHIndex, DeltaSegment, IndexConfig
 from repro.core.transforms import BoundedSpace
+from repro.quant import get_codec
 
 FORMAT = "repro.api.index"
-VERSION = 4
-_READABLE_VERSIONS = (1, 2, 3, 4)
+VERSION = 5
+_READABLE_VERSIONS = (1, 2, 3, 4, 5)
 _META = "index.json"
 
 
@@ -70,6 +79,7 @@ def config_to_dict(cfg: IndexConfig) -> dict:
         "W": cfg.W,
         "max_candidates": cfg.max_candidates,
         "space": {"lo": cfg.space.lo, "hi": cfg.space.hi, "t": cfg.space.t},
+        "storage": cfg.storage,
     }
 
 
@@ -84,6 +94,7 @@ def config_from_dict(d: dict) -> IndexConfig:
         W=d["W"],
         max_candidates=d["max_candidates"],
         space=BoundedSpace(space["lo"], space["hi"], space["t"]),
+        storage=d.get("storage", "f32"),  # pre-v5 directories: full precision
     )
 
 
@@ -117,8 +128,11 @@ def plans_from_list(entries: list) -> dict:
     }
 
 
-def _state_template() -> ALSHIndex:
-    """Structure-only ALSHIndex (leaf values/shapes come from the payload)."""
+def _state_template(storage: str = "f32") -> ALSHIndex:
+    """Structure-only ALSHIndex (leaf values/shapes come from the payload).
+    Scaled codecs (int8) add the decode-scale leaf to the tree structure —
+    the payload of a scaled save carries it, and the restore template must
+    match leaf-for-leaf."""
     z = jnp.zeros((), jnp.float32)
     return ALSHIndex(
         tables=PrefixTables(folded=z, offsets=z),
@@ -127,6 +141,7 @@ def _state_template() -> ALSHIndex:
         perm=z,
         data=z,
         levels=z,
+        scales=z if get_codec(storage).scaled else None,
     )
 
 
@@ -172,11 +187,18 @@ def save_index(
         },
     )
     fill = int(delta.fill)
+    codec = get_codec(cfg.storage)
     meta = {
         "format": FORMAT,
         "version": VERSION,
         "config": config_to_dict(cfg),
         "update": update_to_dict(update),
+        "codec": {
+            "storage": codec.name,
+            "dtype": str(codec.dtype),
+            "bytes_per_value": codec.bytes_per_value,
+            "scaled": codec.scaled,
+        },
         "segments": [
             {"kind": "main", "rows": int(state.data.shape[0]), "sealed": True},
             {
@@ -239,8 +261,12 @@ def load_index(
         raise FileNotFoundError(
             f"no committed checkpoint step under {directory!r} (aborted save?)"
         )
-    # template leaves are placeholders — shapes/dtypes come from the payload
-    template = {"build_key": jnp.zeros((), jnp.uint32), "state": _state_template()}
+    # template leaves are placeholders — shapes/dtypes come from the payload;
+    # only the STRUCTURE (incl. the scaled codec's scales leaf) must match
+    template = {
+        "build_key": jnp.zeros((), jnp.uint32),
+        "state": _state_template(cfg.storage),
+    }
     if version >= 2:
         template["delta"] = _delta_template()
         template["tombstones"] = jnp.zeros((), bool)
@@ -270,9 +296,40 @@ def _check_consistent(
     meta_path: str,
 ) -> None:
     """Reject directories whose meta and array payload disagree (e.g. a torn
-    overwrite of an existing directory with a different geometry)."""
+    overwrite of an existing directory with a different geometry or a
+    different storage codec)."""
     n = state.data.shape[0]
     cap = delta.capacity
+    codec = get_codec(cfg.storage)
+    for leaf, dtype in (("data", state.data.dtype), ("delta.data", delta.data.dtype)):
+        if jnp.dtype(dtype) != codec.dtype:
+            raise ValueError(
+                f"{meta_path} declares storage={cfg.storage!r} (payload dtype "
+                f"{codec.dtype}) but the stored {leaf} array is {dtype} — the "
+                f"directory mixes codecs (torn overwrite or hand-edited "
+                f"manifest); re-save the index"
+            )
+    if codec.scaled:
+        if state.scales is None or tuple(state.scales.shape) != (cfg.d,):
+            got = None if state.scales is None else tuple(state.scales.shape)
+            raise ValueError(
+                f"{meta_path} declares the scaled codec {cfg.storage!r} but "
+                f"the stored decode scales are {got} (need ({cfg.d},)) — "
+                f"the scale leaf is missing or truncated; re-save the index"
+            )
+    elif state.scales is not None:
+        raise ValueError(
+            f"{meta_path} declares the unscaled codec {cfg.storage!r} but the "
+            f"payload carries a decode-scale leaf — the directory mixes "
+            f"codecs; re-save the index"
+        )
+    mcodec = meta.get("codec")
+    if mcodec is not None and mcodec.get("storage") != cfg.storage:
+        raise ValueError(
+            f"{meta_path} codec entry says {mcodec.get('storage')!r} but the "
+            f"config says storage={cfg.storage!r} — the manifest is "
+            f"internally inconsistent; re-save the index"
+        )
     want = {
         "tables.folded": ((cfg.n_hashes, cfg.d, cfg.M + 1), state.tables.folded.shape),
         "tables.offsets": ((cfg.n_hashes,), state.tables.offsets.shape),

@@ -115,6 +115,18 @@ class QueryReport:
       plan_build_s: wall seconds the plan resolution cost on THIS process
         (None for mechanism specs and for plans restored from a manifest —
         those were planned elsewhere).
+      storage: the index's row codec ("f32" | "bf16" | "int8") — context
+        for the byte accounting below.
+      rows_screened: (b,) candidates ranked by the quantized proxy screen
+        (0 everywhere when the screen was statically off: f32 storage,
+        exact mode, or screen_alpha=0).
+      rows_reranked: (b,) candidates the exact f32 rerank decoded — the
+        screen survivors, or every unique candidate when unscreened.
+      bytes_gathered: (b,) table payload bytes the fused tail gathered
+        (screen + rerank passes, at the ENCODED row width) — the
+        bandwidth the storage codec is saving.
+      table_bytes: resident bytes of the row tables (main + delta payload
+        + scales); compare across codecs for the memory ratio.
     """
 
     spec: object
@@ -126,6 +138,11 @@ class QueryReport:
     n_invalid: np.ndarray
     provenance: str | None = None
     plan_build_s: float | None = None
+    storage: str | None = None
+    rows_screened: np.ndarray | None = None
+    rows_reranked: np.ndarray | None = None
+    bytes_gathered: np.ndarray | None = None
+    table_bytes: int | None = None
 
     def to_dict(self) -> dict:
         """JSON-able summary (arrays reduced to batch means) for logging."""
@@ -138,6 +155,20 @@ class QueryReport:
             "mean_n_candidates": float(np.mean(self.n_candidates)),
             "queries_with_truncation": int(np.sum(self.truncated_tables > 0)),
             "queries_with_invalid_slots": int(np.sum(self.n_invalid > 0)),
+            "storage": self.storage,
+            "mean_rows_screened": (
+                float(np.mean(self.rows_screened))
+                if self.rows_screened is not None else None
+            ),
+            "mean_rows_reranked": (
+                float(np.mean(self.rows_reranked))
+                if self.rows_reranked is not None else None
+            ),
+            "mean_bytes_gathered": (
+                float(np.mean(self.bytes_gathered))
+                if self.bytes_gathered is not None else None
+            ),
+            "table_bytes": self.table_bytes,
         }
 
 
@@ -374,9 +405,20 @@ class Planner:
                 lo = mid + 1
         return lo
 
+    # screening factors the quantized-index ladder cross-products its rungs
+    # with (in addition to every unscreened rung): keep 2k, keep 4k
+    _SCREEN_ALPHAS = (2.0, 4.0)
+
     # -- query-time: empirical calibration ----------------------------------
     def _plan_ladder(self, cfg: IndexConfig, k: int) -> list[PlannedSpec]:
-        """The candidate execution plans, cheapest-intent first."""
+        """The candidate execution plans, cheapest-intent first.
+
+        On an f32-stored index this list is EXACTLY the pre-quantization
+        ladder (every rung screen_alpha=0 — planned f32 queries stay
+        bit-identical). Quantized storage crosses each rung with the
+        ``_SCREEN_ALPHAS`` screening factors, so calibration measures the
+        proxy screen's recall cost on the real query path and α becomes a
+        planner-chosen knob like the window or the probe count."""
         C = cfg.max_candidates
         windows = sorted({max(C >> s, min(C, max(2 * k, 16))) for s in (3, 2, 1, 0)})
         ladder = [
@@ -393,12 +435,31 @@ class Planner:
                             max_flips=max_flips, max_candidates=C,
                         )
                     )
+        if cfg.storage != "f32":
+            ladder += [
+                dataclasses.replace(rung, screen_alpha=alpha)
+                for rung in list(ladder)
+                for alpha in self._SCREEN_ALPHAS
+            ]
         return ladder
 
     def _plan_cost(self, cfg: IndexConfig, plan: PlannedSpec, mean_cand: float) -> float:
-        """Deterministic cost model: reranked candidates + charged probe slots."""
+        """Deterministic cost model: reranked candidates + charged probe
+        slots. A screened plan splits the rerank term into the proxy pass
+        (every candidate at the compressed byte ratio — screening reads
+        encoded rows, never decodes) plus the exact rerank of the
+        ``ceil(k·α)`` survivors; that is what lets a screened rung undercut
+        its unscreened twin once the candidate pool is large."""
+        from repro.quant import bytes_per_value
+
         slots = cfg.L * plan.n_probes * plan.max_candidates
-        return mean_cand + self.slot_cost * slots
+        if plan.screen_alpha:
+            keep = max(plan.k, math.ceil(plan.k * plan.screen_alpha))
+            ratio = bytes_per_value(cfg.storage) / 4.0
+            rerank = mean_cand * ratio + min(mean_cand, float(keep))
+        else:
+            rerank = mean_cand
+        return rerank + self.slot_cost * slots
 
     def _calibration_sample(self, index, quality: QualitySpec):
         """The shared deterministic calibration setup: jittered-data-row
@@ -414,6 +475,14 @@ class Planner:
                 "index.plan(quality), then query inside jit; the memoized "
                 "plan crosses the jit boundary with the index"
             )
+        if data.dtype != jnp.float32:
+            # quantized storage: sample from the DECODED rows (oracle path —
+            # one-shot at plan time, never resident). Jittered decoded rows
+            # sit within one quantization step of the raw build rows, so the
+            # calibration stays in-distribution
+            from repro import quant
+
+            data = quant.decode_table(data, index.state.scales)
         cfg = index.config
         key = _prng(index.build_key, quality.seed)
         qs, ws = self._sample(

@@ -53,6 +53,13 @@ class QuerySpec:
         benchmarks. Exact mode never hashes and multiprobe always uses the
         production dispatch, so a non-"auto" impl is rejected there rather
         than silently ignored.
+      screen_alpha: quantized-storage screening factor α. 0.0 (default)
+        disables the proxy screen; α >= 1 keeps the top ``ceil(k·α)``
+        proxy-ranked candidates for the exact f32 rerank. Only meaningful
+        on an index built with ``storage != "f32"`` — the engine statically
+        ignores it everywhere else (f32 storage and exact mode stay
+        bit-identical to an unscreened query). Values in (0, 1) are
+        rejected: they would screen away guaranteed top-k slots.
     """
 
     k: int = 1
@@ -60,6 +67,7 @@ class QuerySpec:
     n_probes: int = 8
     max_flips: int = 3
     impl: str = "auto"
+    screen_alpha: float = 0.0
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -68,6 +76,11 @@ class QuerySpec:
             )
         if not isinstance(self.k, int) or self.k <= 0:
             raise ValueError(f"QuerySpec.k must be a positive int, got {self.k!r}")
+        if self.screen_alpha != 0.0 and not self.screen_alpha >= 1.0:
+            raise ValueError(
+                f"QuerySpec.screen_alpha must be 0 (screen off) or >= 1.0 "
+                f"(keep ceil(k·α) proxy survivors), got {self.screen_alpha!r}"
+            )
         if self.impl not in IMPLS:
             raise ValueError(
                 f"QuerySpec.impl must be one of {IMPLS}, got {self.impl!r}"
@@ -179,6 +192,10 @@ class PlannedSpec:
         calibrated operating radius.
       expected_candidates: mean unique candidates examined per query on the
         calibration sample — the sublinearity/latency proxy.
+      screen_alpha: quantized-storage screening factor the plan executes
+        with (0.0 on f32-stored indexes — the ladder never proposes a
+        screen there, keeping planned f32 queries bit-identical to the
+        unscreened engine).
       provenance: how the plan was resolved — "calibrated" (the full
         empirical ladder ran on this index) or "prior" (interpolated from
         an offline :mod:`repro.tuner` Pareto table and accepted after a
@@ -196,12 +213,18 @@ class PlannedSpec:
     predicted_recall: float = float("nan")
     predicted_success: float = float("nan")
     expected_candidates: float = float("nan")
+    screen_alpha: float = 0.0
     provenance: str = "calibrated"
 
     def __post_init__(self):
         if self.mode not in ("probe", "multiprobe"):
             raise ValueError(
                 f"PlannedSpec.mode must be 'probe' or 'multiprobe', got {self.mode!r}"
+            )
+        if self.screen_alpha != 0.0 and not self.screen_alpha >= 1.0:
+            raise ValueError(
+                f"PlannedSpec.screen_alpha must be 0 (screen off) or >= 1.0, "
+                f"got {self.screen_alpha!r}"
             )
         if self.provenance not in ("calibrated", "prior"):
             raise ValueError(
@@ -224,9 +247,9 @@ class PlannedSpec:
         if self.mode == "multiprobe":
             return QuerySpec(
                 k=self.k, mode="multiprobe", n_probes=self.n_probes,
-                max_flips=self.max_flips,
+                max_flips=self.max_flips, screen_alpha=self.screen_alpha,
             )
-        return QuerySpec(k=self.k, mode="probe")
+        return QuerySpec(k=self.k, mode="probe", screen_alpha=self.screen_alpha)
 
     def effective_config(self, cfg):
         """``cfg`` with this plan's probe window applied (never wider than

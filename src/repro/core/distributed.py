@@ -133,6 +133,7 @@ def local_index_specs(mesh: Mesh) -> ALSHIndex:
         perm=P(None, axes),  # (L, n_local + C)
         data=P(axes, None),  # (n_local, d)
         levels=P(axes, None),  # (n_local, d)
+        scales=None,  # f32 storage only (Index.shard gates quantized indexes)
     )
 
 

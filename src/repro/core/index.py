@@ -41,6 +41,7 @@ from repro.core import hash_families as hf
 from repro.core import transforms
 from repro.core.families import HashFamily, get_family
 from repro.core.theory import IndexPlan
+from repro.quant import STORAGE_KINDS, get_codec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,8 +50,11 @@ class IndexConfig:
 
     ``family`` names a registered :mod:`repro.core.families` strategy (a
     ``HashFamily`` instance is also accepted and normalized to its name, so
-    the config stays hashable/serializable). Construction validates the
-    geometry and raises ``ValueError`` naming the offending field — bad
+    the config stays hashable/serializable). ``storage`` names a
+    :mod:`repro.quant` row codec — how sealed/delta table rows are stored
+    on device ("f32" default, "bf16", "int8"); hashing always sees the raw
+    rows, so candidate generation is codec-invariant. Construction validates
+    the geometry and raises ``ValueError`` naming the offending field — bad
     configs never reach trace time.
     """
 
@@ -62,6 +66,7 @@ class IndexConfig:
     W: float = 4.0
     max_candidates: int = 64  # per-table probe budget C
     space: transforms.BoundedSpace = transforms.BoundedSpace(0.0, 1.0, 32.0)
+    storage: str = "f32"  # repro.quant row codec for table segments
 
     def __post_init__(self):
         if isinstance(self.family, HashFamily):
@@ -72,6 +77,11 @@ class IndexConfig:
                 raise ValueError(
                     f"IndexConfig.{field} must be a positive int, got {v!r}"
                 )
+        if self.storage not in STORAGE_KINDS:
+            raise ValueError(
+                f"IndexConfig.storage must be one of {STORAGE_KINDS}, got "
+                f"{self.storage!r}"
+            )
         if self.space.M > self.M:
             raise ValueError(
                 f"IndexConfig.space discretizes to {self.space.M} levels but "
@@ -111,12 +121,21 @@ class ALSHIndex:
     mixers: jax.Array  # (L, K) int32 key combiners
     sorted_keys: jax.Array  # (L, n) int32 — per-table sorted bucket keys
     perm: jax.Array  # (L, n + C) int32 — point ids by key order, padded with n
-    data: jax.Array  # (n, d) float — original points (exact re-rank)
+    data: jax.Array  # (n, d) ENCODED rows, cfg.storage dtype (f32 default)
     levels: jax.Array  # (n, d) int32 — lattice points (hash oracle/debug)
+    scales: jax.Array | None = None  # (d,) f32 decode scales (int8 storage only)
 
     def tree_flatten(self):
         return (
-            (self.tables, self.mixers, self.sorted_keys, self.perm, self.data, self.levels),
+            (
+                self.tables,
+                self.mixers,
+                self.sorted_keys,
+                self.perm,
+                self.data,
+                self.levels,
+                self.scales,
+            ),
             None,
         )
 
@@ -216,12 +235,16 @@ def delta_insert(
     """
     m = rows.shape[0]
     cap = delta.capacity
-    keys, levels = hash_rows(index, rows, cfg, impl=impl)  # (L, m), (m, d)
+    keys, levels = hash_rows(index, rows, cfg, impl=impl)  # (L, m) (raw rows!)
+    # storage-encode AFTER hashing, under the SEALED segment's scales, so a
+    # delta row decodes identically to a main row (one scale stream covers
+    # both segments in the fused gather)
+    enc = get_codec(cfg.storage).encode_rows(rows, index.scales)
     slots = delta.fill + jnp.arange(m, dtype=jnp.int32)  # (m,)
     ok = slots < cap
     tgt = jnp.where(ok, slots, cap)  # out-of-capacity -> dropped by scatter
     new = DeltaSegment(
-        data=delta.data.at[tgt].set(rows.astype(delta.data.dtype), mode="drop"),
+        data=delta.data.at[tgt].set(enc.astype(delta.data.dtype), mode="drop"),
         levels=delta.levels.at[tgt].set(levels, mode="drop"),
         keys=delta.keys.at[:, tgt].set(keys, mode="drop"),
         fill=jnp.minimum(jnp.asarray(cap, jnp.int32), delta.fill + m),
@@ -348,7 +371,11 @@ def build_index(
 ) -> ALSHIndex:
     """Preprocess the database: hash every point, sort each table by key.
 
-    O(H d n) hashing (the §4.2.3 trick) + L sorts of n keys.
+    O(H d n) hashing (the §4.2.3 trick) + L sorts of n keys. Hashing and
+    discretization always see the RAW rows; the table payload is
+    storage-encoded (``cfg.storage`` codec) as the LAST step, so candidate
+    generation is identical across codecs and only the rerank tail observes
+    the compression. ``f32`` encoding is the identity (same array object).
     """
     k_tab, k_mix = jax.random.split(key)
     tables = hf.make_prefix_tables(k_tab, cfg.lsh_params, dtype=data.dtype)
@@ -363,13 +390,15 @@ def build_index(
     n = data.shape[0]
     pad = jnp.full((cfg.L, cfg.max_candidates), n, dtype=jnp.int32)
     perm = jnp.concatenate([perm, pad], axis=1)  # (L, n + C) — safe window gather
+    payload, scales = get_codec(cfg.storage).encode(data)
     return ALSHIndex(
         tables=tables,
         mixers=mixers,
         sorted_keys=sorted_keys,
         perm=perm,
-        data=data,
+        data=payload,
         levels=levels,
+        scales=scales,
     )
 
 

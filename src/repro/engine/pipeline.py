@@ -114,15 +114,28 @@ def execute(
     weights: jax.Array,
     k: int,
     n_valid: int,
+    scales: jax.Array | None = None,
+    screen_alpha: float = 0.0,
 ) -> QueryResult:
-    """The shared tail: merge source blocks → dedupe → fused
-    gather/rerank/top-k over the (optionally two-segment) row tables.
+    """The shared tail: merge source blocks → dedupe → [quantized screen →]
+    fused gather/rerank/top-k over the (optionally two-segment) row tables.
 
     ``n_valid`` is the total addressable row count (main + delta
     capacity); any id >= n_valid in a block is padding. A single
     ``pre_deduped`` source skips the dedupe sort (its block is already
     ascending-unique) and counts valid entries directly.
+
+    With quantized storage (``main_data`` non-f32) and ``screen_alpha`` > 0
+    a screening stage runs between dedupe and the exact rerank: the SAME
+    fused kernel ranks every candidate by the compressed-domain proxy
+    distance (``quant.proxy_query`` — no decode, the gather moves encoded
+    bytes) and only the top ``ceil(k·α)`` survivors reach the exact f32
+    rerank. ``screen_alpha`` must be trace-static (it sets the survivor
+    shape). α = 0, f32 storage, or a survivor set covering every slot all
+    statically disable the stage — the tail is then exactly the pre-screen
+    program.
     """
+    from repro import quant
     from repro.kernels import ops
 
     blocks = [s.emit(queries, weights) for s in sources]
@@ -131,8 +144,17 @@ def execute(
         n_candidates = jnp.sum(cand < n_valid, axis=1).astype(jnp.int32)
     else:
         cand, n_candidates = _dedupe_candidates(cand, n_valid)
+    keep = quant.screen_keep(k, screen_alpha, cand.shape[1])  # static int
+    if keep:
+        qp, wp = quant.proxy_query(queries, weights, main_data.dtype, scales)
+        _, surv = ops.gather_rerank_topk(
+            main_data, cand, qp, wp, keep, delta=delta_data
+        )
+        # survivors come back -1-padded; remap to the candidate sentinel the
+        # rerank expects (so invalid slots stay invalid, never row 0)
+        cand = jnp.where(surv >= 0, surv, n_valid).astype(jnp.int32)
     dists, ids = ops.gather_rerank_topk(
-        main_data, cand, queries, weights, k, delta=delta_data
+        main_data, cand, queries, weights, k, delta=delta_data, scales=scales
     )
     return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
 
@@ -149,6 +171,7 @@ def dispatch(
     n_probes: int = 8,
     max_flips: int = 3,
     impl: str = "auto",
+    screen_alpha: float = 0.0,
 ) -> QueryResult:
     """One query dispatch for every index view — the single-host facade,
     the legacy ``repro.core`` entry points, and each shard's body inside
@@ -157,17 +180,26 @@ def dispatch(
 
     ``delta``/``tombstones`` are None for an immutable (sealed-only) view;
     ``cfg`` may be None only for mode="exact" (no hashing happens).
-    Trace-compatible: call under jit/shard_map freely, or use the jitted
-    ``query`` wrapper from the host.
+    ``screen_alpha`` > 0 enables the quantized proxy screen of ``execute``
+    (meaningful only for non-f32 storage; the jitted ``query`` wrapper
+    normalizes it away everywhere else). Trace-compatible: call under
+    jit/shard_map freely, or use the jitted ``query`` wrapper from the
+    host.
     """
     n_main = state.n
     cap = delta.capacity if delta is not None else 0
     segmented = tombstones is not None or delta is not None
     if mode == "exact":
         if not segmented:
+            from repro import quant
             from repro.kernels import ops
 
-            dists, ids = ops.wl1_scan_topk(state.data, queries, weights, k)
+            table = (
+                state.data
+                if state.data.dtype == jnp.float32
+                else quant.decode_table(state.data, state.scales)
+            )
+            dists, ids = ops.wl1_scan_topk(table, queries, weights, k)
             n_candidates = jnp.full(queries.shape[0], n_main, jnp.int32)
             return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
         if tombstones is None:
@@ -181,6 +213,7 @@ def dispatch(
             weights,
             k,
             n_valid=n_main + cap,
+            scales=state.scales,
         )
     keys = probe_keys(
         state, queries, weights, cfg,
@@ -195,11 +228,14 @@ def dispatch(
         weights,
         k,
         n_valid=n_main + cap,
+        scales=state.scales,
+        screen_alpha=screen_alpha,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "k", "mode", "n_probes", "max_flips", "impl")
+    jax.jit,
+    static_argnames=("cfg", "k", "mode", "n_probes", "max_flips", "impl", "screen_alpha"),
 )
 def _query_jit(
     state: ALSHIndex,
@@ -213,10 +249,12 @@ def _query_jit(
     n_probes: int,
     max_flips: int,
     impl: str,
+    screen_alpha: float,
 ) -> QueryResult:
     return dispatch(
         state, delta, tombstones, queries, weights, cfg,
         k=k, mode=mode, n_probes=n_probes, max_flips=max_flips, impl=impl,
+        screen_alpha=screen_alpha,
     )
 
 
@@ -232,20 +270,26 @@ def query(
     n_probes: int = 8,
     max_flips: int = 3,
     impl: str = "auto",
+    screen_alpha: float = 0.0,
 ) -> QueryResult:
     """Jitted ``dispatch`` — the one compiled entry point every consumer
     shares. Static args a mode does not read are normalized before the
     compile-key lookup (probe ignores n_probes/max_flips, multiprobe and
-    exact ignore impl, exact ignores cfg entirely), so two calls that trace
-    the same program always reuse one executable — facade or legacy shim
-    alike, whatever defaults their spec happened to carry."""
+    exact ignore impl, exact ignores cfg entirely, and ``screen_alpha``
+    is forced to 0 whenever screening cannot apply: f32-stored tables and
+    exact scans), so two calls that trace the same program always reuse
+    one executable — facade or legacy shim alike, whatever defaults their
+    spec happened to carry."""
     if mode != "multiprobe":
         n_probes, max_flips = 1, 0
     if mode != "probe":
         impl = "auto"
     if mode == "exact":
         cfg = None
+    if mode == "exact" or state.data.dtype == jnp.float32:
+        screen_alpha = 0.0
     return _query_jit(
         state, delta, tombstones, queries, weights, cfg,
         k=k, mode=mode, n_probes=n_probes, max_flips=max_flips, impl=impl,
+        screen_alpha=float(screen_alpha),
     )

@@ -29,6 +29,20 @@ fori_loop over candidate chunks (gather chunk → re-rank → top-k merge) that
 keeps the live set at O(b·chunk·d) and skips all-sentinel chunks — once the
 monolith would spill.
 
+Quantized storage (`scales=` / non-f32 `data` on every entry point, see
+repro.quant): the table payload may be bf16 or symmetric-int8 rows. Every
+schedule gathers the ENCODED row and decodes in-register (widen to f32,
+then `* scales` when the codec stored them) — the DMA stream stays
+byte-bound at the compressed width and no f32 copy of the table is ever
+materialized. The jnp schedules decode per gathered candidate chunk; the
+Pallas path switches to `gather_rerank_topk_pallas_blocked`, which
+additionally coalesces the gather: each grid step prefetches a BLOCK of
+`CBLK` candidate rows as `CBLK` parallel scalar-prefetch streams (batch
+DMA per candidate block instead of one row per step), accumulates their
+partial sums side by side in SMEM, and folds all `CBLK` finished distances
+into the top-k buffer in candidate order — bit-identical insertion order
+to the per-row kernel, several row DMAs in flight instead of one.
+
 Two-segment mode (`delta=` on every entry point): a mutable index re-ranks
 against a sealed (n_main, d) main table PLUS an unsealed (cap, d) delta
 table, with candidate ids addressing their virtual concatenation (id i >=
@@ -53,6 +67,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 BDR = 128  # coordinates per d-chunk (gather DMA granularity)
 KP_LANE = 128  # top-k buffer lane alignment
+CBLK = 8  # candidate rows gathered per grid step by the blocked schedule
 
 
 def _gather_rerank_kernel(ids_ref, row_ref, q_ref, w_ref, outd_ref, outi_ref, acc_ref, *, n: int):
@@ -140,6 +155,150 @@ def _gather_rerank2_kernel(
             outi_ref[...] = jnp.where(put, cid, cur_i)
 
 
+def _make_blocked_kernel(cb: int, n_main: int, n_tot: int, two_seg: bool):
+    """The block-coalesced kernel body: ``cb`` candidate rows per grid step.
+
+    Ref layout (after the scalar-prefetch ids): ``cb`` main-row streams,
+    [``cb`` delta-row streams,] scales, q, w | outd, outi | (1, cb) SMEM
+    accumulator. The per-candidate math, accumulation order over d-chunks,
+    and top-k insertion order (global candidate order jb·cb + c) are all
+    IDENTICAL to the per-row kernels — same buffers, bit for bit — only the
+    DMA schedule changes: cb gather streams are in flight per step instead
+    of one."""
+
+    def kernel(ids_ref, *refs):
+        nrow = cb * (2 if two_seg else 1)
+        rows = refs[:nrow]
+        sc_ref, q_ref, w_ref, outd_ref, outi_ref, acc_ref = refs[nrow:]
+        i = pl.program_id(0)
+        jb = pl.program_id(1)
+        kd = pl.program_id(2)
+        nd = pl.num_programs(2)
+
+        @pl.when((jb == 0) & (kd == 0))
+        def _init_topk():
+            outd_ref[...] = jnp.full_like(outd_ref, jnp.inf)
+            outi_ref[...] = jnp.full_like(outi_ref, -1)
+
+        sc = sc_ref[...]  # (1, BDR) decode scales (exact ones when unscaled)
+        for c in range(cb):
+            row = rows[c][...].astype(jnp.float32) * sc
+            part = jnp.sum(w_ref[...] * jnp.abs(row - q_ref[...]))  # scalar
+            if two_seg:
+                drow = rows[cb + c][...].astype(jnp.float32) * sc
+                dpart = jnp.sum(w_ref[...] * jnp.abs(drow - q_ref[...]))
+                part = jnp.where(ids_ref[i, jb * cb + c] < n_main, part, dpart)
+
+            @pl.when(kd == 0)
+            def _acc_init(c=c, part=part):
+                acc_ref[0, c] = part
+
+            @pl.when(kd != 0)
+            def _acc(c=c, part=part):
+                acc_ref[0, c] += part
+
+        @pl.when(kd == nd - 1)
+        def _merge():
+            for c in range(cb):
+                cid = ids_ref[i, jb * cb + c]
+                dist = acc_ref[0, c]
+                cur_d = outd_ref[...]  # (1, KP)
+                cur_i = outi_ref[...]
+                worst = jnp.max(cur_d)
+                slot = jnp.argmax(cur_d)  # first-occurrence ⇒ +inf slots fill in order
+                lane = jax.lax.broadcasted_iota(jnp.int32, cur_d.shape, 1)
+                put = (lane == slot) & (cid < n_tot) & (dist < worst)
+                outd_ref[...] = jnp.where(put, dist, cur_d)
+                outi_ref[...] = jnp.where(put, cid, cur_i)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cb", "interpret"))
+def gather_rerank_topk_pallas_blocked(
+    data: jax.Array,
+    ids: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+    *,
+    delta: jax.Array | None = None,
+    scales: jax.Array | None = None,
+    cb: int = CBLK,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Block-coalesced Pallas schedule: same contract as
+    ``gather_rerank_topk_pallas`` plus quantized-storage decode.
+
+    The table payload keeps its STORED dtype end to end — the gather DMA
+    moves encoded (bf16/int8) bytes and the kernel decodes in-register
+    (widen + ``* scales``), so a quantized table is read at its compressed
+    width. Each grid step gathers ``cb`` candidate rows as ``cb`` parallel
+    scalar-prefetch streams (batch DMA per candidate block). With f32 data
+    and no scales the result is bit-identical to the per-row kernel (the
+    decode multiplies by exact 1.0 and the insertion order matches)."""
+    n, d = data.shape
+    b, P = ids.shape
+    cap = 0 if delta is None else delta.shape[0]
+    n_tot = n + cap
+    kp = -min(k, P) % KP_LANE + min(k, P)
+    pd = -d % BDR
+    dp = d + pd
+    data_p = jnp.pad(data, ((0, 0), (0, pd)))  # encoded dtype preserved
+    q_p = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, pd)))
+    w_p = jnp.pad(weights.astype(jnp.float32), ((0, 0), (0, pd)))
+    sc = jnp.ones((d,), jnp.float32) if scales is None else scales.astype(jnp.float32)
+    sc_p = jnp.pad(sc.reshape(1, d), ((0, 0), (0, pd)))
+    pc = -P % cb
+    ids_p = jnp.pad(ids.astype(jnp.int32), ((0, 0), (0, pc)), constant_values=n_tot)
+    grid = (b, ids_p.shape[1] // cb, dp // BDR)
+
+    def _row_map(c):
+        return lambda i, jb, kd, ids_ref: (
+            jnp.minimum(ids_ref[i, jb * cb + c], n - 1), kd,
+        )
+
+    row_specs = [pl.BlockSpec((1, BDR), _row_map(c)) for c in range(cb)]
+    sc_spec = pl.BlockSpec((1, BDR), lambda i, jb, kd, ids_ref: (0, kd))
+    qw_spec = pl.BlockSpec((1, BDR), lambda i, jb, kd, ids_ref: (i, kd))
+    out_spec = pl.BlockSpec((1, kp), lambda i, jb, kd, ids_ref: (i, 0))
+    if delta is None:
+        tables = (data_p,) * cb
+        kernel = _make_blocked_kernel(cb, n_main=n, n_tot=n, two_seg=False)
+        in_specs = [*row_specs, sc_spec, qw_spec, qw_spec]
+    else:
+
+        def _delta_map(c):
+            return lambda i, jb, kd, ids_ref: (
+                jnp.clip(ids_ref[i, jb * cb + c] - n, 0, cap - 1), kd,
+            )
+
+        delta_p = jnp.pad(delta.astype(data.dtype), ((0, 0), (0, pd)))
+        delta_specs = [pl.BlockSpec((1, BDR), _delta_map(c)) for c in range(cb)]
+        tables = (data_p,) * cb + (delta_p,) * cb
+        kernel = _make_blocked_kernel(cb, n_main=n, n_tot=n_tot, two_seg=True)
+        in_specs = [*row_specs, *delta_specs, sc_spec, qw_spec, qw_spec]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(out_spec, out_spec),
+        scratch_shapes=[pltpu.SMEM((1, cb), jnp.float32)],
+    )
+    out_d, out_i = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, kp), jnp.float32),
+            jax.ShapeDtypeStruct((b, kp), jnp.int32),
+        ),
+        interpret=interpret,
+    )(ids_p, *tables, sc_p, q_p, w_p)
+    from repro.kernels.ref import _topk_ascending
+
+    return _topk_ascending(out_d, out_i, k)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def gather_rerank_topk_pallas(
     data: jax.Array,
@@ -149,11 +308,22 @@ def gather_rerank_topk_pallas(
     k: int,
     *,
     delta: jax.Array | None = None,
+    scales: jax.Array | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """data (n, d), ids (b, P) int32 (>= n ⇒ invalid), queries/weights (b, d)
     -> ((b, k) ascending dists, (b, k) ids). With ``delta`` (cap, d), ids
-    address the virtual [data; delta] concatenation (never materialized)."""
+    address the virtual [data; delta] concatenation (never materialized).
+
+    Quantized storage (non-f32 ``data`` and/or ``scales``) routes to the
+    block-coalesced schedule, which gathers the encoded rows and decodes
+    in-register; the f32 path below is the pre-quantization program,
+    untouched."""
+    if data.dtype != jnp.float32 or scales is not None:
+        return gather_rerank_topk_pallas_blocked(
+            data, ids, queries, weights, k,
+            delta=delta, scales=scales, interpret=interpret,
+        )
     n, d = data.shape
     b, P = ids.shape
     kp = -min(k, P) % KP_LANE + min(k, P)
@@ -221,6 +391,7 @@ def _gather_rerank_topk_monolith(
     weights: jax.Array,
     k: int,
     delta: jax.Array | None = None,
+    scales: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """One-shot fused tail: same math as the oracle but inside a single jit
     region, so XLA folds gather → re-rank → top-k into one pass with no
@@ -229,8 +400,10 @@ def _gather_rerank_topk_monolith(
     from repro.kernels import ref
 
     if delta is None:
-        return ref.gather_rerank_topk(data, ids, queries, weights, k)
-    return ref.gather_rerank_topk_segmented(data, delta, ids, queries, weights, k)
+        return ref.gather_rerank_topk(data, ids, queries, weights, k, scales=scales)
+    return ref.gather_rerank_topk_segmented(
+        data, delta, ids, queries, weights, k, scales=scales
+    )
 
 
 def gather_rerank_topk_auto(
@@ -240,18 +413,26 @@ def gather_rerank_topk_auto(
     weights: jax.Array,
     k: int,
     delta: jax.Array | None = None,
+    scales: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """CPU production dispatch: pick the fused schedule by static footprint —
     monolithic single-pass when the (b, P, d) working set fits on-chip,
     chunked streaming (skip-capable) when it would spill. The two-segment
     monolith materializes both per-segment gathers plus their select (~3x
-    the single-segment working set), so its budget is scaled to match."""
+    the single-segment working set), so its budget is scaled to match.
+    The footprint model stays at 4 bytes/value for quantized payloads too —
+    both schedules decode the gathered chunk to f32, so the DECODED
+    candidate tensor is what competes for cache."""
     b, P = ids.shape
     d = data.shape[1]
     working_set = b * P * d * 4 * (3 if delta is not None else 1)
     if working_set <= MONOLITH_BYTES:
-        return _gather_rerank_topk_monolith(data, ids, queries, weights, k, delta=delta)
-    return gather_rerank_topk_chunked(data, ids, queries, weights, k, delta=delta)
+        return _gather_rerank_topk_monolith(
+            data, ids, queries, weights, k, delta=delta, scales=scales
+        )
+    return gather_rerank_topk_chunked(
+        data, ids, queries, weights, k, delta=delta, scales=scales
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk"))
@@ -263,6 +444,7 @@ def gather_rerank_topk_chunked(
     k: int,
     chunk: int = 256,
     delta: jax.Array | None = None,
+    scales: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Pure-jnp fused tail (CPU production path): chunked gather → re-rank →
     streaming top-k merge. Never materializes the (b, P, d) tensor.
@@ -271,7 +453,13 @@ def gather_rerank_topk_chunked(
     (a cheap predicate guards the gather + reduction) — with the dedupe
     stage packing unique ids first, the loop does O(#unique) work however
     large the L·C probe budget is. With ``delta``, each chunk gathers from
-    whichever segment owns each id (virtual concatenation, never built)."""
+    whichever segment owns each id (virtual concatenation, never built).
+
+    Quantized payloads stay encoded at rest: the gather moves rows in the
+    STORED dtype and each chunk is decoded (widen + ``* scales``) right
+    before its re-rank, so only (b, chunk, d) f32 values ever exist. For
+    f32 data the decode is an identity cast — bit-identical to gathering
+    from a pre-cast table."""
     n_main, d = data.shape
     cap = 0 if delta is None else delta.shape[0]
     n = n_main + cap
@@ -281,12 +469,19 @@ def gather_rerank_topk_chunked(
     n_chunks = ids_p.shape[1] // chunk
     q = queries.astype(jnp.float32)
     w = weights.astype(jnp.float32)
-    data_f = data.astype(jnp.float32)
-    delta_f = None if delta is None else delta.astype(data.dtype).astype(jnp.float32)
+    # delta rows round through the main table's dtype (same cast every other
+    # schedule applies) so mixed-dtype segments rerank identically
+    delta_e = None if delta is None else delta.astype(data.dtype)
 
-    def gather(cid):  # (b, chunk) ids -> (b, chunk, d) rows
-        if delta_f is None:
-            return data_f[jnp.minimum(cid, n - 1)]
+    def decode(pts):  # (b, chunk, d) stored-dtype rows -> f32 rows
+        pts = pts.astype(jnp.float32)
+        if scales is not None:
+            pts = pts * scales
+        return pts
+
+    def gather(cid):  # (b, chunk) ids -> (b, chunk, d) encoded rows
+        if delta_e is None:
+            return data[jnp.minimum(cid, n - 1)]
 
         # dedupe packs ids ascending, so most chunks live entirely in one
         # segment — branch to a single gather there and pay the two-gather
@@ -295,10 +490,10 @@ def gather_rerank_topk_chunked(
         # row and are masked to +inf downstream), so the specialization
         # cannot change results.
         def main_only(_):
-            return data_f[jnp.minimum(cid, n_main - 1)]
+            return data[jnp.minimum(cid, n_main - 1)]
 
         def delta_only(_):
-            return delta_f[jnp.clip(cid - n_main, 0, cap - 1)]
+            return delta_e[jnp.clip(cid - n_main, 0, cap - 1)]
 
         def mixed(_):
             return jnp.where((cid < n_main)[..., None], main_only(None), delta_only(None))
@@ -317,7 +512,7 @@ def gather_rerank_topk_chunked(
 
         def compute(carry):
             top_d, top_i = carry
-            pts = gather(cid)  # (b, chunk, d)
+            pts = decode(gather(cid))  # (b, chunk, d)
             dists = jnp.sum(w[:, None, :] * jnp.abs(pts - q[:, None, :]), axis=-1)
             dists = jnp.where(valid, dists, jnp.inf)
             cand_d = jnp.concatenate([top_d, dists], axis=1)

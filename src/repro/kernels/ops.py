@@ -102,6 +102,7 @@ def gather_rerank_topk(
     k: int,
     force: str | None = None,
     delta: jax.Array | None = None,
+    scales: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused ALSH probe tail: (n, d) table + (b, P) candidate ids (>= n ⇒
     invalid) -> top-k ((b, k) dists, (b, k) ids) with no materialized
@@ -112,18 +113,32 @@ def gather_rerank_topk(
     concatenation (two-segment mutable index) — every backend gathers from
     whichever segment owns each id instead of building the concatenated
     table; results are bit-identical to the single-table call over
-    ``concat([data, delta])``."""
+    ``concat([data, delta])``.
+
+    ``data``/``delta`` may hold a quantized payload (bf16/int8 — see
+    repro.quant): every backend gathers the ENCODED rows and decodes per
+    candidate (widen to f32, then ``* scales`` when the codec stores them)
+    before the re-rank. f32 payloads with no scales take the exact
+    pre-quantization code paths."""
     mode = force or ("pallas" if _on_tpu() else "auto")
     if mode == "pallas":
-        return _gr.gather_rerank_topk_pallas(data, ids, queries, weights, k, delta=delta)
+        return _gr.gather_rerank_topk_pallas(
+            data, ids, queries, weights, k, delta=delta, scales=scales
+        )
     if mode == "interpret":
         return _gr.gather_rerank_topk_pallas(
-            data, ids, queries, weights, k, delta=delta, interpret=True
+            data, ids, queries, weights, k, delta=delta, scales=scales, interpret=True
         )
     if mode == "auto":
-        return _gr.gather_rerank_topk_auto(data, ids, queries, weights, k, delta=delta)
+        return _gr.gather_rerank_topk_auto(
+            data, ids, queries, weights, k, delta=delta, scales=scales
+        )
     if mode == "chunked":
-        return _gr.gather_rerank_topk_chunked(data, ids, queries, weights, k, delta=delta)
+        return _gr.gather_rerank_topk_chunked(
+            data, ids, queries, weights, k, delta=delta, scales=scales
+        )
     if delta is None:
-        return _ref.gather_rerank_topk(data, ids, queries, weights, k)
-    return _ref.gather_rerank_topk_segmented(data, delta, ids, queries, weights, k)
+        return _ref.gather_rerank_topk(data, ids, queries, weights, k, scales=scales)
+    return _ref.gather_rerank_topk_segmented(
+        data, delta, ids, queries, weights, k, scales=scales
+    )

@@ -81,12 +81,25 @@ def wl1_scan_topk(
     return _topk_ascending(dists, ids, k)
 
 
+def _decode_rows(pts: jax.Array, scales: jax.Array | None) -> jax.Array:
+    """Quantized-storage row decode of a GATHERED candidate tensor: widen to
+    f32, then apply the per-dimension scales when the codec stored them
+    (symmetric int8). f32 rows pass through untouched — the default-storage
+    oracle math is bit-identical to the pre-quantization code."""
+    if pts.dtype != jnp.float32:
+        pts = pts.astype(jnp.float32)
+    if scales is not None:
+        pts = pts * scales
+    return pts
+
+
 def gather_rerank_topk(
     data: jax.Array,
     ids: jax.Array,
     queries: jax.Array,
     weights: jax.Array,
     k: int,
+    scales: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused candidate-tail oracle: gather + exact d_w^l1 re-rank + top-k.
 
@@ -97,10 +110,14 @@ def gather_rerank_topk(
     data (n, d); ids (b, P) int32 candidate ids, entries >= n are invalid
     sentinels (padding / duplicates marked by dedupe); queries/weights (b, d)
     -> ((b, k) ascending dists, (b, k) ids; (+inf, -1) where invalid).
+
+    ``data`` may be a quantized payload (bf16/int8 — see repro.quant):
+    gathered rows are decoded per candidate (widen, then ``* scales`` when
+    given) before the f32 re-rank; the stored table is never decoded whole.
     """
     n = data.shape[0]
     valid = ids < n
-    pts = data[jnp.minimum(ids, n - 1)]  # (b, P, d)
+    pts = _decode_rows(data[jnp.minimum(ids, n - 1)], scales)  # (b, P, d)
     dists = wl1_rerank(pts, queries, weights)
     dists = jnp.where(valid, dists, jnp.inf)
     return _topk_ascending(dists, jnp.where(valid, ids, -1).astype(jnp.int32), k)
@@ -113,13 +130,16 @@ def gather_rerank_topk_segmented(
     queries: jax.Array,
     weights: jax.Array,
     k: int,
+    scales: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Two-segment candidate-tail oracle: the virtual concatenation of
     ``data`` (n_main, d) and ``delta`` (cap, d) addressed by global ids —
     id i < n_main is a main row, i in [n_main, n_main + cap) is delta slot
     i - n_main, i >= n_main + cap is invalid. Bit-identical to
     ``gather_rerank_topk(concat([data, delta]), ...)`` without ever
-    building the (n_main + cap, d) table."""
+    building the (n_main + cap, d) table. ``scales`` decodes quantized
+    payloads per gathered row (delta rows are encoded with the sealed
+    segment's scales, so one scale vector covers both segments)."""
     n_main = data.shape[0]
     cap = delta.shape[0]
     n = n_main + cap
@@ -127,7 +147,7 @@ def gather_rerank_topk_segmented(
     delta = delta.astype(data.dtype)
     pts_m = data[jnp.minimum(ids, n_main - 1)]  # (b, P, d)
     pts_d = delta[jnp.clip(ids - n_main, 0, cap - 1)]
-    pts = jnp.where((ids < n_main)[..., None], pts_m, pts_d)
+    pts = _decode_rows(jnp.where((ids < n_main)[..., None], pts_m, pts_d), scales)
     dists = wl1_rerank(pts, queries, weights)
     dists = jnp.where(valid, dists, jnp.inf)
     return _topk_ascending(dists, jnp.where(valid, ids, -1).astype(jnp.int32), k)

@@ -47,6 +47,8 @@ import time
 
 
 def serve_alsh(args):
+    import dataclasses
+
     import jax
     import jax.numpy as jnp
 
@@ -67,13 +69,16 @@ def serve_alsh(args):
     if args.recall_target is not None:
         quality = QualitySpec(k=svc.topk, recall_target=args.recall_target,
                               latency_budget_ms=args.latency_budget_ms)
+    build_cfg = quality if quality is not None else svc.index_config
+    if args.storage != "f32" and quality is None:
+        build_cfg = dataclasses.replace(build_cfg, storage=args.storage)
     t0 = time.time()
-    index = Index.build(jax.random.fold_in(key, 2), data,
-                        quality if quality is not None else svc.index_config)
+    index = Index.build(jax.random.fold_in(key, 2), data, build_cfg)
     jax.block_until_ready(index.state.sorted_keys)
     cfg = index.config
     print(f"[alsh] built index over n={svc.n_per_shard} d={svc.d} "
-          f"family={cfg.family} K={cfg.K} L={cfg.L} in {time.time()-t0:.2f}s"
+          f"family={cfg.family} K={cfg.K} L={cfg.L} storage={cfg.storage} "
+          f"in {time.time()-t0:.2f}s"
           + (" (planned from QualitySpec)" if quality is not None else ""))
 
     # serving policy is a spec value, not a code path
@@ -85,6 +90,10 @@ def serve_alsh(args):
         spec = QuerySpec(k=svc.topk, mode="multiprobe", n_probes=args.probes)
     else:
         spec = QuerySpec(k=svc.topk)
+    if cfg.storage != "f32" and spec.mode != "exact" and spec.screen_alpha == 0.0:
+        # quantized tier: screen against compressed rows, exact-rerank the
+        # top k*alpha survivors
+        spec = dataclasses.replace(spec, screen_alpha=args.screen_alpha)
     exact = QuerySpec(k=svc.topk, mode="exact")
     print(f"[alsh] serving policy: {spec}")
 
@@ -109,6 +118,15 @@ def serve_alsh(args):
             line += (f" pred_success~{float(rep.predicted_success.mean()):.2f} "
                      f"truncated={int((rep.truncated_tables > 0).sum())}/16")
         print(line)
+        if args.stats:
+            # storage-tier accounting: bytes moved by the gather tail
+            import numpy as np
+            rep = index.explain(q[:16], w[:16], spec)
+            print(f"[alsh]   stats: storage={rep.storage} "
+                  f"table_bytes={rep.table_bytes} "
+                  f"rows_screened~{float(np.mean(rep.rows_screened)):.1f} "
+                  f"rows_reranked~{float(np.mean(rep.rows_reranked)):.1f} "
+                  f"bytes_gathered~{float(np.mean(rep.bytes_gathered)):.0f}")
 
 
 def serve_alsh_stream(args):
@@ -335,6 +353,18 @@ def main():
     ap.add_argument("--query-batch", type=int, default=256)
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--batches", type=int, default=3)
+    ap.add_argument("--storage", choices=["f32", "bf16", "int8"],
+                    default="f32",
+                    help="alsh mode: compressed table tier (explicit-knob "
+                         "path; quantized rows are screened then exact-"
+                         "reranked)")
+    ap.add_argument("--screen-alpha", type=float, default=2.0,
+                    help="alsh mode: keep k*alpha proxy-screen survivors "
+                         "for exact rerank (quantized storage only)")
+    ap.add_argument("--stats", action="store_true",
+                    help="alsh mode: print storage-tier accounting "
+                         "(table_bytes, rows screened/reranked, bytes "
+                         "gathered) per batch")
     ap.add_argument("--multiprobe", action="store_true",
                     help="serve with QuerySpec(mode='multiprobe')")
     ap.add_argument("--probes", type=int, default=8,

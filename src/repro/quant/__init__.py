@@ -1,0 +1,44 @@
+"""Quantized table tier: compressed row storage + proxy screening.
+
+The fused gather tail moves one full-precision data row per candidate, so
+HBM capacity/bandwidth — not FLOPs — bound rows-per-host. This package is
+the storage-tier answer: pluggable row codecs encode each table segment at
+build/compact time (the ENCODED payload is what lives in ``ALSHIndex.data``
+— there is no resident f32 copy), and the engine screens candidates against
+the compressed rows with a cheap proxy distance before running the exact
+f32 rerank on the ``k·α`` survivors. Hash keys are computed from the raw
+rows BEFORE encoding, so candidate generation is bit-identical across
+codecs — only the rerank tail sees the compression.
+
+Codecs:
+  * ``f32``  — passthrough (the default; every path bit-identical to an
+    unquantized index).
+  * ``bf16`` — truncated-mantissa rows, 2x smaller; decode is a widening
+    cast (exact).
+  * ``int8`` — symmetric per-dimension quantization with stored (d,) f32
+    scales, 4x smaller; decode is ``row * scale``.
+
+See DESIGN.md §11 "Memory tiers" for the screening math and the α
+calibration contract.
+"""
+
+from repro.quant.codecs import (
+    STORAGE_KINDS,
+    RowCodec,
+    bytes_per_value,
+    decode_table,
+    get_codec,
+    storage_dtype,
+)
+from repro.quant.screen import proxy_query, screen_keep
+
+__all__ = [
+    "STORAGE_KINDS",
+    "RowCodec",
+    "bytes_per_value",
+    "decode_table",
+    "get_codec",
+    "proxy_query",
+    "screen_keep",
+    "storage_dtype",
+]

@@ -1,0 +1,139 @@
+"""Row codecs: how a table segment's rows are stored on device.
+
+A codec maps an ``(n, d)`` f32 row block to its ENCODED payload (plus an
+optional ``(d,)`` f32 scale vector) and back. The contract every codec
+obeys:
+
+  * ``encode`` is called ONCE per sealed segment, at build/compact time,
+    AFTER hashing — the lattice levels and bucket keys are always computed
+    from the raw rows, so the probe stage is codec-invariant.
+  * ``encode_rows`` encodes post-build inserts WITH THE SEALED SEGMENT'S
+    scales (a delta row never gets its own scale vector — both segments
+    must decode under one transform so the fused two-segment gather can
+    apply a single scale stream).
+  * ``decode`` is exact for ``f32`` (identity — same array object) and
+    ``bf16`` (widening cast), and ``payload * scales`` for ``int8``.
+  * the decoded row NEVER materializes as a resident table: the fused
+    kernels decode per gathered row (Pallas) or per candidate chunk
+    (chunked CPU). ``decode_table`` exists for the oracle paths (exact
+    scan, planner calibration, host-side re-sharding) only.
+
+Symmetric int8: ``scale_j = max_i |x_ij| / 127`` per dimension,
+``enc = clip(round(x / scale), -127, 127)``. Symmetric (no zero point)
+keeps the weighted-l1 proxy exact up to the scale factor:
+``sum_j w_j s_j |enc_x - enc_q|_j`` needs no offset correction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+STORAGE_KINDS = ("f32", "bf16", "int8")
+
+# int8 symmetric range: full [-127, 127] (−128 unused keeps |enc| symmetric)
+_INT8_MAX = 127.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RowCodec:
+    """One storage format for table-segment rows.
+
+    Attributes:
+      name: registry key — the ``IndexConfig.storage`` value.
+      dtype: payload dtype the segment arrays hold.
+      bytes_per_value: payload bytes per coordinate (the memory-ratio and
+        bytes-gathered accounting unit).
+      scaled: whether this codec stores a per-dimension scale vector.
+    """
+
+    name: str
+    dtype: jnp.dtype
+    bytes_per_value: int
+    scaled: bool
+
+    def encode(self, data: jax.Array) -> tuple[jax.Array, jax.Array | None]:
+        """(n, d) f32 rows -> (payload, scales-or-None). Build/compact only."""
+        if self.name == "f32":
+            return data, None
+        if self.name == "bf16":
+            return data.astype(jnp.bfloat16), None
+        scales = self.fit_scales(data)
+        return self.encode_rows(data, scales), scales
+
+    def fit_scales(self, data: jax.Array) -> jax.Array:
+        """(d,) f32 symmetric per-dimension scales of a row block.
+
+        All-zero dimensions get scale 1.0 (they encode to 0 either way;
+        a zero scale would poison the decode with 0/0)."""
+        amax = jnp.max(jnp.abs(data.astype(jnp.float32)), axis=0)  # (d,)
+        return jnp.where(amax > 0, amax / _INT8_MAX, 1.0)
+
+    def encode_rows(self, rows: jax.Array, scales: jax.Array | None) -> jax.Array:
+        """Encode rows under EXISTING scales (delta inserts into a sealed
+        segment). Out-of-range values saturate — they were outside the
+        sealed segment's observed range, so the proxy distance for them is
+        clamped, never garbage; the exact rerank still sees the decoded
+        (saturated) row."""
+        if self.name == "f32":
+            return rows.astype(jnp.float32)
+        if self.name == "bf16":
+            return rows.astype(jnp.bfloat16)
+        q = jnp.round(rows.astype(jnp.float32) / scales)
+        return jnp.clip(q, -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
+
+    def decode(self, payload: jax.Array, scales: jax.Array | None) -> jax.Array:
+        """Encoded rows -> f32 rows (f32 payloads pass through untouched)."""
+        if payload.dtype == jnp.float32:
+            return payload
+        out = payload.astype(jnp.float32)
+        if scales is not None:
+            out = out * scales
+        return out
+
+
+_CODECS = {
+    "f32": RowCodec(name="f32", dtype=jnp.dtype(jnp.float32), bytes_per_value=4, scaled=False),
+    "bf16": RowCodec(name="bf16", dtype=jnp.dtype(jnp.bfloat16), bytes_per_value=2, scaled=False),
+    "int8": RowCodec(name="int8", dtype=jnp.dtype(jnp.int8), bytes_per_value=1, scaled=True),
+}
+
+
+def get_codec(name: str) -> RowCodec:
+    codec = _CODECS.get(name)
+    if codec is None:
+        raise ValueError(
+            f"unknown storage codec {name!r}; registered codecs: {STORAGE_KINDS}"
+        )
+    return codec
+
+
+def storage_dtype(name: str) -> jnp.dtype:
+    """Payload dtype of a named codec."""
+    return get_codec(name).dtype
+
+
+def bytes_per_value(name: str) -> int:
+    return get_codec(name).bytes_per_value
+
+
+def codec_for_dtype(dtype) -> RowCodec:
+    """The codec whose payload dtype matches a stored segment array (used to
+    cross-check a persistence manifest against its payload)."""
+    dtype = jnp.dtype(dtype)
+    for codec in _CODECS.values():
+        if codec.dtype == dtype:
+            return codec
+    raise ValueError(
+        f"no registered storage codec stores dtype {dtype} — the payload was "
+        f"written by an incompatible build"
+    )
+
+
+def decode_table(payload: jax.Array, scales: jax.Array | None) -> jax.Array:
+    """Whole-table decode for the ORACLE paths only (exact scan, planner
+    calibration sampling, host-side re-shard). The query tail never calls
+    this — it decodes per gathered row inside the fused kernels."""
+    return codec_for_dtype(payload.dtype).decode(payload, scales)

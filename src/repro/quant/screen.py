@@ -1,0 +1,66 @@
+"""The quantized-proxy screen: transform a query so the EXISTING fused
+gather/top-k machinery computes the compressed-domain proxy distance.
+
+For the symmetric int8 codec the weighted-l1 distance between DEQUANTIZED
+rows factors through the stored integer levels:
+
+    d_w(x̂, q̂) = Σ_j w_j · |enc_x[j]·s_j − enc_q[j]·s_j|
+              = Σ_j (w_j·s_j) · |enc_x[j] − enc_q[j]|
+
+so screening needs NO decode at all: quantize the query once per batch
+(``enc_q = clip(round(q/s), ±127)``), fold the scales into the weights
+(``w' = w·s``), and run the stock gather/rerank/top-m kernels over the raw
+int8 rows — the gather stays byte-bound, which is the whole point. For
+``bf16`` the proxy is the weighted-l1 between the bf16-rounded query and
+the bf16 rows (widened in-register; no scale fold needed). ``f32`` never
+screens — the engine statically disables the pass, keeping the default
+storage bit-identical to the unscreened engine.
+
+The proxy is LOSSY (quantization error can reorder near-ties), which is why
+it only SELECTS the top ``keep = ceil(k·α)`` survivors; the exact f32 rerank
+over decoded rows always has the final word. α is a ``QuerySpec`` /
+``PlannedSpec`` knob the planner calibrates against the recall target.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.codecs import _INT8_MAX
+
+
+def proxy_query(
+    queries: jax.Array, weights: jax.Array, storage_dtype, scales: jax.Array | None
+) -> tuple[jax.Array, jax.Array]:
+    """(queries, weights) -> (q', w') such that the stock wl1 kernels over
+    the RAW encoded rows compute the screening proxy distance.
+
+    int8 (``scales`` present): q' is the quantized query in integer levels
+    (f32-valued), w' = w·s — exactly the dequantized weighted-l1 between
+    codes. bf16: q' is the bf16-rounded query (widened back to f32 so the
+    kernel accumulators stay f32), w' unchanged. f32: identity (callers
+    never screen f32, but the transform is total)."""
+    q = queries.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    if scales is not None:
+        enc_q = jnp.clip(jnp.round(q / scales), -_INT8_MAX, _INT8_MAX)
+        return enc_q, w * scales
+    if jnp.dtype(storage_dtype) == jnp.dtype(jnp.bfloat16):
+        return q.astype(jnp.bfloat16).astype(jnp.float32), w
+    return q, w
+
+
+def screen_keep(k: int, screen_alpha: float, n_slots: int) -> int:
+    """Static survivor count of a screen pass: ``ceil(k·α)`` clamped to
+    ``[k, n_slots]``. Returns 0 — screening statically disabled — when α is
+    0 (off) or the survivor set would cover every candidate slot anyway
+    (screening would gather every row twice for nothing)."""
+    if not screen_alpha or screen_alpha <= 0.0:
+        return 0
+    keep = max(int(k), int(math.ceil(k * screen_alpha)))
+    if keep >= n_slots:
+        return 0
+    return keep

@@ -32,6 +32,7 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+from repro import quant
 from repro.api.index import Index
 from repro.core.distributed import merge_topk_host, shard_row_ranges
 from repro.runtime.fault import SimulatedFailure
@@ -88,7 +89,9 @@ class ShardSet:
         plus its range offset IS the global id), and persist every shard
         under ``root/shard_<s>`` for later recovery."""
         ranges = shard_row_ranges(index.n, n_shards)
-        data = index.state.data
+        # decode quantized payloads back to f32 rows: Index.build re-encodes
+        # each shard with its own scales, so every shard is self-consistent
+        data = quant.decode_table(index.state.data, index.state.scales)
         shards, offsets, dirs = [], [], []
         for s, (lo, hi) in enumerate(ranges):
             shard = Index.build(index.build_key, data[lo:hi], index.config)

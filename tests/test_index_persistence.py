@@ -171,3 +171,121 @@ def test_intact_directory_still_loads_after_fuzz_suite(rng, tmp_path):
     r2 = loaded.query(q, w, QuerySpec(k=5))
     np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
     np.testing.assert_array_equal(np.asarray(r1.dists), np.asarray(r2.dists))
+
+
+# --- v5 (quantized storage) fuzz: codec + scales are covered too ------------
+#
+# The v5 manifest adds a codec entry and (for scaled codecs) a decode-scale
+# leaf to the payload. The same contract extends: damage to the int8 block,
+# the scales, or the codec bookkeeping must raise a NAMED error.
+
+
+def _saved_int8_index(rng, tmp_path, name="q_idx"):
+    from repro.api import Index, IndexConfig, UpdateSpec
+
+    cfg = IndexConfig(d=8, M=16, K=6, L=4, family="theta", max_candidates=32,
+                      space=BoundedSpace(0.0, 1.0, 16.0), storage="int8")
+    data = jax.random.uniform(jax.random.fold_in(rng, 0), (256, 8))
+    index = Index.build(jax.random.fold_in(rng, 1), data, cfg,
+                        update=UpdateSpec(delta_capacity=32))
+    d = str(tmp_path / name)
+    index.save(d)
+    return index, d
+
+
+def test_bitflipped_int8_payload_raises_named_error(rng, tmp_path):
+    """A flipped byte inside the committed int8 block (or its scales — one
+    CRC-guarded blob) must be caught, never decoded into a skewed table."""
+    import pytest
+
+    from repro.api import Index
+
+    _, d = _saved_int8_index(rng, tmp_path)
+    f = _payload_files(d)[0]
+    blob = bytearray(open(f, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    with open(f, "wb") as fh:
+        fh.write(bytes(blob))
+    with pytest.raises((ckpt.CorruptCheckpointError, ValueError)):
+        Index.load(d)
+
+
+def test_codec_manifest_mismatch_raises_named_error(rng, tmp_path):
+    """config.storage edited to f32 over an int8 payload — a torn overwrite
+    shape; _check_consistent must name the codec mix."""
+    import json
+    import os
+
+    import pytest
+
+    from repro.api import Index
+
+    _, d = _saved_int8_index(rng, tmp_path)
+    meta_path = os.path.join(d, "index.json")
+    meta = json.load(open(meta_path))
+    meta["config"]["storage"] = "f32"
+    with open(meta_path, "w") as fh:
+        json.dump(meta, fh)
+    with pytest.raises(ValueError, match="mixes codecs"):
+        Index.load(d)
+
+
+def test_meta_internal_codec_mismatch_raises_named_error(rng, tmp_path):
+    """The manifest's codec entry contradicting its own config is an
+    internally inconsistent file, refused by name."""
+    import json
+    import os
+
+    import pytest
+
+    from repro.api import Index
+
+    _, d = _saved_int8_index(rng, tmp_path)
+    meta_path = os.path.join(d, "index.json")
+    meta = json.load(open(meta_path))
+    meta["codec"]["storage"] = "bf16"
+    with open(meta_path, "w") as fh:
+        json.dump(meta, fh)
+    with pytest.raises(ValueError, match="internally inconsistent"):
+        Index.load(d)
+
+
+def test_truncated_scales_raise_named_error(rng, tmp_path):
+    """A scale vector that lost dimensions (torn partial write) is refused
+    by _check_consistent even if the blob itself decodes."""
+    import dataclasses
+    import json
+    import os
+
+    import pytest
+
+    from repro.api import persist
+
+    index, d = _saved_int8_index(rng, tmp_path)
+    meta = json.load(open(os.path.join(d, "index.json")))
+    torn = dataclasses.replace(index.state, scales=index.state.scales[:3])
+    with pytest.raises(ValueError, match="missing or truncated"):
+        persist._check_consistent(torn, index.delta, index.tombstones,
+                                  index.config, index.update, meta,
+                                  os.path.join(d, "index.json"))
+
+
+def test_intact_int8_directory_roundtrips_bit_identically(rng, tmp_path):
+    """Control for the v5 scenarios: the undamaged quantized directory
+    restores codec, scales, and query results exactly."""
+    import numpy as np
+
+    from repro.api import Index, QuerySpec
+
+    index, d = _saved_int8_index(rng, tmp_path)
+    loaded = Index.load(d)
+    assert loaded.config.storage == "int8"
+    assert loaded.state.data.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(loaded.state.scales),
+                                  np.asarray(index.state.scales))
+    q = jax.random.uniform(jax.random.fold_in(rng, 5), (4, 8))
+    w = jnp.ones((4, 8))
+    r1 = index.query(q, w, QuerySpec(k=5, screen_alpha=2.0))
+    r2 = loaded.query(q, w, QuerySpec(k=5, screen_alpha=2.0))
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(np.asarray(r1.dists), np.asarray(r2.dists))

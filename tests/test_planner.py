@@ -246,7 +246,7 @@ def test_plans_survive_save_load(planned_index, rng_module, tmp_path):
     planned_index.save(str(tmp_path))
 
     meta = json.loads((tmp_path / "index.json").read_text())
-    assert meta["version"] == 4
+    assert meta["version"] == 5
     assert len(meta["plans"]) == len(planned_index.plans)
 
     restored = Index.load(str(tmp_path))

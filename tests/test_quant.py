@@ -1,0 +1,475 @@
+"""Quantized table tier: codecs, proxy screening, and exact rerank.
+
+The contract under test, layer by layer:
+
+  * codecs — round-trip within dtype precision, int8 tables ≥3x smaller
+    than f32, f32 encode is a true passthrough (same array object).
+  * kernels — every schedule (ref / chunked / auto / pallas-interpret)
+    agrees on quantized payloads, and the block-coalesced pallas kernel is
+    BIT-identical to the per-row kernel on f32 (the default path must not
+    move by a single ulp).
+  * engine — candidate generation hashes RAW rows before encoding, so the
+    candidate sets are codec-invariant; with ``storage="f32"`` the whole
+    engine is bit-identical to an unquantized build, screening knob or not.
+  * quality — int8 + calibrated screening stays within a point of f32
+    recall while the table is ≥3x smaller.
+  * planner — quantized ladders grow screening rungs; f32 ladders do not
+    (plan bit-parity with yesterday); the empirical-prior path runs
+    unchanged on a quantized index.
+  * persistence — the v5 manifest round-trips codec + scales; pre-v5
+    directories load as f32.
+"""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import quant
+from repro.api import (
+    BoundedSpace,
+    Index,
+    IndexConfig,
+    Planner,
+    QualitySpec,
+    QuerySpec,
+    UpdateSpec,
+)
+from repro.distance import recall_at_k
+from repro.kernels import ops
+from repro.kernels.gather_rerank import (
+    gather_rerank_topk_pallas,
+    gather_rerank_topk_pallas_blocked,
+)
+
+N = 400
+D = 8
+
+
+def _cfg(family="theta", storage="f32", **kw):
+    kw.setdefault("max_candidates", 64)
+    kw.setdefault("space", BoundedSpace(0.0, 1.0, 8.0))
+    kw.setdefault("W", 8.0)
+    return IndexConfig(d=D, M=8, K=6, L=8, family=family, storage=storage, **kw)
+
+
+def _problem(rng, n=N, d=D, b=4, salt=0):
+    data = jax.random.uniform(jax.random.fold_in(rng, salt), (n, d))
+    q = jax.random.uniform(jax.random.fold_in(rng, salt + 1), (b, d))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, salt + 2), (b, d))) + 0.2
+    return data, q, w
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+
+def test_codec_roundtrip_and_ratio(rng):
+    data = jax.random.uniform(jax.random.fold_in(rng, 0), (64, D))
+
+    f32 = quant.get_codec("f32")
+    payload, scales = f32.encode(data)
+    assert payload is data and scales is None  # true passthrough
+
+    bf16 = quant.get_codec("bf16")
+    payload, scales = bf16.encode(data)
+    assert payload.dtype == jnp.bfloat16 and scales is None
+    dec = quant.decode_table(payload, scales)
+    assert dec.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(data),
+                               rtol=0, atol=1.0 / 128)
+    assert data.nbytes / payload.nbytes == 2.0
+
+    int8 = quant.get_codec("int8")
+    payload, scales = int8.encode(data)
+    assert payload.dtype == jnp.int8 and scales.shape == (D,)
+    dec = quant.decode_table(payload, scales)
+    # symmetric per-dimension: error bounded by half a quantization step
+    step = np.asarray(scales)
+    err = np.abs(np.asarray(dec) - np.asarray(data))
+    assert (err <= step[None, :] * 0.5 + 1e-7).all()
+    assert data.nbytes / payload.nbytes >= 3.0  # acceptance: ≥3x smaller
+
+    with pytest.raises(ValueError, match="storage"):
+        quant.get_codec("int4")
+
+
+def test_int8_encode_saturates_out_of_fit_rows(rng):
+    """Delta inserts re-use the sealed segment's scales; rows outside the
+    fitted range must clamp to ±127, never wrap."""
+    data = jax.random.uniform(jax.random.fold_in(rng, 1), (32, D))
+    codec = quant.get_codec("int8")
+    _, scales = codec.encode(data)
+    wild = data * 10.0
+    enc = codec.encode_rows(wild, scales)
+    assert int(np.abs(np.asarray(enc)).max()) <= 127
+
+
+def test_screen_keep_semantics():
+    assert quant.screen_keep(10, 0.0, 1000) == 0  # screening off
+    assert quant.screen_keep(10, 2.0, 1000) == 20
+    assert quant.screen_keep(10, 1.0, 1000) == 10
+    assert quant.screen_keep(10, 2.5, 1000) == 25
+    # keep >= slots: screening cannot drop anything — disabled
+    assert quant.screen_keep(10, 4.0, 30) == 0
+
+
+def test_proxy_query_factorization(rng):
+    """int8 proxy: w'·|code − q'| == w·|decode(code) − s·round(q/s)| — the
+    screen never decodes, yet ranks by a faithful quantized-lattice wl1."""
+    data, q, w = _problem(rng, n=64, salt=3)
+    codec = quant.get_codec("int8")
+    payload, scales = codec.encode(data)
+    qp, wp = quant.proxy_query(q, w, payload.dtype, scales)
+    proxy = np.sum(np.asarray(wp)[:, None, :]
+                   * np.abs(np.asarray(payload, dtype=np.float32)[None, :, :]
+                            - np.asarray(qp)[:, None, :]), axis=-1)
+    dec = np.asarray(quant.decode_table(payload, scales))
+    qq = np.asarray(scales) * np.clip(
+        np.round(np.asarray(q) / np.asarray(scales)), -127, 127)
+    direct = np.sum(np.asarray(w)[:, None, :]
+                    * np.abs(dec[None, :, :] - qq[:, None, :]), axis=-1)
+    np.testing.assert_allclose(proxy, direct, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kernels: schedule parity on quantized payloads; f32 blocked bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("storage", ["bf16", "int8"])
+def test_schedule_parity_quantized(rng, storage):
+    data, q, w = _problem(rng, salt=10)
+    codec = quant.get_codec(storage)
+    payload, scales = codec.encode(data)
+    ids = jax.random.randint(jax.random.fold_in(rng, 11), (4, 48), 0, N + 8)
+    ids = jnp.where(ids >= N, N, ids).astype(jnp.int32)  # some sentinels
+    ref_d, ref_i = ops.gather_rerank_topk(payload, ids, q, w, 5,
+                                          force="ref", scales=scales)
+    for force in ("chunked", "auto", "interpret"):
+        d_, i_ = ops.gather_rerank_topk(payload, ids, q, w, 5,
+                                        force=force, scales=scales)
+        np.testing.assert_array_equal(np.asarray(i_), np.asarray(ref_i),
+                                      err_msg=f"ids diverge under {force}")
+        np.testing.assert_allclose(np.asarray(d_), np.asarray(ref_d),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("storage", ["bf16", "int8"])
+def test_schedule_parity_quantized_segmented(rng, storage):
+    data, q, w = _problem(rng, salt=12)
+    codec = quant.get_codec(storage)
+    payload, scales = codec.encode(data)
+    delta_rows = jax.random.uniform(jax.random.fold_in(rng, 13), (32, D))
+    delta = codec.encode_rows(delta_rows, scales)
+    ids = jax.random.randint(jax.random.fold_in(rng, 14), (4, 48), 0, N + 32)
+    ids = ids.astype(jnp.int32)
+    ref_d, ref_i = ops.gather_rerank_topk(payload, ids, q, w, 5,
+                                          force="ref", delta=delta,
+                                          scales=scales)
+    for force in ("chunked", "auto", "interpret"):
+        d_, i_ = ops.gather_rerank_topk(payload, ids, q, w, 5,
+                                        force=force, delta=delta,
+                                        scales=scales)
+        np.testing.assert_array_equal(np.asarray(i_), np.asarray(ref_i),
+                                      err_msg=f"ids diverge under {force}")
+        np.testing.assert_allclose(np.asarray(d_), np.asarray(ref_d),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_blocked_kernel_bit_identical_on_f32(rng):
+    """The coalesced-DMA kernel and the per-row kernel must agree BIT for
+    bit on f32 — same insertion order, same ties, same sentinels."""
+    data, q, w = _problem(rng, salt=20)
+    ids = jax.random.randint(jax.random.fold_in(rng, 21), (4, 50), 0, N + 16)
+    ids = jnp.where(ids >= N, N, ids).astype(jnp.int32)
+    per_row = gather_rerank_topk_pallas(data, ids, q, w, 7, interpret=True)
+    blocked = gather_rerank_topk_pallas_blocked(data, ids, q, w, 7,
+                                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(per_row[1]),
+                                  np.asarray(blocked[1]))
+    np.testing.assert_array_equal(np.asarray(per_row[0]),
+                                  np.asarray(blocked[0]))
+
+
+# ---------------------------------------------------------------------------
+# engine: f32 bit-identity + codec-invariant candidates + screened recall
+# ---------------------------------------------------------------------------
+
+
+def test_f32_storage_is_bit_identical_and_ignores_alpha(rng):
+    """storage='f32' (the default) must not change a single bit — and a
+    screen_alpha on an f32 index normalizes to the unscreened program."""
+    data, q, w = _problem(rng, salt=30)
+    bkey = jax.random.fold_in(rng, 31)
+    base = Index.build(bkey, data, _cfg())
+    for spec in (QuerySpec(k=5), QuerySpec(k=5, mode="multiprobe", n_probes=4),
+                 QuerySpec(k=5, mode="exact")):
+        r0 = base.query(q, w, spec)
+        r1 = base.query(q, w, dataclasses.replace(spec, screen_alpha=2.0))
+        np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+        np.testing.assert_array_equal(np.asarray(r0.dists), np.asarray(r1.dists))
+
+
+@pytest.mark.parametrize("family", ["theta", "l2"])
+@pytest.mark.parametrize("storage", ["bf16", "int8"])
+def test_candidates_are_codec_invariant(rng, family, storage):
+    """Hashing runs on RAW rows before encoding, so probe/multiprobe see
+    IDENTICAL candidate sets on every codec — fresh and with a delta."""
+    data, q, w = _problem(rng, salt=40)
+    bkey = jax.random.fold_in(rng, 41)
+    f32_ix = Index.build(bkey, data, _cfg(family=family),
+                         update=UpdateSpec(delta_capacity=32))
+    q_ix = Index.build(bkey, data, _cfg(family=family, storage=storage),
+                       update=UpdateSpec(delta_capacity=32))
+    rows = jax.random.uniform(jax.random.fold_in(rng, 42), (16, D))
+    f32_ix, _ = f32_ix.insert(rows)
+    q_ix, _ = q_ix.insert(rows)
+    specs = [QuerySpec(k=5)]
+    if family == "theta":  # l2 has no multiprobe
+        specs.append(QuerySpec(k=5, mode="multiprobe", n_probes=4))
+    for spec in specs:
+        r_f32 = f32_ix.query(q, w, spec)
+        r_q = q_ix.query(q, w, spec)
+        np.testing.assert_array_equal(np.asarray(r_f32.n_candidates),
+                                      np.asarray(r_q.n_candidates))
+
+
+@pytest.mark.parametrize("family", ["theta", "l2"])
+@pytest.mark.parametrize("storage", ["bf16", "int8"])
+@pytest.mark.parametrize("mode", ["probe", "multiprobe", "exact"])
+def test_quantized_engine_matrix(rng, family, storage, mode):
+    """Full matrix: quantized rerank ranks by the DECODED rows; against the
+    f32 build the returned ids must still agree almost everywhere (the
+    codecs perturb distances by <1% of the wl1 scale here)."""
+    if mode == "multiprobe" and family == "l2":
+        pytest.skip("l2 has no multiprobe")
+    data, q, w = _problem(rng, salt=50)
+    bkey = jax.random.fold_in(rng, 51)
+    spec = QuerySpec(k=5, mode=mode,
+                     n_probes=4 if mode == "multiprobe" else 8)
+    f32_ix = Index.build(bkey, data, _cfg(family=family),
+                         update=UpdateSpec(delta_capacity=32))
+    q_ix = Index.build(bkey, data, _cfg(family=family, storage=storage),
+                       update=UpdateSpec(delta_capacity=32))
+    rows = jax.random.uniform(jax.random.fold_in(rng, 52), (16, D))
+    f32_ix, _ = f32_ix.insert(rows)
+    q_ix, _ = q_ix.insert(rows)
+    r_f32 = f32_ix.query(q, w, spec)
+    r_q = q_ix.query(q, w, spec)
+    assert r_q.ids.shape == r_f32.ids.shape
+    # sentinel structure must match exactly (candidate sets are identical);
+    # compare the non-sentinel id SETS — codecs may reorder near-ties
+    np.testing.assert_array_equal(np.asarray(r_q.ids) < 0,
+                                  np.asarray(r_f32.ids) < 0)
+    num = den = 0
+    for ra, rb in zip(np.asarray(r_q.ids), np.asarray(r_f32.ids)):
+        sa = {int(x) for x in ra if x >= 0}
+        sb = {int(x) for x in rb if x >= 0}
+        num += len(sa & sb)
+        den += len(sb)
+    overlap = num / max(den, 1)
+    assert overlap >= 0.9, f"{storage}/{family}/{mode}: id overlap {overlap}"
+
+
+@pytest.mark.parametrize("storage", ["bf16", "int8"])
+def test_screened_query_recall(rng, storage):
+    """Proxy screen + exact rerank on survivors: recall vs the f32 exact
+    oracle within a point of the unscreened quantized query."""
+    data, q, w = _problem(rng, b=8, salt=60)
+    bkey = jax.random.fold_in(rng, 61)
+    oracle = Index.build(bkey, data, _cfg()).query(q, w, QuerySpec(k=5, mode="exact"))
+    q_ix = Index.build(bkey, data, _cfg(storage=storage))
+    plain = q_ix.query(q, w, QuerySpec(k=5))
+    screened = q_ix.query(q, w, QuerySpec(k=5, screen_alpha=4.0))
+    rec_plain = recall_at_k(plain.ids, oracle.ids, 5)
+    rec_screened = recall_at_k(screened.ids, oracle.ids, 5)
+    assert rec_screened >= rec_plain - 0.01
+    # candidate accounting is identical — screening happens after dedupe
+    np.testing.assert_array_equal(np.asarray(plain.n_candidates),
+                                  np.asarray(screened.n_candidates))
+
+
+def test_explain_storage_accounting(rng):
+    data, q, w = _problem(rng, salt=70)
+    ix = Index.build(jax.random.fold_in(rng, 71), data, _cfg(storage="int8"))
+    spec = QuerySpec(k=5, screen_alpha=2.0)
+    rep = ix.explain(q, w, spec)
+    assert rep.storage == "int8"
+    assert rep.table_bytes == ix.table_bytes
+    assert ix.table_bytes < N * D * 4  # compressed: payload + scales < f32
+    n_cand = np.asarray(rep.rows_screened)
+    assert (n_cand >= np.asarray(rep.rows_reranked)).all()
+    assert (np.asarray(rep.rows_reranked) <= 10).all()  # keep = k*alpha
+    assert (np.asarray(rep.bytes_gathered)
+            == (n_cand + np.asarray(rep.rows_reranked)) * D).all()
+    d = rep.to_dict()
+    for key in ("storage", "mean_rows_screened", "mean_rows_reranked",
+                "mean_bytes_gathered", "table_bytes"):
+        assert key in d
+    # f32 reports zero screens and full-width gathers
+    f32_rep = Index.build(jax.random.fold_in(rng, 72), data, _cfg()).explain(
+        q, w, QuerySpec(k=5))
+    assert f32_rep.storage == "f32"
+    assert (np.asarray(f32_rep.rows_screened) == 0).all()
+
+
+def test_compact_reencodes_quantized_delta(rng):
+    data, q, w = _problem(rng, salt=80)
+    ix = Index.build(jax.random.fold_in(rng, 81), data, _cfg(storage="int8"),
+                     update=UpdateSpec(delta_capacity=64))
+    rows = jax.random.uniform(jax.random.fold_in(rng, 82), (48, D))
+    ix, _ = ix.insert(rows)
+    ix = ix.delete(jnp.arange(8, dtype=jnp.int32))
+    compacted = ix.compact()
+    assert compacted.n == N + 48 - 8
+    assert compacted.state.data.dtype == jnp.int8
+    assert compacted.state.scales is not None
+    # compact renumbers ids and REFITS the scales on the merged segment, so
+    # compare exact scans (same survivor rows, sorted distances) within the
+    # re-quantization error budget (≤ d·max(w)·step/2)
+    exact = QuerySpec(k=5, mode="exact")
+    r1 = ix.query(q, w, exact)
+    r2 = compacted.query(q, w, exact)
+    np.testing.assert_allclose(np.asarray(r1.dists), np.asarray(r2.dists),
+                               rtol=0, atol=0.1)
+
+
+def test_shard_gate_names_storage(rng):
+    data, _, _ = _problem(rng, salt=90)
+    ix = Index.build(jax.random.fold_in(rng, 91), data, _cfg(storage="int8"))
+    with pytest.raises(ValueError, match="storage"):
+        ix.shard(None)
+
+
+def test_bad_storage_and_alpha_are_named_errors():
+    with pytest.raises(ValueError, match="storage"):
+        _cfg(storage="fp8")
+    with pytest.raises(ValueError, match="screen_alpha"):
+        QuerySpec(k=5, screen_alpha=0.5)
+
+
+# ---------------------------------------------------------------------------
+# planner: alpha rungs on quantized ladders only; prior path unchanged
+# ---------------------------------------------------------------------------
+
+QUALITY = QualitySpec(k=3, recall_target=0.6, calibration_queries=8)
+
+
+def test_planner_alpha_rungs_only_when_quantized(rng):
+    data, _, _ = _problem(rng, salt=100)
+    f32_ix = Index.build(jax.random.fold_in(rng, 101), data, _cfg())
+    ladder = f32_ix.plan_ladder(QUALITY)
+    assert all(r.screen_alpha == 0.0 for r in ladder)  # plan bit-parity
+
+    q_ix = Index.build(jax.random.fold_in(rng, 101), data, _cfg(storage="int8"))
+    q_plan = Planner().plan_query(q_ix, QUALITY)
+    assert q_plan.provenance == "calibrated"
+    # a quantized plan resolves and executes end to end
+    _, q, w = _problem(rng, salt=100)
+    res = q_ix.query(q, w, q_plan)
+    assert res.ids.shape == (4, 3)
+
+
+def test_planner_quantized_ladder_has_alpha_candidates(rng):
+    data, _, _ = _problem(rng, salt=110)
+    ix = Index.build(jax.random.fold_in(rng, 111), data, _cfg(storage="int8"))
+    ladder = Planner()._plan_ladder(ix.config, k=3)
+    alphas = {r.screen_alpha for r in ladder}
+    assert 0.0 in alphas and alphas & set(Planner._SCREEN_ALPHAS)
+
+
+def test_prior_planner_runs_on_quantized_index(rng):
+    """Planner(table=...) — the empirical-prior path — must resolve a plan
+    on a quantized index exactly as it does today (falls back to
+    calibration when the profile is out of bucket; no codec crash)."""
+    from repro.tuner import DataProfile, ScanSpace, build_table, run_scan
+    from repro.tuner.space import AUTO_WIDTH
+
+    space = ScanSpace(
+        profiles=(DataProfile(n=N, d=D),), families=("theta",),
+        K=(6,), L=(8,), W=(AUTO_WIDTH,), n_probes=(1,), window=(64,),
+        k=3, queries=8,
+    )
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        records = run_scan(space, os.path.join(td, "trials.jsonl"))
+        table = build_table(records, space)
+    data, q, w = _problem(rng, salt=120)
+    ix = Index.build(jax.random.fold_in(rng, 121), data, _cfg(storage="int8"))
+    plan = Planner(table=table).plan_query(ix, QUALITY)
+    assert plan.provenance in ("prior", "calibrated")
+    res = ix.query(q, w, plan)
+    assert res.ids.shape == (4, 3)
+
+
+# ---------------------------------------------------------------------------
+# persistence: v5 round-trip + pre-v5 compatibility
+# ---------------------------------------------------------------------------
+
+
+def test_v5_roundtrip_int8_with_delta(rng, tmp_path):
+    data, q, w = _problem(rng, salt=130)
+    ix = Index.build(jax.random.fold_in(rng, 131), data, _cfg(storage="int8"),
+                     update=UpdateSpec(delta_capacity=32))
+    rows = jax.random.uniform(jax.random.fold_in(rng, 132), (16, D))
+    ix, _ = ix.insert(rows)
+    d = str(tmp_path / "int8")
+    ix.save(d)
+    meta = json.load(open(os.path.join(d, "index.json")))
+    assert meta["version"] == 5
+    assert meta["codec"]["storage"] == "int8"
+    assert meta["config"]["storage"] == "int8"
+    loaded = Index.load(d)
+    assert loaded.config.storage == "int8"
+    assert loaded.state.data.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(loaded.state.scales),
+                                  np.asarray(ix.state.scales))
+    r1 = ix.query(q, w, QuerySpec(k=5, screen_alpha=2.0))
+    r2 = loaded.query(q, w, QuerySpec(k=5, screen_alpha=2.0))
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(np.asarray(r1.dists), np.asarray(r2.dists))
+
+
+def test_pre_v5_directory_loads_as_f32(rng, tmp_path):
+    """A directory written before the codec tier (no 'storage' key, no
+    codec meta, version 4) must load exactly as an f32 index."""
+    data, q, w = _problem(rng, salt=140)
+    ix = Index.build(jax.random.fold_in(rng, 141), data, _cfg())
+    d = str(tmp_path / "prev5")
+    ix.save(d)
+    meta_path = os.path.join(d, "index.json")
+    meta = json.load(open(meta_path))
+    meta["version"] = 4
+    meta["config"].pop("storage", None)
+    meta.pop("codec", None)
+    with open(meta_path, "w") as fh:
+        json.dump(meta, fh)
+    loaded = Index.load(d)
+    assert loaded.config.storage == "f32"
+    r1 = ix.query(q, w, QuerySpec(k=5))
+    r2 = loaded.query(q, w, QuerySpec(k=5))
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(np.asarray(r1.dists), np.asarray(r2.dists))
+
+
+# ---------------------------------------------------------------------------
+# serving: quantized index behind the ShardSet + serve drill entry
+# ---------------------------------------------------------------------------
+
+
+def test_shardset_builds_from_quantized_index(rng, tmp_path):
+    from repro.serving import ShardSet
+
+    data, q, w = _problem(rng, salt=150)
+    ix = Index.build(jax.random.fold_in(rng, 151), data, _cfg(storage="int8"))
+    ss = ShardSet.build(ix, 2, str(tmp_path / "shards"))
+    assert ss.n_shards == 2
+    for shard in ss.shards:
+        assert shard.config.storage == "int8"
+        assert shard.state.data.dtype == jnp.int8

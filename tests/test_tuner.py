@@ -407,7 +407,7 @@ def test_tuning_provenance_survives_save_load(scanned, rng, tmp_path):
     index.save(str(tmp_path))
 
     meta = json.loads((tmp_path / "index.json").read_text())
-    assert meta["version"] == 4
+    assert meta["version"] == 5
     assert meta["tuning"] == table.provenance()
 
     restored = Index.load(str(tmp_path))

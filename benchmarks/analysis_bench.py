@@ -1,0 +1,86 @@
+"""Static-analysis gate benchmarks (benchmarks/run.py snapshots the rows
+into BENCH_analysis.json).
+
+The gate runs on every PR, so its own cost is a perf surface: the rows
+time the lint pass over all of ``src/repro``, the compile-key fold of the
+full raw lattice, and the per-path ``make_jaxpr`` trace + liveness scan.
+The derived columns carry the report numbers the gate enforces — raw
+points vs folded compile keys, the worst path's peak live MiB, lint
+finding count — so the perf trajectory doubles as a budget trajectory:
+a PR that widens the lattice or fattens a path moves these cells before
+it moves production.
+
+``time_fn``'s block_until_ready is a no-op here (everything host-side);
+the medians are honest wall times.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.analysis import audit, budgets, lint_paths
+
+SRC_ROOT = Path(__file__).resolve().parents[1] / "src"
+
+
+def run():
+    rows = []
+
+    # layer 1: the lint pass over the whole tree
+    findings = lint_paths([SRC_ROOT / "repro"], root=SRC_ROOT)
+    lint_us = time_fn(lambda: lint_paths([SRC_ROOT / "repro"], root=SRC_ROOT))
+    rows.append(row("analysis/lint_src_repro", lint_us, f"{len(findings)}findings"))
+
+    # layer 2 setup: the four audit index builds (the gate's fixed cost)
+    t0 = time.perf_counter()
+    indexes = audit.build_audit_indexes()
+    build_us = (time.perf_counter() - t0) * 1e6
+    g = budgets.AUDIT_GEOMETRY
+    rows.append(
+        row("analysis/audit_index_builds", build_us,
+            f"{len(indexes)}builds@n{g['n']}")
+    )
+
+    q = jnp.zeros((g["b"], g["d"]), jnp.float32)
+    w = jnp.ones((g["b"], g["d"]), jnp.float32)
+    points = audit.enumerate_points()
+
+    def fold():
+        return {
+            audit.compile_key(p, indexes[(p.family, p.storage)], q, w)
+            for p in points
+        }
+
+    keys = fold()
+    fold_us = time_fn(fold)
+    rows.append(
+        row("analysis/compile_key_fold", fold_us,
+            f"{len(points)}raw->{len(keys)}keys(budget{budgets.RETRACE_BUDGET})")
+    )
+
+    # per-path trace + liveness scan, across one representative per key
+    seen = set()
+    reps = []
+    for p in points:
+        k = audit.compile_key(p, indexes[(p.family, p.storage)], q, w)
+        if k not in seen:
+            seen.add(k)
+            reps.append(p)
+    t0 = time.perf_counter()
+    worst = ("", 0)
+    for p in reps:
+        closed = audit.trace_point(p, indexes[(p.family, p.storage)], q, w)
+        peak = audit.peak_live_bytes(closed.jaxpr)
+        if peak > worst[1]:
+            worst = (p.name, peak)
+    total = time.perf_counter() - t0
+    rows.append(
+        row("analysis/trace_and_scan_per_path", total / len(reps) * 1e6,
+            f"worst={worst[0]}@{worst[1] / 2**20:.1f}MiB"
+            f"(envelope{budgets.MEMORY_ENVELOPE_BYTES / 2**20:.0f}MiB)")
+    )
+    return rows

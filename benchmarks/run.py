@@ -37,11 +37,12 @@ MODULES = [
     "serving_bench",  # broker: traces, degradation recall, chaos coverage
     "tuner_bench",  # offline autotuner: prior-vs-calibrated speedup + adherence
     "quant_bench",  # quantized tier: memory ratio, latency, recall delta
+    "analysis_bench",  # static-analysis gate: lint/trace cost + budget numbers
     "roofline",  # dry-run roofline summaries (if results exist)
 ]
 
 # convenience aliases accepted by --only/--skip
-ALIASES = {"quant": "quant_bench"}
+ALIASES = {"quant": "quant_bench", "analysis": "analysis_bench"}
 
 # benchmark modules whose rows also snapshot to a machine-readable artifact
 SNAPSHOTS = {
@@ -51,6 +52,7 @@ SNAPSHOTS = {
     "serving_bench": "BENCH_serving.json",
     "tuner_bench": "BENCH_tuner.json",
     "quant_bench": "BENCH_quant.json",
+    "analysis_bench": "BENCH_analysis.json",
 }
 
 

@@ -1,0 +1,41 @@
+"""Static trace-contract analysis: lint gate + jaxpr budget auditor.
+
+Two layers, one verdict (``python -m repro.analysis`` exits non-zero on
+any finding):
+
+  * :mod:`repro.analysis.lint` — an AST pass over ``src/repro`` with
+    stable RPR0xx rule codes (tracer branching, host syncs on hot paths,
+    sentinel fills, static-arg hygiene, import-time compute, pallas
+    confinement, private-jit pokes). Violations are silenced only by an
+    inline ``# repro: allow[RPRxxx] <reason>`` with a non-empty reason.
+  * :mod:`repro.analysis.audit` — traces the public query entry-point
+    lattice via ``jax.make_jaxpr`` (nothing executes) and checks the
+    declared budgets of :mod:`repro.analysis.budgets`: compile-key
+    cardinality (AUD002), peak live intermediate bytes (AUD001), dtype
+    contracts (AUD003), and drift vs the checked-in golden (AUD004).
+
+:mod:`repro.analysis.retrace_guard` is the shared LIVE counterpart of the
+retrace contract — the serving broker, the auditor's live probe, and the
+tests all watch the engine's jit cache through it instead of poking
+``_query_jit._cache_size()`` directly.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.lint import Finding, lint_paths, lint_source
+from repro.analysis.retrace_guard import (
+    RetraceError,
+    RetraceGuard,
+    cache_size,
+    engine_cache_size,
+)
+
+__all__ = [
+    "Finding",
+    "lint_paths",
+    "lint_source",
+    "RetraceError",
+    "RetraceGuard",
+    "cache_size",
+    "engine_cache_size",
+]

@@ -1,0 +1,94 @@
+"""CLI for the trace-contract analyzer.
+
+    python -m repro.analysis                  # lint + audit, exit 0/1
+    python -m repro.analysis --lint-only
+    python -m repro.analysis --audit-only
+    python -m repro.analysis --write-golden   # regenerate golden_budget.json
+    python -m repro.analysis --seed-regression memory   # must exit 1
+    python -m repro.analysis --seed-regression retrace  # must exit 1
+    python -m repro.analysis --report out.json
+
+The ``--seed-regression`` modes exist to test the gate itself: they
+splice a known-bad pattern (the pre-PR5 dense delta-match materialization,
+or an unfolded static axis) into the audit and MUST fail with the named
+diagnostic; CI runs both and asserts the non-zero exit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--lint-only", action="store_true")
+    ap.add_argument("--audit-only", action="store_true")
+    ap.add_argument("--write-golden", action="store_true",
+                    help="regenerate golden_budget.json from this run")
+    ap.add_argument("--seed-regression", choices=("memory", "retrace"),
+                    help="inject a known-bad pattern; the audit must fail")
+    ap.add_argument("--report", type=Path, default=Path("analysis_report.json"),
+                    help="where to write the JSON report (audit runs only)")
+    ap.add_argument("--paths", nargs="*", default=None,
+                    help="lint these paths instead of src/repro")
+    args = ap.parse_args(argv)
+
+    root = Path(__file__).resolve().parents[2]  # .../src
+    rc = 0
+
+    if not args.audit_only:
+        from repro.analysis.lint import lint_paths
+
+        paths = args.paths or [str(root / "repro")]
+        findings = lint_paths(paths, root=str(root))
+        for f in findings:
+            print(f)
+        print(f"lint: {len(findings)} finding(s)")
+        if findings:
+            rc = 1
+
+    if not args.lint_only:
+        from repro.analysis import audit, budgets
+
+        golden = None if (args.write_golden or args.seed_regression) else (
+            audit.load_golden()
+        )
+        report = audit.run_audit(
+            inject=args.seed_regression,
+            golden=golden,
+            live_probe=args.seed_regression is None,
+        )
+        args.report.write_text(json.dumps(report, indent=2) + "\n")
+        ck = report["compile_keys"]
+        mem = report["memory"]
+        print(
+            f"audit: {ck['raw_points']} raw lattice points -> "
+            f"{ck['count']} compile keys (budget {ck['budget']}); "
+            f"worst path {mem['worst_path']} peaks at "
+            f"{mem['max_peak_live_bytes'] / 2**20:.1f} MiB "
+            f"(envelope {mem['envelope_bytes'] / 2**20:.0f} MiB)"
+        )
+        for f in report["failures"]:
+            print(
+                f"{f['code']} {f['path']}: {f['message']} "
+                f"(measured {f['measured']:g} vs budget {f['budget']:g})"
+            )
+        if args.write_golden:
+            budgets.GOLDEN_PATH.write_text(
+                json.dumps(audit.golden_from_report(report), indent=2,
+                           sort_keys=True) + "\n"
+            )
+            print(f"golden written: {budgets.GOLDEN_PATH}")
+        if not report["ok"]:
+            rc = 1
+        print(f"audit: {'ok' if report['ok'] else 'FAILED'} "
+              f"({len(report['failures'])} failure(s))")
+
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,636 @@
+"""Layer 2 of the trace-contract analyzer: the jaxpr contract auditor.
+
+Traces the full public query entry-point lattice — mode (probe /
+multiprobe / exact) × view (sealed / segmented) × storage codec (f32 /
+bf16 / int8) × screen-α × ladder rungs (probe windows, probe counts) —
+through the REAL :func:`repro.engine.pipeline.dispatch`, via
+``jax.make_jaxpr`` so nothing executes, then checks the declared budgets
+(:mod:`repro.analysis.budgets`):
+
+  * compile-key cardinality after the shared
+    :func:`repro.engine.pipeline.normalize_static_args` vs
+    ``RETRACE_BUDGET`` (AUD002) — the raw lattice deliberately includes
+    the redundant static axes callers may pass (probe-mode ``n_probes``,
+    non-probe ``impl``, f32 ``screen_alpha``) so a normalization gap
+    shows up as extra keys;
+  * peak live intermediate bytes per path (liveness scan over the jaxpr,
+    sub-jaxprs included) vs ``MEMORY_ENVELOPE_BYTES`` (AUD001) — the
+    ``(b, L·P·C, cap)``-class materializations that broke the 4096-row
+    envelope before PR 5 are caught here at review time;
+  * dtype contracts (AUD003): no f64 aval anywhere, int8 avals confined
+    to ``INT8_ALLOWED_PRIMITIVES`` (movement + decode);
+  * per-path drift vs the checked-in golden budget file (AUD004).
+
+The auditor also runs a LIVE normalization probe on a tiny index: the
+denormalized static variants are pushed through the real jitted entry
+point under a :class:`~repro.analysis.retrace_guard.RetraceGuard` — the
+static trace-level count and the live jit cache must agree that the
+redundant axes compile nothing new.
+
+``run_audit(inject=...)`` supports two seeded regressions for testing the
+gate itself (``python -m repro.analysis --seed-regression ...``):
+``"memory"`` splices a dense (b, L·P·C, cap) delta-match tensor into every
+segmented path; ``"retrace"`` counts compile keys WITHOUT the
+normalization, modeling a static axis the engine forgot to fold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.analysis import budgets
+from repro.analysis.retrace_guard import RetraceGuard
+
+# audit failure codes (stable, named in reports and CI logs)
+AUDIT_CODES = {
+    "AUD001": "memory-envelope breach",
+    "AUD002": "retrace-budget breach",
+    "AUD003": "dtype-contract violation",
+    "AUD004": "golden-budget drift",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditPoint:
+    """One RAW caller combination of the entry-point lattice."""
+
+    family: str
+    storage: str
+    view: str  # "sealed" | "segmented"
+    mode: str
+    window: int  # effective max_candidates (ladder rung)
+    n_probes: int
+    max_flips: int
+    impl: str
+    screen_alpha: float
+
+    @property
+    def name(self) -> str:
+        parts = [self.family, self.storage, self.view, self.mode]
+        if self.mode != "exact":
+            parts.append(f"w{self.window}")
+        if self.mode == "multiprobe":
+            parts.append(f"p{self.n_probes}")
+        if self.screen_alpha:
+            parts.append(f"a{int(self.screen_alpha)}")
+        return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditFailure:
+    code: str
+    path: str
+    message: str
+    measured: float
+    budget: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return (
+            f"{self.code} [{AUDIT_CODES[self.code]}] {self.path}: "
+            f"{self.message} (measured {self.measured:g} vs budget {self.budget:g})"
+        )
+
+
+def _audit_config(family: str, storage: str, window: Optional[int] = None):
+    from repro.core.index import IndexConfig
+
+    g = budgets.AUDIT_GEOMETRY
+    return IndexConfig(
+        d=g["d"],
+        M=g["M"],
+        K=g["K"],
+        L=g["L"],
+        family=family,
+        W=g["W"],
+        max_candidates=window or g["max_candidates"],
+        storage=storage,
+    )
+
+
+# (family, storage) combos audited. theta carries the full codec axis;
+# l2 pins the family-specific trace paths (float keys, W bucketing).
+AUDIT_BUILDS = (("theta", "f32"), ("theta", "bf16"), ("theta", "int8"), ("l2", "f32"))
+
+
+def build_audit_indexes() -> dict:
+    """Build one tiny mutable index per audited (family, storage) — the
+    only concrete computation the audit performs (~1 s total)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api.index import Index
+    from repro.api.spec import UpdateSpec
+
+    g = budgets.AUDIT_GEOMETRY
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(key, (g["n"], g["d"]), jnp.float32)
+    out = {}
+    for family, storage in AUDIT_BUILDS:
+        out[(family, storage)] = Index.build(
+            key,
+            data,
+            _audit_config(family, storage),
+            update=UpdateSpec(delta_capacity=g["delta_capacity"]),
+        )
+    return out
+
+
+def enumerate_points() -> list:
+    """The RAW lattice: every caller combination the facades, legacy
+    shims, and planner ladder rungs can reach — including the static
+    values the engine's normalization must fold away."""
+    g = budgets.AUDIT_GEOMETRY
+    full_w = g["max_candidates"]
+    rung_w = full_w // 2
+    points = []
+    for family, storage in AUDIT_BUILDS:
+        alphas = (0.0,) if storage == "f32" else (0.0, 2.0)
+        for view in ("sealed", "segmented"):
+            # probe: window rungs × redundant n_probes axis (must fold)
+            for window in (full_w, rung_w):
+                for n_probes in (1, 8):  # ignored by probe mode
+                    for alpha in alphas:
+                        points.append(
+                            AuditPoint(family, storage, view, "probe", window,
+                                       n_probes, 0, "auto", alpha)
+                        )
+            # multiprobe: probe-count rungs × redundant impl axis (must
+            # fold). theta-only — l2 has no perturbation sequence.
+            for n_probes in (8, 4) if family == "theta" else ():
+                for impl in ("auto", "gather"):  # non-probe impl is folded
+                    for alpha in alphas:
+                        points.append(
+                            AuditPoint(family, storage, view, "multiprobe", full_w,
+                                       n_probes, 3, impl, alpha)
+                        )
+            # exact: window + α must both fold (cfg drops entirely)
+            for window in (full_w, rung_w):
+                points.append(
+                    AuditPoint(family, storage, view, "exact", window, 8, 3,
+                               "auto", alphas[-1])
+                )
+    return points
+
+
+def _view_args(index, view: str):
+    if view == "segmented":
+        return index.state, index.delta, index.tombstones
+    return index.state, None, None
+
+
+def _shape_signature(args) -> tuple:
+    """What jit's cache key sees of the dynamic args: flattened avals plus
+    the treedef."""
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    return (
+        tuple((tuple(x.shape), str(x.dtype)) for x in leaves),
+        str(treedef),
+    )
+
+
+def compile_key(point: AuditPoint, index, queries, weights, normalized: bool = True):
+    """The compile key a call at this lattice point costs: the dynamic-arg
+    shape signature plus the (normalized) static tuple — exactly the pair
+    the engine's jit cache is keyed on."""
+    from repro.engine import pipeline
+
+    g = budgets.AUDIT_GEOMETRY
+    cfg = _audit_config(point.family, point.storage, point.window)
+    state, delta, tomb = _view_args(index, point.view)
+    statics = (
+        cfg, g["k"], point.mode, point.n_probes, point.max_flips, point.impl,
+        point.screen_alpha,
+    )
+    if normalized:
+        cfg_n, k, mode, n_probes, max_flips, impl, alpha = (
+            pipeline.normalize_static_args(
+                cfg, state.data.dtype, g["k"], point.mode, point.n_probes,
+                point.max_flips, point.impl, point.screen_alpha,
+            )
+        )
+        statics = (cfg_n, k, mode, n_probes, max_flips, impl, alpha)
+    sig = _shape_signature((state, delta, tomb, queries, weights))
+    return (sig, statics)
+
+
+def trace_point(point: AuditPoint, index, queries, weights, inject: Optional[str] = None):
+    """``jax.make_jaxpr`` of the real dispatch at this lattice point —
+    nothing executes. ``inject="memory"`` splices the historical
+    (b, L·P·C, cap) dense-delta-match materialization into segmented
+    paths (the regression shape this auditor exists to catch)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine import pipeline
+
+    g = budgets.AUDIT_GEOMETRY
+    cfg = _audit_config(point.family, point.storage, point.window)
+    state, delta, tomb = _view_args(index, point.view)
+
+    def fn(state, delta, tomb, q, w):
+        res = pipeline.dispatch(
+            state, delta, tomb, q, w, cfg,
+            k=g["k"], mode=point.mode, n_probes=point.n_probes,
+            max_flips=point.max_flips, impl=point.impl,
+            screen_alpha=point.screen_alpha,
+        )
+        if inject == "memory" and delta is not None:
+            slots = cfg.L * point.n_probes * cfg.max_candidates
+            cap = g["delta_capacity"]
+            dense = jnp.zeros((q.shape[0], slots, cap), jnp.float32) + q[:, :1, None]
+            res = res._replace(dists=res.dists + 0.0 * dense.sum())
+        return res
+
+    return jax.make_jaxpr(fn)(state, delta, tomb, queries, weights)
+
+
+# -- jaxpr walking -----------------------------------------------------------
+
+
+def _aval_bytes(aval) -> int:
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    size = 1
+    for dim in shape:
+        if not isinstance(dim, int):
+            return 0  # dynamic dim — cannot cost it statically
+        size *= dim
+    return size * dtype.itemsize
+
+
+def _sub_jaxprs(eqn):
+    """Every Jaxpr/ClosedJaxpr hiding in an eqn's params (pjit, scan,
+    while, cond branches, custom_jvp, ...)."""
+    from jax._src import core as jcore
+
+    found = []
+    for v in eqn.params.values():
+        items = v if isinstance(v, (tuple, list)) else (v,)
+        for item in items:
+            if isinstance(item, jcore.ClosedJaxpr):
+                found.append(item.jaxpr)
+            elif isinstance(item, jcore.Jaxpr):
+                found.append(item)
+    return found
+
+
+def peak_live_bytes(jaxpr) -> int:
+    """Deterministic liveness scan: walk eqns in trace order, allocate
+    outputs, free each var after its last use; sub-jaxpr peaks count on
+    top of the outer live set at their call site (minus their inputs,
+    which alias outer buffers). An upper-bound *model* of XLA's actual
+    allocator — its value is being stable and monotone in the shapes that
+    matter, not being byte-exact."""
+    from jax._src import core as jcore
+
+    last_use: dict = {}
+    for i, eqn in enumerate(jaxpr.eqns):
+        for v in eqn.invars:
+            if isinstance(v, jcore.Var):
+                last_use[v] = i
+    outset = {v for v in jaxpr.outvars if isinstance(v, jcore.Var)}
+
+    live: dict = {}
+    for v in (*jaxpr.invars, *jaxpr.constvars):
+        live[v] = _aval_bytes(v.aval)
+    cur = sum(live.values())
+    peak = cur
+    for i, eqn in enumerate(jaxpr.eqns):
+        inner_extra = 0
+        for sub in _sub_jaxprs(eqn):
+            sub_inputs = sum(
+                _aval_bytes(v.aval) for v in (*sub.invars, *sub.constvars)
+            )
+            inner_extra = max(inner_extra, peak_live_bytes(sub) - sub_inputs)
+        for v in eqn.outvars:
+            if isinstance(v, jcore.Var) and v not in live:
+                live[v] = _aval_bytes(v.aval)
+                cur += live[v]
+        peak = max(peak, cur + max(inner_extra, 0))
+        for v in eqn.invars:
+            if (
+                isinstance(v, jcore.Var)
+                and last_use.get(v) == i
+                and v not in outset
+                and v in live
+            ):
+                cur -= live.pop(v)
+    return peak
+
+
+def dtype_violations(jaxpr, path: str) -> list:
+    """AUD003 findings: f64 avals anywhere; int8 avals consumed by a
+    primitive outside the movement/decode set."""
+    import numpy as np
+    from jax._src import core as jcore
+
+    out = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            prim = eqn.primitive.name
+            for v in (*eqn.invars, *eqn.outvars):
+                aval = getattr(v, "aval", None)
+                dt = getattr(aval, "dtype", None)
+                if dt is None:
+                    continue
+                if dt == np.float64:
+                    out.append(
+                        AuditFailure(
+                            "AUD003", path,
+                            f"f64 aval at primitive `{prim}` — silent double "
+                            f"promotion doubles every table and intermediate",
+                            64, 32,
+                        )
+                    )
+            for v in eqn.invars:
+                aval = getattr(v, "aval", None)
+                dt = getattr(aval, "dtype", None)
+                if dt is not None and dt == np.int8 and (
+                    prim not in budgets.INT8_ALLOWED_PRIMITIVES
+                ):
+                    out.append(
+                        AuditFailure(
+                            "AUD003", path,
+                            f"int8 operand consumed by `{prim}` — quantized "
+                            f"rows may only move (gather/slice/reshape) and "
+                            f"decode (convert_element_type); arithmetic "
+                            f"belongs after the decode",
+                            1, 0,
+                        )
+                    )
+            for sub in _sub_jaxprs(eqn):
+                walk(sub)
+
+    walk(jaxpr)
+    # dedupe (the same breach shows once per aval otherwise)
+    seen, uniq = set(), []
+    for f in out:
+        key = (f.code, f.path, f.message)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(f)
+    return uniq
+
+
+# -- live normalization probe -------------------------------------------------
+
+
+def live_normalization_probe() -> list:
+    """Push the denormalized static variants through the REAL jitted entry
+    point on a tiny index under a RetraceGuard: after one warm call per
+    distinct program, the redundant axes must compile nothing new. The
+    dynamic counterpart of the static compile-key count — both watch the
+    same contract, through :mod:`repro.analysis.retrace_guard`."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api.index import Index
+    from repro.engine import pipeline
+
+    key = jax.random.PRNGKey(0)
+    data = jax.random.uniform(key, (64, 4), jnp.float32)
+    cfg = _audit_config("theta", "f32")
+    cfg = dataclasses.replace(cfg, d=4, K=3, L=2, max_candidates=8)
+    index = Index.build(key, data, cfg)
+    q = jnp.zeros((2, 4), jnp.float32)
+    w = jnp.ones((2, 4), jnp.float32)
+
+    def call(mode, n_probes, impl, alpha):
+        pipeline.query(
+            index.state, None, None, q, w, cfg, k=3, mode=mode,
+            n_probes=n_probes, max_flips=2, impl=impl, screen_alpha=alpha,
+        )
+
+    # warm one program per genuinely-distinct point
+    call("probe", 1, "auto", 0.0)
+    call("multiprobe", 4, "auto", 0.0)
+    call("exact", 1, "auto", 0.0)
+    guard = RetraceGuard()
+    guard.snapshot()
+    # redundant static variants — every one must hit the warm cache
+    call("probe", 8, "auto", 0.0)      # probe ignores n_probes
+    call("probe", 1, "auto", 2.0)      # f32 ignores screen_alpha
+    call("multiprobe", 4, "gather", 0.0)  # non-probe ignores impl
+    call("exact", 8, "gather", 2.0)    # exact ignores all of them
+    try:
+        guard.assert_no_retrace(context="the live normalization probe")
+    except AssertionError as e:
+        return [
+            AuditFailure(
+                "AUD002", "live-probe",
+                f"denormalized static variants compiled new programs: {e}",
+                guard.cache_size(), guard.baseline,
+            )
+        ]
+    return []
+
+
+# -- the audit ----------------------------------------------------------------
+
+
+def run_audit(
+    inject: Optional[str] = None,
+    golden: Optional[dict] = None,
+    live_probe: bool = True,
+) -> dict:
+    """Trace the lattice, check every budget, and return the report dict
+    (``report["ok"]`` is the gate verdict; ``report["failures"]`` name
+    each breach with its code, path, and measured-vs-budget numbers)."""
+    import jax
+
+    if inject not in (None, "memory", "retrace"):
+        raise ValueError(
+            f"inject must be None, 'memory', or 'retrace'; got {inject!r}"
+        )
+    import jax.numpy as jnp
+
+    g = budgets.AUDIT_GEOMETRY
+    indexes = build_audit_indexes()
+    queries = jnp.zeros((g["b"], g["d"]), jnp.float32)
+    weights = jnp.ones((g["b"], g["d"]), jnp.float32)
+    points = enumerate_points()
+
+    # --- compile-key cardinality over the raw lattice
+    normalized = inject != "retrace"
+    keys: dict = {}
+    for p in points:
+        k = compile_key(p, indexes[(p.family, p.storage)], queries, weights,
+                        normalized=normalized)
+        keys.setdefault(k, []).append(p)
+    failures: list = []
+    n_keys = len(keys)
+    if n_keys > budgets.RETRACE_BUDGET:
+        # name an axis that failed to fold: two raw points sharing a
+        # normalized key but split across raw keys
+        example = ""
+        if not normalized:
+            by_norm: dict = {}
+            for p in points:
+                nk = compile_key(p, indexes[(p.family, p.storage)], queries,
+                                 weights, normalized=True)
+                by_norm.setdefault(nk, set()).add(
+                    compile_key(p, indexes[(p.family, p.storage)], queries,
+                                weights, normalized=False)
+                )
+            split = next((v for v in by_norm.values() if len(v) > 1), None)
+            if split:
+                variants = sorted(str(s[1][2:]) for s in split)[:2]
+                example = (
+                    f"; e.g. one program now compiles per static variant "
+                    f"{' vs '.join(variants)}"
+                )
+        failures.append(
+            AuditFailure(
+                "AUD002", "lattice",
+                f"compile-key cardinality {n_keys} exceeds the declared "
+                f"retrace budget {budgets.RETRACE_BUDGET} — a static axis "
+                f"is not folded by normalize_static_args{example}",
+                n_keys, budgets.RETRACE_BUDGET,
+            )
+        )
+    elif n_keys < budgets.RETRACE_BUDGET and golden is not None:
+        failures.append(
+            AuditFailure(
+                "AUD004", "lattice",
+                f"compile-key cardinality {n_keys} under budget "
+                f"{budgets.RETRACE_BUDGET} — a lattice path disappeared; "
+                f"update budgets.RETRACE_BUDGET and the golden if intended",
+                n_keys, budgets.RETRACE_BUDGET,
+            )
+        )
+
+    # --- per-program traces (one representative per distinct key)
+    paths = []
+    worst = ("", 0)
+    for key_, pts in sorted(keys.items(), key=lambda kv: kv[1][0].name):
+        rep = pts[0]
+        closed = trace_point(
+            rep, indexes[(rep.family, rep.storage)], queries, weights,
+            inject=inject if inject == "memory" else None,
+        )
+        peak = peak_live_bytes(closed.jaxpr)
+        dvs = dtype_violations(closed.jaxpr, rep.name)
+        failures += dvs
+        paths.append(
+            {
+                "name": rep.name,
+                "peak_live_bytes": int(peak),
+                "eqns": len(closed.jaxpr.eqns),
+                "dtype_ok": not dvs,
+                "raw_variants": len(pts),
+            }
+        )
+        if peak > worst[1]:
+            worst = (rep.name, peak)
+        if peak > budgets.MEMORY_ENVELOPE_BYTES:
+            failures.append(
+                AuditFailure(
+                    "AUD001", rep.name,
+                    f"peak live intermediates {peak / 2**20:.1f} MiB exceed "
+                    f"the {budgets.MEMORY_ENVELOPE_BYTES / 2**20:.0f} MiB "
+                    f"memory envelope — a (b, L·P·C, cap)-class "
+                    f"materialization reached the traced path",
+                    peak, budgets.MEMORY_ENVELOPE_BYTES,
+                )
+            )
+
+    # --- golden diff (same-backend only; trace shapes differ across
+    # backends because kernel dispatch branches on jax.default_backend())
+    backend = jax.default_backend()
+    if golden is not None and golden.get("backend") == backend:
+        gpaths = golden.get("paths", {})
+        for row in paths:
+            want = gpaths.get(row["name"])
+            if want is None:
+                failures.append(
+                    AuditFailure(
+                        "AUD004", row["name"],
+                        "path not in the golden budget — regenerate with "
+                        "--write-golden if this lattice point is intended",
+                        row["peak_live_bytes"], 0,
+                    )
+                )
+                continue
+            lo = want * (1 - budgets.GOLDEN_REL_TOL)
+            hi = want * (1 + budgets.GOLDEN_REL_TOL)
+            if not (lo <= row["peak_live_bytes"] <= hi):
+                failures.append(
+                    AuditFailure(
+                        "AUD004", row["name"],
+                        f"peak live bytes drifted beyond "
+                        f"±{budgets.GOLDEN_REL_TOL:.0%} of the golden "
+                        f"({want} bytes) — review, then --write-golden",
+                        row["peak_live_bytes"], want,
+                    )
+                )
+        for name in gpaths:
+            if not any(r["name"] == name for r in paths):
+                failures.append(
+                    AuditFailure(
+                        "AUD004", name,
+                        "golden path no longer traced — a lattice point "
+                        "disappeared; regenerate the golden if intended",
+                        0, gpaths[name],
+                    )
+                )
+        gkeys = golden.get("compile_keys")
+        if gkeys is not None and gkeys != n_keys and n_keys <= budgets.RETRACE_BUDGET:
+            failures.append(
+                AuditFailure(
+                    "AUD004", "lattice",
+                    f"compile-key count changed vs golden ({gkeys})",
+                    n_keys, gkeys,
+                )
+            )
+
+    if live_probe and inject is None:
+        failures += live_normalization_probe()
+
+    return {
+        "version": 1,
+        "backend": backend,
+        "geometry": dict(g),
+        "inject": inject,
+        "compile_keys": {
+            "count": n_keys,
+            "budget": budgets.RETRACE_BUDGET,
+            "raw_points": len(points),
+        },
+        "memory": {
+            "worst_path": worst[0],
+            "max_peak_live_bytes": int(worst[1]),
+            "envelope_bytes": budgets.MEMORY_ENVELOPE_BYTES,
+        },
+        "paths": paths,
+        "failures": [f.to_dict() for f in failures],
+        "ok": not failures,
+    }
+
+
+def golden_from_report(report: dict) -> dict:
+    return {
+        "backend": report["backend"],
+        "compile_keys": report["compile_keys"]["count"],
+        "paths": {
+            row["name"]: row["peak_live_bytes"] for row in report["paths"]
+        },
+    }
+
+
+def load_golden(path=None) -> Optional[dict]:
+    path = path or budgets.GOLDEN_PATH
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None

@@ -1,0 +1,424 @@
+"""Layer 1 of the trace-contract analyzer: a custom AST lint pass.
+
+Eight repo-specific rules (stable ``RPR0xx`` codes) enforcing the
+trace-time invariants the jaxpr auditor (:mod:`repro.analysis.audit`)
+cannot see from a single trace — the conventions that keep the engine's
+one-compiled-program-per-lattice-point and ``ids == -1 ⇔ dists == +inf``
+contracts true *as the code is edited*, not just on the paths the auditor
+happens to enumerate:
+
+  RPR001  tracer-branch        Python ``if``/``while``/ternary/``assert``
+                               branching on a jnp/jax.lax expression inside
+                               trace-reachable modules (engine, kernels,
+                               core, quant) — under jit this is a
+                               ConcretizationTypeError at best, a silent
+                               trace-time constant at worst.
+  RPR002  host-sync            ``.item()`` / ``.block_until_ready()`` /
+                               ``jax.device_get`` / ``np.asarray`` /
+                               ``np.array`` / ``float(...)`` over call
+                               results on the engine/kernel hot path —
+                               each one is a device→host round trip that
+                               serializes the dispatch stream.
+  RPR003  distance-fill        float literals ≥ 1e30 anywhere, or
+                               ``jnp.full``-style fills ≥ 1e6 — distance
+                               padding must be ``jnp.inf`` exactly or the
+                               sentinel contract (and every downstream
+                               ``isfinite`` check) silently breaks.
+  RPR004  id-sentinel          negative integer literals other than ``-1``
+                               used as fills or compared against — the id
+                               sentinel is ``-1``, everywhere.
+  RPR005  jit-static-unhashable  ``jax.jit(static_argnames=...)`` naming a
+                               parameter whose default is a list/dict/set
+                               display — hashing fails on first call with
+                               the default.
+  RPR006  import-time-jnp      module-scope jnp/jax.random/jax.lax calls —
+                               array computation at import time allocates
+                               on whatever backend initializes first and
+                               runs before test/serving setup can configure
+                               platforms.
+  RPR007  pallas-outside-kernels  ``pl.pallas_call`` / pallas imports
+                               outside ``repro/kernels`` — kernels live in
+                               one audited package, everything else goes
+                               through the ``ops`` dispatch wrappers.
+  RPR008  private-jit-poke     ``._cache_size`` outside ``repro/analysis``
+                               — use :mod:`repro.analysis.retrace_guard`.
+
+Findings are suppressed line-by-line with an *explained* inline allowlist::
+
+    if float(p_l2(mid, W)) > p:  # repro: allow[RPR001] host-side bisection, never traced
+
+(the comment may also sit on the line above). An allow marker with no
+reason is itself a finding (``RPR000``) — the gate's contract is zero
+*unexplained* findings, not zero comments.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable
+
+# rule catalog: code -> (slug, one-line description). Stable — codes are
+# referenced from allowlist comments and CI logs; never renumber.
+RULES = {
+    "RPR000": ("unexplained-allow", "allowlist marker without a reason"),
+    "RPR001": ("tracer-branch", "Python control flow on a traced jnp expression"),
+    "RPR002": ("host-sync", "device→host sync on the engine/kernel hot path"),
+    "RPR003": ("distance-fill", "distance padding that is not jnp.inf"),
+    "RPR004": ("id-sentinel", "id sentinel literal that is not -1"),
+    "RPR005": ("jit-static-unhashable", "static_argnames param with unhashable default"),
+    "RPR006": ("import-time-jnp", "module-import-time jnp computation"),
+    "RPR007": ("pallas-outside-kernels", "pl.pallas_call outside repro/kernels"),
+    "RPR008": ("private-jit-poke", "._cache_size poke outside repro.analysis"),
+}
+
+# module scopes (path fragments relative to the repo / src root)
+_TRACED_SCOPES = ("repro/engine/", "repro/kernels/", "repro/core/", "repro/quant/")
+_HOT_SCOPES = ("repro/engine/", "repro/kernels/")
+_KERNEL_SCOPE = "repro/kernels/"
+_ANALYSIS_SCOPE = "repro/analysis/"
+
+# jnp/jax calls that return static metadata, not traced arrays
+_STATIC_METADATA_FNS = {
+    "jnp.dtype", "jnp.result_type", "jnp.promote_types", "jnp.issubdtype",
+    "jnp.finfo", "jnp.iinfo", "jax.dtypes.issubdtype", "jax.eval_shape",
+}
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\[(RPR\d{3})\]\s*(.*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} [{RULES[self.code][0]}] {self.message}"
+
+
+def _fn_name(node: ast.expr) -> str:
+    """Dotted name of a call target ('jnp.full', 'pl.pallas_call', ...)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_traced_call(call: ast.Call) -> bool:
+    name = _fn_name(call.func)
+    if name in _STATIC_METADATA_FNS:
+        return False
+    return name.startswith(("jnp.", "jax.numpy.", "jax.lax."))
+
+
+def _neg_int(node: ast.expr):
+    """The value of a negative-int literal (-2, -999, ...), else None."""
+    if (
+        isinstance(node, ast.UnaryOp)
+        and isinstance(node.op, ast.USub)
+        and isinstance(node.operand, ast.Constant)
+        and type(node.operand.value) is int
+    ):
+        return -node.operand.value
+    if isinstance(node, ast.Constant) and type(node.value) is int and node.value < 0:
+        return node.value
+    return None
+
+
+def _float_const(node: ast.expr):
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        node = node.operand
+    if isinstance(node, ast.Constant) and type(node.value) is float:
+        return node.value
+    return None
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, relpath: str):
+        self.relpath = relpath.replace("\\", "/")
+        self.findings: list[Finding] = []
+        self._depth = 0  # FunctionDef/ClassDef nesting (0 = module scope)
+
+    def _in(self, scopes) -> bool:
+        return any(s in self.relpath for s in scopes)
+
+    def emit(self, node: ast.AST, code: str, message: str) -> None:
+        self.findings.append(Finding(self.relpath, node.lineno, code, message))
+
+    # -- scope tracking ------------------------------------------------------
+    def visit_FunctionDef(self, node):
+        self._check_jit_statics(node)
+        self._depth += 1
+        self.generic_visit(node)
+        self._depth -= 1
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_ClassDef(self, node):
+        self._depth += 1
+        self.generic_visit(node)
+        self._depth -= 1
+
+    # -- RPR001: control flow on traced values -------------------------------
+    def _check_branch_test(self, test: ast.expr, kind: str) -> None:
+        if not self._in(_TRACED_SCOPES):
+            return
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Call) and _is_traced_call(sub):
+                self.emit(
+                    test,
+                    "RPR001",
+                    f"{kind} test calls `{_fn_name(sub.func)}` — branching on a "
+                    f"traced value fails (or constant-folds) under jit; use "
+                    f"jnp.where / lax.cond, or hoist the decision to a static arg",
+                )
+                return
+
+    def visit_If(self, node):
+        self._check_branch_test(node.test, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node):
+        self._check_branch_test(node.test, "while")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node):
+        self._check_branch_test(node.test, "ternary")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node):
+        self._check_branch_test(node.test, "assert")
+        self.generic_visit(node)
+
+    # -- call-shaped rules ---------------------------------------------------
+    def visit_Call(self, node):
+        name = _fn_name(node.func)
+
+        # RPR002: host syncs on the hot path
+        if self._in(_HOT_SCOPES):
+            if isinstance(node.func, ast.Attribute) and node.func.attr in (
+                "item", "block_until_ready",
+            ) and not node.args:
+                self.emit(
+                    node, "RPR002",
+                    f"`.{node.func.attr}()` forces a device→host sync on the "
+                    f"hot path — keep results on device through the tail",
+                )
+            elif name in ("np.asarray", "np.array", "np.frombuffer", "jax.device_get"):
+                self.emit(
+                    node, "RPR002",
+                    f"`{name}` materializes device arrays on host inside the "
+                    f"engine/kernel hot path",
+                )
+            elif name in ("float", "int", "bool") and node.args and isinstance(
+                node.args[0], (ast.Call, ast.Subscript)
+            ):
+                self.emit(
+                    node, "RPR002",
+                    f"`{name}(...)` over an expression result is a host sync "
+                    f"when the argument is a traced array",
+                )
+
+        # RPR003/RPR004: jnp.full-style fills
+        if name in ("jnp.full", "jnp.full_like", "np.full", "np.full_like"):
+            fill = node.args[1] if len(node.args) > 1 else None
+            for kw in node.keywords:
+                if kw.arg == "fill_value":
+                    fill = kw.value
+            if fill is not None:
+                fv = _float_const(fill)
+                if fv is not None and abs(fv) >= 1e6:
+                    self.emit(
+                        node, "RPR003",
+                        f"distance padding `{name}(..., {fv!r})` — pad with "
+                        f"jnp.inf so invalid slots satisfy dists == +inf",
+                    )
+                iv = _neg_int(fill)
+                if iv is not None and iv != -1:
+                    self.emit(
+                        node, "RPR004",
+                        f"id fill `{name}(..., {iv})` — the id sentinel is -1 "
+                        f"(ids == -1 ⇔ dists == +inf)",
+                    )
+
+        # RPR007: pallas outside kernels/
+        if name.endswith("pallas_call") and not self._in((_KERNEL_SCOPE,)):
+            self.emit(
+                node, "RPR007",
+                "pl.pallas_call outside repro/kernels — kernels live in one "
+                "audited package; dispatch through repro.kernels.ops",
+            )
+
+        # RPR006: import-time jnp computation
+        if self._depth == 0 and _is_traced_call(node):
+            self.emit(
+                node, "RPR006",
+                f"module-import-time `{name}` call — arrays allocated at "
+                f"import bind the backend before JAX_PLATFORMS/test setup "
+                f"runs; build them lazily inside a function",
+            )
+
+        self.generic_visit(node)
+
+    # -- RPR003 (bare pseudo-inf literals) -----------------------------------
+    def visit_Constant(self, node):
+        if type(node.value) is float and abs(node.value) >= 1e30:  # repro: allow[RPR003] the rule's own detection threshold
+            self.emit(
+                node, "RPR003",
+                f"pseudo-infinity literal {node.value!r} — use jnp.inf (the "
+                f"sentinel contract checks +inf exactly)",
+            )
+        self.generic_visit(node)
+
+    # -- RPR004 (sentinel comparisons) ---------------------------------------
+    def visit_Compare(self, node):
+        for comp in node.comparators:
+            iv = _neg_int(comp)
+            if iv is not None and iv != -1:
+                self.emit(
+                    node, "RPR004",
+                    f"comparison against {iv} — the id sentinel is -1; a "
+                    f"second magic negative id silently escapes every "
+                    f"`ids == -1` mask",
+                )
+        self.generic_visit(node)
+
+    # -- RPR008: private jit-cache pokes -------------------------------------
+    def visit_Attribute(self, node):
+        if node.attr == "_cache_size" and not self._in((_ANALYSIS_SCOPE,)):
+            self.emit(
+                node, "RPR008",
+                "private `._cache_size` poke — use "
+                "repro.analysis.retrace_guard (RetraceGuard / engine_cache_size)",
+            )
+        self.generic_visit(node)
+
+    # -- pallas imports (RPR007) ---------------------------------------------
+    def visit_Import(self, node):
+        for a in node.names:
+            if "experimental.pallas" in a.name and not self._in((_KERNEL_SCOPE,)):
+                self.emit(node, "RPR007", f"pallas import `{a.name}` outside repro/kernels")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node):
+        mod = node.module or ""
+        if not self._in((_KERNEL_SCOPE,)):
+            for a in node.names:
+                full = f"{mod}.{a.name}"
+                if "experimental.pallas" in full:
+                    self.emit(
+                        node, "RPR007",
+                        f"pallas import `{full}` outside repro/kernels",
+                    )
+                    break
+        self.generic_visit(node)
+
+    # -- RPR005: unhashable static_argnames defaults -------------------------
+    def _check_jit_statics(self, fn) -> None:
+        for dec in fn.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            target = _fn_name(dec.func)
+            is_jit = target in ("jax.jit", "jit")
+            is_partial_jit = target in ("functools.partial", "partial") and dec.args and _fn_name(
+                dec.args[0]
+            ) in ("jax.jit", "jit")
+            if not (is_jit or is_partial_jit):
+                continue
+            static_names: set[str] = set()
+            static_nums: set[int] = set()
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    for sub in ast.walk(kw.value):
+                        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                            static_names.add(sub.value)
+                if kw.arg == "static_argnums":
+                    for sub in ast.walk(kw.value):
+                        if isinstance(sub, ast.Constant) and isinstance(sub.value, int):
+                            static_nums.add(sub.value)
+            args = fn.args.args + fn.args.kwonlyargs
+            defaults = dict(
+                zip([a.arg for a in reversed(fn.args.args)], reversed(fn.args.defaults))
+            )
+            defaults.update(
+                {
+                    a.arg: d
+                    for a, d in zip(fn.args.kwonlyargs, fn.args.kw_defaults)
+                    if d is not None
+                }
+            )
+            for i, a in enumerate(args):
+                if a.arg in static_names or i in static_nums:
+                    d = defaults.get(a.arg)
+                    if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+                        self.emit(
+                            fn, "RPR005",
+                            f"static arg `{a.arg}` of jitted `{fn.name}` has an "
+                            f"unhashable {type(d).__name__.lower()} default — "
+                            f"the compile-key hash raises on first defaulted call",
+                        )
+
+
+def _collect_allows(src: str, relpath: str) -> tuple[dict, list[Finding]]:
+    """Parse `# repro: allow[RPRxxx] reason` markers. Returns
+    ({line: {code, ...}}, findings for reason-less markers)."""
+    allows: dict[int, set[str]] = {}
+    bad: list[Finding] = []
+    for lineno, text in enumerate(src.splitlines(), start=1):
+        m = _ALLOW_RE.search(text)
+        if not m:
+            continue
+        code, reason = m.group(1), m.group(2).strip()
+        if not reason:
+            # a reasonless marker suppresses NOTHING — the finding it meant
+            # to silence still fires, plus the RPR000 for the bare marker
+            bad.append(
+                Finding(
+                    relpath, lineno, "RPR000",
+                    f"allow[{code}] without a reason — the gate's contract is "
+                    f"zero UNEXPLAINED findings; say why this line is exempt",
+                )
+            )
+        else:
+            allows.setdefault(lineno, set()).add(code)
+    return allows, bad
+
+
+def lint_source(src: str, relpath: str) -> list[Finding]:
+    """Lint one module's source text; relpath scopes the per-package rules."""
+    tree = ast.parse(src)
+    linter = _Linter(relpath)
+    linter.visit(tree)
+    allows, findings = _collect_allows(src, relpath)
+
+    def allowed(f: Finding) -> bool:
+        return any(
+            f.code in allows.get(ln, ()) for ln in (f.line, f.line - 1)
+        )
+
+    findings += [f for f in linter.findings if not allowed(f)]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.code))
+
+
+def lint_paths(paths: Iterable[str | Path], root: str | Path | None = None) -> list[Finding]:
+    """Lint every ``*.py`` under ``paths``; findings carry paths relative to
+    ``root`` (default: each argument's parent)."""
+    findings: list[Finding] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        base = Path(root) if root is not None else p.parent
+        for f in files:
+            try:
+                rel = f.relative_to(base)
+            except ValueError:
+                rel = f
+            findings += lint_source(f.read_text(), str(rel))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.code))

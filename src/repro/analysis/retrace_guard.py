@@ -1,0 +1,109 @@
+"""The retrace guard: the ONE sanctioned way to watch a jit cache.
+
+The engine's sublinear-time story assumes one compiled program per
+(mode, family, storage, α, shape) point — a steady-state retrace means a
+static argument or shape leaked past the normalization in
+:func:`repro.engine.pipeline.query` and the serving path is silently
+paying compile latency per request. Before this module, every consumer
+that wanted to check that invariant reached into jax's private
+``fn._cache_size()`` (the broker, the engine tests, ad-hoc debugging),
+which is exactly the kind of scattered private poke the static-analysis
+gate exists to retire: lint rule ``RPR008`` now flags ``_cache_size``
+everywhere outside this package, and the broker, the jaxpr auditor, and
+the tests all share these helpers instead.
+
+Usage::
+
+    guard = RetraceGuard()          # watches the shared engine entry point
+    guard.snapshot()                # after warmup
+    ...serve...
+    guard.assert_no_retrace()       # raises RetraceError naming the growth
+
+    with RetraceGuard(fn=my_jitted) as g:   # scoped form
+        my_jitted(x)                        # first call may compile
+        g.snapshot()
+        my_jitted(x)                        # must not compile again
+
+``RetraceError`` subclasses ``AssertionError`` so existing callers (and
+pytest.raises clauses) written against the broker's old assertion keep
+working unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+
+class RetraceError(AssertionError):
+    """A watched jit cache grew after its snapshot — something retraced."""
+
+
+def engine_cache_size() -> int:
+    """Compiled-program count of the shared engine entry point
+    (``repro.engine.pipeline._query_jit``) — every facade, legacy shim,
+    planner rung, and shard body funnels through it, so this one number
+    is the whole query surface's compile-key cardinality."""
+    from repro.engine import pipeline as _pipeline
+
+    return cache_size(_pipeline._query_jit)
+
+
+def cache_size(fn) -> int:
+    """Compiled-program count of any ``jax.jit``-wrapped callable."""
+    return fn._cache_size()  # repro: allow[RPR008] the defining helper — every other module goes through here
+
+
+class RetraceGuard:
+    """Snapshot a jit cache and assert it never grows afterwards.
+
+    Args:
+      fn: the jitted callable to watch. ``None`` (default) watches the
+        shared engine entry point via :func:`engine_cache_size`.
+    """
+
+    def __init__(self, fn: Optional[Callable] = None):
+        self._size: Callable[[], int] = (
+            engine_cache_size if fn is None else lambda: cache_size(fn)
+        )
+        self._snapshot: Optional[int] = None
+
+    def cache_size(self) -> int:
+        """Current compiled-program count of the watched cache."""
+        return self._size()
+
+    @property
+    def snapshotted(self) -> bool:
+        return self._snapshot is not None
+
+    @property
+    def baseline(self) -> Optional[int]:
+        """The snapshotted size (None before :meth:`snapshot`)."""
+        return self._snapshot
+
+    def snapshot(self) -> int:
+        """Record the current cache size as the no-retrace baseline."""
+        self._snapshot = self._size()
+        return self._snapshot
+
+    def assert_no_retrace(self, context: str = "") -> None:
+        """Raise :class:`RetraceError` if the cache grew since snapshot."""
+        if self._snapshot is None:
+            raise RuntimeError(
+                "RetraceGuard.assert_no_retrace needs snapshot() first"
+            )
+        now = self._size()
+        if now > self._snapshot:
+            where = f" during {context}" if context else ""
+            raise RetraceError(
+                f"jit cache grew {self._snapshot} -> {now}{where}: a "
+                f"shape or static-argument combination not covered by the "
+                f"snapshot reached the compiled entry point"
+            )
+
+    def __enter__(self) -> "RetraceGuard":
+        self.snapshot()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.assert_no_retrace()

@@ -26,7 +26,6 @@ from __future__ import annotations
 import os
 import re
 import shutil
-import tempfile
 import threading
 from typing import Any, Optional
 

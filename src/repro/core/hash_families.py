@@ -29,7 +29,6 @@ path; `repro.kernels.ops` provides the Pallas production path.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Literal
 
 import jax

@@ -189,11 +189,12 @@ def invert_p_l2(p: float, W: float, r_hi: float = 1e9) -> float:
     if not (0.0 < p < 1.0):
         raise ValueError(f"invert_p_l2: p must be in (0, 1), got {p}")
     lo, hi = 1e-12, float(r_hi)
-    if float(p_l2(jnp.asarray(hi), W)) > p:  # p unreachably small even at r_hi
+    # p unreachably small even at r_hi
+    if float(p_l2(jnp.asarray(hi), W)) > p:  # repro: allow[RPR001] host-side bisection solver, docstring forbids jit
         return hi
     for _ in range(200):
         mid = 0.5 * (lo + hi)
-        if float(p_l2(jnp.asarray(mid), W)) > p:
+        if float(p_l2(jnp.asarray(mid), W)) > p:  # repro: allow[RPR001] host-side bisection solver, docstring forbids jit
             lo = mid
         else:
             hi = mid

@@ -233,6 +233,41 @@ def dispatch(
     )
 
 
+def normalize_static_args(
+    cfg: IndexConfig | None,
+    storage_dtype,
+    k: int,
+    mode: str,
+    n_probes: int,
+    max_flips: int,
+    impl: str,
+    screen_alpha: float,
+) -> tuple:
+    """Canonicalize the static arguments of a query BEFORE the jit
+    compile-key lookup: every static a mode does not read is forced to its
+    neutral value, so two calls that would trace the same program always
+    share one executable. This is THE retrace contract of the engine —
+    ``query`` applies it on every call and the :mod:`repro.analysis`
+    auditor enumerates the public entry-point lattice through this same
+    function to check the compile-key cardinality against the declared
+    budget (a new static axis that this normalization does not fold shows
+    up there as a retrace-budget breach at review time, not as compile
+    stalls in production).
+
+    Returns the normalized ``(cfg, k, mode, n_probes, max_flips, impl,
+    screen_alpha)`` tuple.
+    """
+    if mode != "multiprobe":
+        n_probes, max_flips = 1, 0
+    if mode != "probe":
+        impl = "auto"
+    if mode == "exact":
+        cfg = None
+    if mode == "exact" or jnp.dtype(storage_dtype) == jnp.dtype(jnp.float32):
+        screen_alpha = 0.0
+    return cfg, k, mode, n_probes, max_flips, impl, float(screen_alpha)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "k", "mode", "n_probes", "max_flips", "impl", "screen_alpha"),
@@ -273,23 +308,19 @@ def query(
     screen_alpha: float = 0.0,
 ) -> QueryResult:
     """Jitted ``dispatch`` — the one compiled entry point every consumer
-    shares. Static args a mode does not read are normalized before the
-    compile-key lookup (probe ignores n_probes/max_flips, multiprobe and
-    exact ignore impl, exact ignores cfg entirely, and ``screen_alpha``
-    is forced to 0 whenever screening cannot apply: f32-stored tables and
-    exact scans), so two calls that trace the same program always reuse
-    one executable — facade or legacy shim alike, whatever defaults their
-    spec happened to carry."""
-    if mode != "multiprobe":
-        n_probes, max_flips = 1, 0
-    if mode != "probe":
-        impl = "auto"
-    if mode == "exact":
-        cfg = None
-    if mode == "exact" or state.data.dtype == jnp.float32:
-        screen_alpha = 0.0
+    shares. Static args a mode does not read are normalized by
+    :func:`normalize_static_args` before the compile-key lookup (probe
+    ignores n_probes/max_flips, multiprobe and exact ignore impl, exact
+    ignores cfg entirely, and ``screen_alpha`` is forced to 0 whenever
+    screening cannot apply: f32-stored tables and exact scans), so two
+    calls that trace the same program always reuse one executable —
+    facade or legacy shim alike, whatever defaults their spec happened to
+    carry."""
+    cfg, k, mode, n_probes, max_flips, impl, screen_alpha = normalize_static_args(
+        cfg, state.data.dtype, k, mode, n_probes, max_flips, impl, screen_alpha
+    )
     return _query_jit(
         state, delta, tombstones, queries, weights, cfg,
         k=k, mode=mode, n_probes=n_probes, max_flips=max_flips, impl=impl,
-        screen_alpha=float(screen_alpha),
+        screen_alpha=screen_alpha,
     )

@@ -17,7 +17,6 @@ benchmarking (``chunked`` only exists for the fused top-k ops).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import alsh_project as _proj
 from repro.kernels import gather_rerank as _gr

@@ -9,11 +9,7 @@ memory/cost analyses. No arrays are ever allocated at production size.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import models

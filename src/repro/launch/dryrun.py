@@ -123,7 +123,6 @@ def parse_collectives(hlo_text: str) -> dict:
             got = _line_collective_bytes(line)
             if got:
                 op, b = got
-                key = (op,)
                 local[name][op] = local[name].get(op, 0.0) + b
                 local[name][f"n_{op}"] = local[name].get(f"n_{op}", 0) + 1
             wm = WHILE_RE.search(line)

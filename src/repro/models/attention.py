@@ -17,17 +17,16 @@ serving layout.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import layers
 from repro.models.sharding import BATCH, FSDP, TP, maybe_shard
 
-NEG_INF = -1e30
+NEG_INF = -1e30  # repro: allow[RPR003] additive attention-mask logit floor, not a wl1 distance fill (softmax needs finite)
 
 
 # ---------------------------------------------------------------------------

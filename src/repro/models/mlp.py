@@ -3,9 +3,7 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models import layers
 from repro.models.sharding import BATCH, FSDP, TP, maybe_shard
 

@@ -22,14 +22,13 @@ PartitionSpecs (FSDP over "data", TP/EP over "model").
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, SHAPES
+from repro.configs.base import ModelConfig
 from repro.models import attention, layers, mlp, moe, ssm
 from repro.models.sharding import BATCH, FSDP, TP, maybe_shard
 

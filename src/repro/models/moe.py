@@ -25,7 +25,7 @@ from jax.sharding import PartitionSpec
 
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.models import layers, mlp
-from repro.models.sharding import BATCH, EP, FSDP, TP, get_mesh, maybe_shard, resolve_entry
+from repro.models.sharding import BATCH, EP, FSDP, get_mesh, maybe_shard, resolve_entry
 
 
 def init_moe(key, cfg: ModelConfig, mcfg: MoEConfig, dtype) -> dict:
@@ -155,7 +155,6 @@ def moe_ffn_ep_shardmap(params: dict, x: jax.Array, cfg: ModelConfig,
     C = _capacity(T, E, mcfg.capacity_factor)
 
     def local_fn(router_w, we_up, we_gate, we_down, xl):
-        Bl = xl.shape[0]
         if gather_tokens:
             xl = jax.lax.all_gather(xl, ep_axis, axis=0, tiled=True)  # (Bl*ep, S, dm)
         Bg = xl.shape[0]

@@ -26,7 +26,6 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro import ckpt
 from repro.configs.base import ArchBundle

@@ -19,7 +19,6 @@ model size.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

@@ -19,7 +19,6 @@ from repro import models
 from repro.configs.base import ModelConfig, RetrievalConfig
 from repro.models.sharding import BATCH, get_mesh, sharding
 from repro.runtime import retrieval as rt
-from repro.runtime.train_step import batch_pytree_specs
 
 
 def make_prefill_step(mcfg: ModelConfig, cache_len: Optional[int] = None):

@@ -10,8 +10,7 @@ for the grads — verified against the dry-run HLO in EXPERIMENTS.md §Dry-run.
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import models, optim
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.models.sharding import BATCH, batch_spec, get_mesh, sharding
+from repro.models.sharding import BATCH, get_mesh, sharding
 
 
 class TrainState(NamedTuple):

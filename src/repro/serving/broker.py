@@ -40,9 +40,9 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.analysis.retrace_guard import RetraceGuard
 from repro.api.index import Index
 from repro.api.spec import PlannedSpec, QualitySpec
-from repro.engine import pipeline as _pipeline
 from repro.serving.chaos import ShardSet
 from repro.serving.slo import DegradationController, LatencyTracker, SLOConfig
 
@@ -132,7 +132,7 @@ class Broker:
         self.buckets = _bucket_ladder(config.max_batch)
         self.tracker = LatencyTracker(slo)
         self.controller = DegradationController(slo, len(self.ladder))
-        self._cache_size_after_warmup: Optional[int] = None
+        self._retrace_guard = RetraceGuard()  # watches the shared engine jit
         if config.warmup:
             self.warmup()
 
@@ -159,21 +159,18 @@ class Broker:
             for spec in self.ladder:
                 for t in self._targets():
                     t.query(q, w, spec)
-        self._cache_size_after_warmup = _pipeline._query_jit._cache_size()
+        self._retrace_guard.snapshot()
 
     def assert_no_retrace(self) -> None:
         """Raise if the engine jit cache grew since warmup (a shape or
-        static-arg leak in the bucket/rung plumbing)."""
-        if self._cache_size_after_warmup is None:
+        static-arg leak in the bucket/rung plumbing). Delegates to the
+        shared :class:`repro.analysis.retrace_guard.RetraceGuard` — the
+        error is a ``RetraceError`` (an ``AssertionError`` subclass)."""
+        if not self._retrace_guard.snapshotted:
             raise RuntimeError("assert_no_retrace needs warmup() first")
-        now = _pipeline._query_jit._cache_size()
-        if now > self._cache_size_after_warmup:
-            raise AssertionError(
-                f"engine retraced during serving: jit cache grew "
-                f"{self._cache_size_after_warmup} -> {now}; a bucket or rung "
-                f"reached the engine with a shape/static-arg combination not "
-                f"covered by warmup"
-            )
+        self._retrace_guard.assert_no_retrace(
+            context="serving (a bucket or rung not covered by warmup)"
+        )
 
     # -- the service loop ----------------------------------------------------
     def _execute(self, q: np.ndarray, w: np.ndarray, spec: PlannedSpec, now_s: float):

@@ -1,0 +1,340 @@
+"""Tests for the trace-contract analyzer (repro.analysis).
+
+Layer 1 (lint): every RPR rule fires on a minimal bad snippet and stays
+silent on the clean counterpart; the inline allowlist suppresses findings
+only when it carries a reason (RPR000 otherwise).
+
+Layer 2 (audit): the HEAD lattice passes every budget and round-trips
+through the golden file; two seeded regressions — the pre-PR5 dense
+delta-match materialization and an unfolded static axis — fail with the
+named AUD001/AUD002 diagnostics, measured-vs-budget numbers included.
+
+The audit index builds cost ~45 s, so they run ONCE in a module fixture
+and every ``run_audit`` call reuses them via monkeypatch.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    RetraceError,
+    RetraceGuard,
+    cache_size,
+    engine_cache_size,
+    lint_source,
+)
+from repro.analysis import audit, budgets
+from repro.analysis.lint import RULES
+
+ENGINE = "repro/engine/mod.py"  # traced + hot scope
+KERNELS = "repro/kernels/mod.py"
+OUTSIDE = "repro/serving/mod.py"  # neither traced nor hot
+
+
+def codes(src, relpath=ENGINE):
+    return [f.code for f in lint_source(src, relpath)]
+
+
+# ---------------------------------------------------------------------------
+# lint: one bad + one clean snippet per rule
+# ---------------------------------------------------------------------------
+
+
+def test_rpr001_tracer_branch_fires_and_clean():
+    bad = "def f(x):\n    if jnp.sum(x) > 0:\n        return x\n    return -x\n"
+    assert codes(bad) == ["RPR001"]
+    # static branch: clean
+    assert codes("def f(x, flag):\n    if flag:\n        return x\n    return -x\n") == []
+    # same traced branch OUTSIDE the traced scopes: clean
+    assert codes(bad, OUTSIDE) == []
+
+
+def test_rpr001_while_ternary_assert():
+    assert codes("def f(x):\n    while jnp.any(x):\n        x = x - 1\n") == ["RPR001"]
+    assert codes("def f(x):\n    y = 1 if jnp.all(x) else 2\n    return y\n") == ["RPR001"]
+    assert codes("def f(x):\n    assert jnp.isfinite(x).all()\n") == ["RPR001"]
+
+
+def test_rpr002_host_sync_fires_and_clean():
+    assert codes("def f(x):\n    return x.item()\n") == ["RPR002"]
+    assert codes("def f(x):\n    return np.asarray(x)\n") == ["RPR002"]
+    assert codes("def f(x):\n    return float(g(x))\n") == ["RPR002"]
+    # off the hot path (serving may sync): clean
+    assert codes("def f(x):\n    return x.item()\n", OUTSIDE) == []
+    # float over a plain name is not flagged (usually a python scalar)
+    assert codes("def f(x):\n    return float(x)\n") == []
+
+
+def test_rpr003_distance_fill_fires_and_clean():
+    assert codes("def f():\n    return jnp.full((2,), 1e9)\n") == ["RPR003"]
+    assert codes("def f(x):\n    return x + 1e38\n") == ["RPR003"]
+    assert codes("def f():\n    return jnp.full((2,), jnp.inf)\n") == []
+
+
+def test_rpr004_id_sentinel_fires_and_clean():
+    assert codes("def f():\n    return jnp.full((2,), -2)\n") == ["RPR004"]
+    assert codes("def f(ids):\n    return ids == -7\n") == ["RPR004"]
+    assert codes("def f(ids):\n    return jnp.full((2,), -1), ids == -1\n") == []
+
+
+def test_rpr005_unhashable_static_default():
+    bad = (
+        "@functools.partial(jax.jit, static_argnames=('opts',))\n"
+        "def f(x, opts=[]):\n    return x\n"
+    )
+    assert codes(bad) == ["RPR005"]
+    ok = (
+        "@functools.partial(jax.jit, static_argnames=('opts',))\n"
+        "def f(x, opts=()):\n    return x\n"
+    )
+    assert codes(ok) == []
+
+
+def test_rpr006_import_time_jnp_fires_and_clean():
+    assert codes("X = jnp.arange(4)\n") == ["RPR006"]
+    assert codes("def f():\n    return jnp.arange(4)\n") == []
+    # static metadata at module scope is fine (quant codec tables do this)
+    assert codes("DT = jnp.dtype('int8')\n") == []
+
+
+def test_rpr007_pallas_confined_to_kernels():
+    call = "def f(k):\n    return pl.pallas_call(k, out_shape=None)\n"
+    imp = "from jax.experimental import pallas as pl\n"
+    assert codes(call) == ["RPR007"]
+    assert codes(imp) == ["RPR007"]
+    assert codes(call, KERNELS) == []
+    assert codes(imp, KERNELS) == []
+
+
+def test_rpr008_private_jit_poke():
+    assert codes("def f(fn):\n    return fn._cache_size()\n") == ["RPR008"]
+    assert codes("def f(fn):\n    return fn._cache_size()\n", "repro/analysis/x.py") == []
+
+
+def test_allowlist_needs_reason_and_suppresses():
+    bad = "def f(x):\n    if jnp.sum(x) > 0:  # repro: allow[RPR001]\n        return x\n"
+    assert codes(bad) == ["RPR000", "RPR001"]  # reasonless marker suppresses nothing
+    ok = "def f(x):\n    if jnp.sum(x) > 0:  # repro: allow[RPR001] host-only helper\n        return x\n"
+    assert codes(ok) == []
+    # marker on the line above also covers the finding
+    above = (
+        "def f(x):\n"
+        "    # repro: allow[RPR001] host-only helper\n"
+        "    if jnp.sum(x) > 0:\n"
+        "        return x\n"
+    )
+    assert codes(above) == []
+    # wrong code does not suppress
+    wrong = "def f(x):\n    if jnp.sum(x) > 0:  # repro: allow[RPR002] wrong code\n        return x\n"
+    assert codes(wrong) == ["RPR001"]
+
+
+def test_rule_catalog_is_stable():
+    assert set(RULES) == {f"RPR00{i}" for i in range(9)}
+
+
+def test_repo_tree_is_clean():
+    """The gate's contract on HEAD: zero unexplained findings in src/repro."""
+    from pathlib import Path
+
+    from repro.analysis import lint_paths
+
+    root = Path(audit.__file__).resolve().parents[2]  # .../src
+    assert lint_paths([root / "repro"], root=root) == []
+
+
+# ---------------------------------------------------------------------------
+# retrace guard
+# ---------------------------------------------------------------------------
+
+
+def test_retrace_guard_watches_a_jitted_fn():
+    calls = jax.jit(lambda x: x * 2)
+    guard = RetraceGuard(fn=calls)
+    with pytest.raises(RuntimeError):
+        guard.assert_no_retrace()  # snapshot first
+    calls(jnp.ones((2,)))
+    guard.snapshot()
+    assert guard.snapshotted and guard.baseline == 1
+    calls(jnp.ones((2,)))  # same shape: cached
+    guard.assert_no_retrace()
+    calls(jnp.ones((3,)))  # new shape: compiles
+    with pytest.raises(RetraceError, match="jit cache grew 1 -> 2"):
+        guard.assert_no_retrace(context="shape change")
+    assert issubclass(RetraceError, AssertionError)
+
+
+def test_retrace_guard_context_manager():
+    fn = jax.jit(lambda x: x + 1)
+    fn(jnp.ones((2,)))
+    with RetraceGuard(fn=fn):
+        fn(jnp.ones((2,)))
+    with pytest.raises(RetraceError):
+        with RetraceGuard(fn=fn):
+            fn(jnp.ones((4,)))
+    assert cache_size(fn) == 2
+    assert engine_cache_size() >= 0  # shared engine counter resolves
+
+
+# ---------------------------------------------------------------------------
+# audit: peak-bytes / dtype walkers (unit level, no index builds)
+# ---------------------------------------------------------------------------
+
+
+def test_peak_live_bytes_sees_large_intermediate():
+    def f(x):
+        y = jnp.zeros((512, 512), jnp.float32) + x
+        return y.sum()
+
+    closed = jax.make_jaxpr(f)(jnp.float32(0.0))
+    peak = audit.peak_live_bytes(closed.jaxpr)
+    assert peak >= 512 * 512 * 4
+
+
+def test_peak_live_bytes_recurses_into_subjaxprs():
+    def inner(x):
+        return (jnp.zeros((256, 256), jnp.float32) + x).sum()
+
+    def f(x):
+        return jax.jit(inner)(x)
+
+    closed = jax.make_jaxpr(f)(jnp.float32(0.0))
+    assert audit.peak_live_bytes(closed.jaxpr) >= 256 * 256 * 4
+
+
+def test_dtype_violations_flag_int8_arithmetic():
+    def bad(x):
+        return x + x  # int8 add — quantized-domain arithmetic
+
+    closed = jax.make_jaxpr(bad)(jnp.zeros((4,), jnp.int8))
+    found = audit.dtype_violations(closed.jaxpr, "unit")
+    assert any(f.code == "AUD003" and "int8" in f.message for f in found)
+
+    def ok(x, idx):
+        rows = jnp.take(x, idx, axis=0)  # move...
+        return rows.astype(jnp.float32) * 2.0  # ...then decode, then compute
+
+    closed = jax.make_jaxpr(ok)(
+        jnp.zeros((8, 4), jnp.int8), jnp.zeros((3,), jnp.int32)
+    )
+    assert audit.dtype_violations(closed.jaxpr, "unit") == []
+
+
+# ---------------------------------------------------------------------------
+# audit: the full lattice (one shared index build)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def audit_indexes():
+    return audit.build_audit_indexes()
+
+
+@pytest.fixture()
+def cached_build(monkeypatch, audit_indexes):
+    monkeypatch.setattr(audit, "build_audit_indexes", lambda: audit_indexes)
+
+
+def test_audit_head_passes_and_golden_round_trips(cached_build):
+    golden = audit.load_golden()
+    assert golden is not None, "golden_budget.json must be checked in"
+    report = audit.run_audit(golden=golden, live_probe=True)
+    assert report["failures"] == []
+    assert report["ok"]
+    assert report["compile_keys"]["count"] == budgets.RETRACE_BUDGET
+    assert report["compile_keys"]["raw_points"] > report["compile_keys"]["count"]
+    assert report["memory"]["max_peak_live_bytes"] <= budgets.MEMORY_ENVELOPE_BYTES
+    # round trip: a golden regenerated from this report is the one on disk
+    # (same backend only — trace shapes differ across backends)
+    if golden["backend"] == report["backend"]:
+        assert audit.golden_from_report(report) == golden
+
+
+def test_seeded_memory_regression_fails_with_named_diagnostic(
+    cached_build, monkeypatch
+):
+    sub = [
+        p for p in audit.enumerate_points()
+        if p.view == "segmented" and p.family == "theta" and p.storage == "f32"
+        and p.mode == "probe"
+    ]
+    assert sub
+    monkeypatch.setattr(audit, "enumerate_points", lambda: sub)
+    report = audit.run_audit(inject="memory", live_probe=False)
+    assert not report["ok"]
+    breaches = [f for f in report["failures"] if f["code"] == "AUD001"]
+    assert breaches, report["failures"]
+    for f in breaches:
+        assert f["path"].startswith("theta/f32/segmented/probe")
+        assert f["measured"] > f["budget"] == budgets.MEMORY_ENVELOPE_BYTES
+        assert "memory envelope" in f["message"]
+    # the dense (b, L·P·C, cap) tensor dwarfs the envelope by design
+    assert max(f["measured"] for f in breaches) > 4 * budgets.MEMORY_ENVELOPE_BYTES
+
+
+def test_seeded_retrace_regression_fails_with_named_diagnostic(
+    cached_build, monkeypatch, audit_indexes
+):
+    sub = [
+        p for p in audit.enumerate_points()
+        if p.family == "theta" and p.storage == "f32" and p.view == "sealed"
+    ]
+    q = jnp.zeros((budgets.AUDIT_GEOMETRY["b"], budgets.AUDIT_GEOMETRY["d"]))
+    w = jnp.ones_like(q)
+    folded = len(
+        {
+            audit.compile_key(p, audit_indexes[(p.family, p.storage)], q, w)
+            for p in sub
+        }
+    )
+    assert folded < len(sub)  # the sublattice carries redundant axes
+    monkeypatch.setattr(audit, "enumerate_points", lambda: sub)
+    monkeypatch.setattr(budgets, "RETRACE_BUDGET", folded)
+    report = audit.run_audit(inject="retrace", live_probe=False)
+    assert not report["ok"]
+    (breach,) = [f for f in report["failures"] if f["code"] == "AUD002"]
+    assert breach["measured"] == len(sub) > breach["budget"] == folded
+    assert "normalize_static_args" in breach["message"]
+    assert "static variant" in breach["message"]  # names an unfolded axis
+
+
+def test_audit_rejects_unknown_injection():
+    with pytest.raises(ValueError, match="inject"):
+        audit.run_audit(inject="bogus")
+
+
+def test_golden_drift_is_reported(cached_build):
+    golden = audit.load_golden()
+    if golden["backend"] != jax.default_backend():
+        pytest.skip("golden traced on a different backend")
+    skewed = {
+        "backend": golden["backend"],
+        "compile_keys": golden["compile_keys"],
+        "paths": {k: v * 2 for k, v in golden["paths"].items()},
+    }
+    report = audit.run_audit(golden=skewed, live_probe=False)
+    drift = [f for f in report["failures"] if f["code"] == "AUD004"]
+    assert drift and all("golden" in f["message"] for f in drift)
+
+
+# ---------------------------------------------------------------------------
+# normalization contract (static level, no builds)
+# ---------------------------------------------------------------------------
+
+
+def test_normalize_static_args_folds_redundant_axes():
+    from repro.engine.pipeline import normalize_static_args
+
+    cfg = audit._audit_config("theta", "f32")
+    f32, i8 = jnp.float32, jnp.int8
+    # probe ignores n_probes/max_flips/alpha(f32)
+    a = normalize_static_args(cfg, f32, 3, "probe", 8, 3, "auto", 2.0)
+    b = normalize_static_args(cfg, f32, 3, "probe", 1, 0, "auto", 0.0)
+    assert a == b
+    # exact drops cfg, impl, alpha entirely
+    a = normalize_static_args(cfg, i8, 3, "exact", 8, 3, "gather", 2.0)
+    assert a == (None, 3, "exact", 1, 0, "auto", 0.0)
+    # int8 keeps a real alpha; multiprobe folds impl but keeps probes
+    a = normalize_static_args(cfg, i8, 3, "multiprobe", 4, 2, "gather", 2.0)
+    assert a == (cfg, 3, "multiprobe", 4, 2, "auto", 2.0)

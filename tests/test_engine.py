@@ -370,22 +370,22 @@ def test_mode_irrelevant_static_args_share_compiled_program(rng):
     """Static args a mode does not read (n_probes/max_flips in probe mode,
     cfg in exact mode) are normalized before the compile-key lookup — the
     facade and the legacy shims hit ONE executable per traced program."""
+    from repro.analysis import RetraceGuard
     from repro.core.index import query_exact_segmented
-    from repro.engine.pipeline import _query_jit
 
     data, extra, q, w = _problem(rng)
     imm = _index_for(rng, data, extra, "theta", "fresh")
     r1 = imm.query(q, w, QuerySpec(k=3))  # spec default n_probes=8/max_flips=3
-    n_after = _query_jit._cache_size()
-    r2 = imm.query(q, w, QuerySpec(k=3, n_probes=4, max_flips=1))
-    assert _query_jit._cache_size() == n_after  # no second compile
+    with RetraceGuard() as guard:
+        r2 = imm.query(q, w, QuerySpec(k=3, n_probes=4, max_flips=1))
+        guard.assert_no_retrace(context="probe-mode n_probes variant")
     _assert_bit_identical(r1, r2)
 
     mut = _index_for(rng, data, extra, "theta", "delta")
     mut.query(q, w, QuerySpec(k=3, mode="exact"))  # facade passes real cfg
-    n_after = _query_jit._cache_size()
-    query_exact_segmented(mut.state, mut.delta, mut.tombstones, q, w, k=3)  # cfg=None
-    assert _query_jit._cache_size() == n_after
+    with RetraceGuard() as guard:
+        query_exact_segmented(mut.state, mut.delta, mut.tombstones, q, w, k=3)  # cfg=None
+        guard.assert_no_retrace(context="legacy exact shim vs facade")
 
 
 def test_engine_no_retrace_across_fill_levels(rng):
@@ -407,10 +407,12 @@ def test_engine_no_retrace_across_fill_levels(rng):
         index = jdel(index, jnp.asarray([i * 3], jnp.int32))
         jq(index, q, w)
         jmp(index, q, w)
-    assert jq._cache_size() == 1
-    assert jmp._cache_size() == 1
-    assert jins._cache_size() == 1
-    assert jdel._cache_size() == 1
+    from repro.analysis import cache_size
+
+    assert cache_size(jq) == 1
+    assert cache_size(jmp) == 1
+    assert cache_size(jins) == 1
+    assert cache_size(jdel) == 1
 
 
 # ---------------------------------------------------------------------------

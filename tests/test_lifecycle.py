@@ -194,9 +194,11 @@ def test_lifecycle_ops_jit_without_retrace(rng):
         index, _ = jins(index, extra[i * 8 : (i + 1) * 8])
         index = jdel(index, jnp.asarray([i * 3], jnp.int32))
         jq(index, q, w)
-    assert jq._cache_size() == 1
-    assert jins._cache_size() == 1
-    assert jdel._cache_size() == 1
+    from repro.analysis import cache_size
+
+    assert cache_size(jq) == 1
+    assert cache_size(jins) == 1
+    assert cache_size(jdel) == 1
 
 
 def test_index_with_delta_crosses_jit_boundary(rng):

@@ -12,7 +12,9 @@ the mutable-lifecycle rows to ``BENCH_updates.json``, the planner
 adherence rows to ``BENCH_planner.json``, the serving-broker rows
 (trace latency/throughput, degradation recall, chaos coverage) to
 ``BENCH_serving.json``, and the autotuner rows (prior-vs-calibrated
-plan speedup + adherence) to ``BENCH_tuner.json`` (cwd) — one record per row plus
+plan speedup + adherence) to ``BENCH_tuner.json``, and the adaptive-probing
+rows (tables probed + streamed-vs-monolithic speedup) to
+``BENCH_earlyexit.json`` (cwd) — one record per row plus
 backend/device metadata — so successive PRs leave a machine-readable perf
 trajectory.
 """
@@ -37,12 +39,14 @@ MODULES = [
     "serving_bench",  # broker: traces, degradation recall, chaos coverage
     "tuner_bench",  # offline autotuner: prior-vs-calibrated speedup + adherence
     "quant_bench",  # quantized tier: memory ratio, latency, recall delta
+    "earlyexit_bench",  # adaptive probing: tables probed + speedup vs full L
     "analysis_bench",  # static-analysis gate: lint/trace cost + budget numbers
     "roofline",  # dry-run roofline summaries (if results exist)
 ]
 
 # convenience aliases accepted by --only/--skip
-ALIASES = {"quant": "quant_bench", "analysis": "analysis_bench"}
+ALIASES = {"quant": "quant_bench", "analysis": "analysis_bench",
+           "earlyexit": "earlyexit_bench"}
 
 # benchmark modules whose rows also snapshot to a machine-readable artifact
 SNAPSHOTS = {
@@ -52,6 +56,7 @@ SNAPSHOTS = {
     "serving_bench": "BENCH_serving.json",
     "tuner_bench": "BENCH_tuner.json",
     "quant_bench": "BENCH_quant.json",
+    "earlyexit_bench": "BENCH_earlyexit.json",
     "analysis_bench": "BENCH_analysis.json",
 }
 

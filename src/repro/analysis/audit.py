@@ -2,7 +2,8 @@
 
 Traces the full public query entry-point lattice — mode (probe /
 multiprobe / exact) × view (sealed / segmented) × storage codec (f32 /
-bf16 / int8) × screen-α × ladder rungs (probe windows, probe counts) —
+bf16 / int8) × screen-α × ladder rungs (probe windows, probe counts) ×
+early-exit streaming knobs (early_exit / exit_group / exit_slack) —
 through the REAL :func:`repro.engine.pipeline.dispatch`, via
 ``jax.make_jaxpr`` so nothing executes, then checks the declared budgets
 (:mod:`repro.analysis.budgets`):
@@ -65,6 +66,9 @@ class AuditPoint:
     max_flips: int
     impl: str
     screen_alpha: float
+    early_exit: bool = False
+    exit_group: int = 0
+    exit_slack: float = 0.0
 
     @property
     def name(self) -> str:
@@ -75,6 +79,8 @@ class AuditPoint:
             parts.append(f"p{self.n_probes}")
         if self.screen_alpha:
             parts.append(f"a{int(self.screen_alpha)}")
+        if self.early_exit:
+            parts.append(f"e{self.exit_group}")
         return "/".join(parts)
 
 
@@ -174,6 +180,38 @@ def enumerate_points() -> list:
                     AuditPoint(family, storage, view, "exact", window, 8, 3,
                                "auto", alphas[-1])
                 )
+            # early exit — one GENUINE streamed program per mode (probe
+            # G=4 over L=8 windows; theta multiprobe G=8 over 8·8), plus
+            # the fold axes: knobs with early off must fold to the
+            # baseline program, a group covering the whole lattice IS the
+            # baseline program, early over an active screen folds to the
+            # screened program, and early on exact folds entirely.
+            points.append(
+                AuditPoint(family, storage, view, "probe", full_w, 1, 0,
+                           "auto", 0.0, True, 4, 0.1)
+            )
+            points.append(  # knobs ignored while early_exit=False
+                AuditPoint(family, storage, view, "probe", full_w, 1, 0,
+                           "auto", 0.0, False, 16, 0.5)
+            )
+            points.append(  # exit_group >= L·P — single group, must fold
+                AuditPoint(family, storage, view, "probe", full_w, 1, 0,
+                           "auto", 0.0, True, g["L"], 0.1)
+            )
+            if family == "theta":
+                points.append(
+                    AuditPoint(family, storage, view, "multiprobe", full_w,
+                               8, 3, "auto", 0.0, True, 8, 0.1)
+                )
+            if alphas[-1] > 0.0:  # streaming under an active screen folds
+                points.append(
+                    AuditPoint(family, storage, view, "probe", full_w, 1, 0,
+                               "auto", alphas[-1], True, 4, 0.1)
+                )
+            points.append(  # early on exact folds with everything else
+                AuditPoint(family, storage, view, "exact", full_w, 8, 3,
+                           "auto", alphas[-1], True, 4, 0.1)
+            )
     return points
 
 
@@ -206,16 +244,17 @@ def compile_key(point: AuditPoint, index, queries, weights, normalized: bool = T
     state, delta, tomb = _view_args(index, point.view)
     statics = (
         cfg, g["k"], point.mode, point.n_probes, point.max_flips, point.impl,
-        point.screen_alpha,
+        point.screen_alpha, point.early_exit, point.exit_group,
+        point.exit_slack,
     )
     if normalized:
-        cfg_n, k, mode, n_probes, max_flips, impl, alpha = (
+        statics = tuple(
             pipeline.normalize_static_args(
                 cfg, state.data.dtype, g["k"], point.mode, point.n_probes,
                 point.max_flips, point.impl, point.screen_alpha,
+                point.early_exit, point.exit_group, point.exit_slack,
             )
         )
-        statics = (cfg_n, k, mode, n_probes, max_flips, impl, alpha)
     sig = _shape_signature((state, delta, tomb, queries, weights))
     return (sig, statics)
 
@@ -239,7 +278,8 @@ def trace_point(point: AuditPoint, index, queries, weights, inject: Optional[str
             state, delta, tomb, q, w, cfg,
             k=g["k"], mode=point.mode, n_probes=point.n_probes,
             max_flips=point.max_flips, impl=point.impl,
-            screen_alpha=point.screen_alpha,
+            screen_alpha=point.screen_alpha, early_exit=point.early_exit,
+            exit_group=point.exit_group, exit_slack=point.exit_slack,
         )
         if inject == "memory" and delta is not None:
             slots = cfg.L * point.n_probes * cfg.max_candidates
@@ -405,16 +445,18 @@ def live_normalization_probe() -> list:
     q = jnp.zeros((2, 4), jnp.float32)
     w = jnp.ones((2, 4), jnp.float32)
 
-    def call(mode, n_probes, impl, alpha):
+    def call(mode, n_probes, impl, alpha, early=False, group=0, slack=0.0):
         pipeline.query(
             index.state, None, None, q, w, cfg, k=3, mode=mode,
             n_probes=n_probes, max_flips=2, impl=impl, screen_alpha=alpha,
+            early_exit=early, exit_group=group, exit_slack=slack,
         )
 
     # warm one program per genuinely-distinct point
     call("probe", 1, "auto", 0.0)
     call("multiprobe", 4, "auto", 0.0)
     call("exact", 1, "auto", 0.0)
+    call("probe", 1, "auto", 0.0, early=True, group=1, slack=0.1)  # L=2: 2 groups
     guard = RetraceGuard()
     guard.snapshot()
     # redundant static variants — every one must hit the warm cache
@@ -422,6 +464,10 @@ def live_normalization_probe() -> list:
     call("probe", 1, "auto", 2.0)      # f32 ignores screen_alpha
     call("multiprobe", 4, "gather", 0.0)  # non-probe ignores impl
     call("exact", 8, "gather", 2.0)    # exact ignores all of them
+    call("probe", 1, "auto", 0.0, group=7, slack=0.5)  # knobs dead while off
+    call("probe", 1, "auto", 0.0, early=True, group=2)  # one group == off
+    call("probe", 8, "auto", 0.0, early=True, group=1, slack=0.1)  # n_probes folds
+    call("exact", 1, "auto", 0.0, early=True, group=1, slack=0.1)  # exact folds
     try:
         guard.assert_no_retrace(context="the live normalization probe")
     except AssertionError as e:

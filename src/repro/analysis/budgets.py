@@ -54,8 +54,11 @@ AUDIT_GEOMETRY = {
 
 # Distinct compiled programs the full audited lattice may cost (exact —
 # the lattice is deterministic, so any drift is a real new/removed
-# program). Measured on HEAD: 104 raw caller combinations fold to 50.
-RETRACE_BUDGET = 50
+# program). Measured on HEAD: 146 raw caller combinations fold to 64 —
+# the 14 keys beyond the pre-streaming 50 are the genuine early-exit
+# programs (probe+stream per build × view, multiprobe+stream per theta
+# storage × view); every other early-exit knob combination must fold.
+RETRACE_BUDGET = 64
 
 # Peak live intermediate bytes per traced path. Worst legitimate HEAD path
 # is the segmented exact scan at ~18.3 MiB peak (the tombstoned

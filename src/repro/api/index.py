@@ -444,6 +444,9 @@ class Index:
             max_flips=qspec.max_flips,
             impl=qspec.impl,
             screen_alpha=qspec.screen_alpha,
+            early_exit=qspec.early_exit,
+            exit_group=qspec.exit_group,
+            exit_slack=qspec.exit_slack,
         )
 
     def explain(self, queries: jax.Array, weights: jax.Array, spec=QuerySpec()):
@@ -535,6 +538,14 @@ class Index:
             rows_reranked=rows_reranked,
             bytes_gathered=bytes_gathered,
             table_bytes=self.table_bytes,
+            tables_probed=(
+                np.asarray(res.tables_probed, dtype=np.int32)
+                if res.tables_probed is not None else None
+            ),
+            stop_reason=(
+                np.asarray(res.stop_reason, dtype=np.int32)
+                if res.stop_reason is not None else None
+            ),
         )
 
     # -- mutation (functional: every method returns a new Index) ------------

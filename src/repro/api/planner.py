@@ -86,6 +86,12 @@ def _prng(build_key, seed: int) -> jax.Array:
     return jax.random.fold_in(key, seed)
 
 
+def _n_windows(cfg, plan) -> int:
+    """Size of the (table, probe-rank) window lattice ``plan`` visits —
+    the ``expected_tables`` value of a plan that never exits early."""
+    return cfg.L * (plan.n_probes if plan.mode == "multiprobe" else 1)
+
+
 @dataclasses.dataclass
 class QueryReport:
     """Per-query diagnostics from ``Index.explain`` — the resolved plan,
@@ -127,6 +133,12 @@ class QueryReport:
         bandwidth the storage codec is saving.
       table_bytes: resident bytes of the row tables (main + delta payload
         + scales); compare across codecs for the memory ratio.
+      tables_probed: (b,) probe windows the streamed early-exit tail
+        visited per query (== tables when P = 1; None when the query ran
+        the monolithic tail — early exit off or folded away).
+      stop_reason: (b,) int32 early-exit stop code per query — 0 the
+        stream exhausted every group, 1 geometric stop, 2 Eq 25/27
+        confidence stop (None with the monolithic tail).
     """
 
     spec: object
@@ -143,6 +155,8 @@ class QueryReport:
     rows_reranked: np.ndarray | None = None
     bytes_gathered: np.ndarray | None = None
     table_bytes: int | None = None
+    tables_probed: np.ndarray | None = None
+    stop_reason: np.ndarray | None = None
 
     def to_dict(self) -> dict:
         """JSON-able summary (arrays reduced to batch means) for logging."""
@@ -169,6 +183,18 @@ class QueryReport:
                 if self.bytes_gathered is not None else None
             ),
             "table_bytes": self.table_bytes,
+            "mean_tables_probed": (
+                float(np.mean(self.tables_probed))
+                if self.tables_probed is not None else None
+            ),
+            "stop_reasons": (
+                {
+                    "exhausted": int(np.sum(self.stop_reason == 0)),
+                    "geometric": int(np.sum(self.stop_reason == 1)),
+                    "confidence": int(np.sum(self.stop_reason == 2)),
+                }
+                if self.stop_reason is not None else None
+            ),
         }
 
 
@@ -409,8 +435,16 @@ class Planner:
     # with (in addition to every unscreened rung): keep 2k, keep 4k
     _SCREEN_ALPHAS = (2.0, 4.0)
 
+    # streamed rungs must have at least this many exit groups to be worth
+    # a separate compiled program (one group IS the monolithic tail and
+    # normalize_static_args folds it away)
+    _EXIT_GROUP = 8
+    _MIN_EXIT_GROUPS = 2
+
     # -- query-time: empirical calibration ----------------------------------
-    def _plan_ladder(self, cfg: IndexConfig, k: int) -> list[PlannedSpec]:
+    def _plan_ladder(
+        self, cfg: IndexConfig, k: int, exit_slack: float = 0.0
+    ) -> list[PlannedSpec]:
         """The candidate execution plans, cheapest-intent first.
 
         On an f32-stored index this list is EXACTLY the pre-quantization
@@ -418,7 +452,14 @@ class Planner:
         bit-identical). Quantized storage crosses each rung with the
         ``_SCREEN_ALPHAS`` screening factors, so calibration measures the
         proxy screen's recall cost on the real query path and α becomes a
-        planner-chosen knob like the window or the probe count."""
+        planner-chosen knob like the window or the probe count.
+
+        With ``exit_slack`` > 0 every unscreened rung whose window lattice
+        spans at least ``_MIN_EXIT_GROUPS`` exit groups additionally gets an
+        early-exit twin (``exit_slack`` = the QualitySpec's fail_prob — the
+        same per-query miss budget the Thm 1 table solve accepts), so
+        calibration measures the streamed tail's real recall/tables-probed
+        trade on this index instead of assuming it."""
         C = cfg.max_candidates
         windows = sorted({max(C >> s, min(C, max(2 * k, 16))) for s in (3, 2, 1, 0)})
         ladder = [
@@ -435,10 +476,21 @@ class Planner:
                             max_flips=max_flips, max_candidates=C,
                         )
                     )
+        if exit_slack > 0.0:
+            ladder += [
+                dataclasses.replace(
+                    rung, early_exit=True, exit_group=self._EXIT_GROUP,
+                    exit_slack=exit_slack,
+                )
+                for rung in list(ladder)
+                if cfg.L * rung.n_probes
+                >= self._MIN_EXIT_GROUPS * self._EXIT_GROUP
+            ]
         if cfg.storage != "f32":
             ladder += [
                 dataclasses.replace(rung, screen_alpha=alpha)
                 for rung in list(ladder)
+                if not rung.early_exit  # screening folds streaming off
                 for alpha in self._SCREEN_ALPHAS
             ]
         return ladder
@@ -449,10 +501,18 @@ class Planner:
         (every candidate at the compressed byte ratio — screening reads
         encoded rows, never decodes) plus the exact rerank of the
         ``ceil(k·α)`` survivors; that is what lets a screened rung undercut
-        its unscreened twin once the candidate pool is large."""
+        its unscreened twin once the candidate pool is large.
+
+        An early-exit rung scales the probe-slot term by its CALIBRATED
+        expected-tables-probed fraction (``plan.expected_tables`` over the
+        full L·P lattice) — the streamed tail only pays for the windows the
+        average query actually visits, which is what lets a worst-case-L
+        plan price like an average-case one."""
         from repro.quant import bytes_per_value
 
         slots = cfg.L * plan.n_probes * plan.max_candidates
+        if plan.early_exit and plan.expected_tables == plan.expected_tables:
+            slots *= min(1.0, plan.expected_tables / _n_windows(cfg, plan))
         if plan.screen_alpha:
             keep = max(plan.k, math.ceil(plan.k * plan.screen_alpha))
             ratio = bytes_per_value(cfg.storage) / 4.0
@@ -517,10 +577,22 @@ class Planner:
         success = self._operating_success(cfg, exact, ws)
 
         scored = []
-        for rung in self._plan_ladder(cfg, quality.k):
+        for rung in self._plan_ladder(cfg, quality.k, exit_slack=quality.fail_prob):
             res = index.query(qs, ws, rung)
             recall = float(recall_at_k(res.ids, exact.ids, quality.k))
             mean_cand = float(jnp.mean(res.n_candidates))
+            # stamp the expected-tables-probed BEFORE costing: measured on
+            # streamed rungs, == the full window lattice otherwise. Never
+            # leave the NaN field default in a memoized plan — NaN breaks
+            # the save/load equality contract (nan != nan after the JSON
+            # round-trip re-materializes the float).
+            rung = dataclasses.replace(
+                rung, expected_tables=(
+                    float(jnp.mean(res.tables_probed))
+                    if res.tables_probed is not None
+                    else float(_n_windows(cfg, rung))
+                )
+            )
             scored.append((rung, recall, mean_cand, self._plan_cost(cfg, rung, mean_cand)))
         return scored, success
 
@@ -656,6 +728,10 @@ class Planner:
             n_probes=entry["n_probes"] if entry["n_probes"] > 1 else 1,
             max_flips=entry["max_flips"] if entry["n_probes"] > 1 else 0,
             max_candidates=entry["window"],
+            # older tables predate the early-exit axes — default off
+            early_exit=bool(entry.get("early_exit", False)),
+            exit_group=int(entry.get("exit_group") or 8),
+            exit_slack=float(entry.get("exit_slack") or 0.0),
         )
         qs, ws, exact = self._calibration_sample(index, quality)
         res = index.query(qs, ws, rung)
@@ -672,6 +748,13 @@ class Planner:
             predicted_recall=recall,
             predicted_success=self._operating_success(cfg, exact, ws),
             expected_candidates=mean_cand,
+            expected_tables=(
+                float(jnp.mean(res.tables_probed))
+                if res.tables_probed is not None
+                # never memoize the NaN field default: nan != nan would
+                # break the save/load plan-equality contract
+                else float(_n_windows(cfg, rung))
+            ),
             provenance="prior",
         )
 

@@ -60,6 +60,22 @@ class QuerySpec:
         ignores it everywhere else (f32 storage and exact mode stay
         bit-identical to an unscreened query). Values in (0, 1) are
         rejected: they would screen away guaranteed top-k slots.
+      early_exit: stream the (L, P) probe windows through the engine a
+        group at a time and stop per query once the running top-k is
+        provably (geometric bound) or confidently (Eq 25/27 estimate at
+        the observed running radius vs ``exit_slack``) final. Off by
+        default; when off — or whenever the engine folds it off (exact
+        mode, an active quantized screen, or a lattice too small to split
+        into 2+ groups) — the query is bit-identical to the monolithic
+        tail.
+      exit_group: early-exit only — probe windows evaluated per streamed
+        group (trace-static; the loop runs ceil(L·P / exit_group) steps).
+      exit_slack: early-exit only — per-query miss-probability budget δ
+        for the confidence stop: a query stops once the Eq 25/27 estimate
+        says an unseen collision with a better-than-running-kth neighbour
+        has probability <= δ. 0.0 keeps only the provably-safe geometric
+        stop, so results stay bit-identical to ``early_exit=False`` while
+        still skipping work on degenerate (distance-0) hits.
     """
 
     k: int = 1
@@ -68,6 +84,9 @@ class QuerySpec:
     max_flips: int = 3
     impl: str = "auto"
     screen_alpha: float = 0.0
+    early_exit: bool = False
+    exit_group: int = 8
+    exit_slack: float = 0.0
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -100,6 +119,24 @@ class QuerySpec:
                     f"QuerySpec.max_flips must be a non-negative int, "
                     f"got {self.max_flips!r}"
                 )
+        if not isinstance(self.early_exit, bool):
+            raise ValueError(
+                f"QuerySpec.early_exit must be a bool, got {self.early_exit!r}"
+            )
+        if not isinstance(self.exit_group, int) or self.exit_group <= 0:
+            raise ValueError(
+                f"QuerySpec.exit_group must be a positive int, got {self.exit_group!r}"
+            )
+        if not (0.0 <= self.exit_slack < 1.0):
+            raise ValueError(
+                f"QuerySpec.exit_slack must be a miss-probability budget in "
+                f"[0, 1), got {self.exit_slack!r}"
+            )
+        if self.early_exit and self.mode == "exact":
+            raise ValueError(
+                "QuerySpec.early_exit does not apply to mode='exact' (the "
+                "streaming scan already visits every row exactly once)"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,6 +233,13 @@ class PlannedSpec:
         with (0.0 on f32-stored indexes — the ladder never proposes a
         screen there, keeping planned f32 queries bit-identical to the
         unscreened engine).
+      early_exit / exit_group / exit_slack: adaptive-probing knobs the
+        plan executes with (see :class:`QuerySpec`). Early-exit rungs set
+        ``exit_slack`` to the QualitySpec's ``fail_prob`` — the same
+        per-query miss budget the Thm 1 table-count solve already accepts.
+      expected_tables: mean probe windows actually visited per query on
+        the calibration sample (== L·P when the plan never exits early) —
+        the expected-tables-probed axis of the extended cost model.
       provenance: how the plan was resolved — "calibrated" (the full
         empirical ladder ran on this index) or "prior" (interpolated from
         an offline :mod:`repro.tuner` Pareto table and accepted after a
@@ -214,6 +258,10 @@ class PlannedSpec:
     predicted_success: float = float("nan")
     expected_candidates: float = float("nan")
     screen_alpha: float = 0.0
+    early_exit: bool = False
+    exit_group: int = 8
+    exit_slack: float = 0.0
+    expected_tables: float = float("nan")
     provenance: str = "calibrated"
 
     def __post_init__(self):
@@ -241,6 +289,18 @@ class PlannedSpec:
             raise ValueError(
                 f"PlannedSpec.max_flips must be a non-negative int, got {self.max_flips!r}"
             )
+        if not isinstance(self.early_exit, bool):
+            raise ValueError(
+                f"PlannedSpec.early_exit must be a bool, got {self.early_exit!r}"
+            )
+        if not isinstance(self.exit_group, int) or self.exit_group <= 0:
+            raise ValueError(
+                f"PlannedSpec.exit_group must be a positive int, got {self.exit_group!r}"
+            )
+        if not (0.0 <= self.exit_slack < 1.0):
+            raise ValueError(
+                f"PlannedSpec.exit_slack must be in [0, 1), got {self.exit_slack!r}"
+            )
 
     def to_query_spec(self) -> QuerySpec:
         """The mechanism-level spec this plan executes as."""
@@ -248,8 +308,14 @@ class PlannedSpec:
             return QuerySpec(
                 k=self.k, mode="multiprobe", n_probes=self.n_probes,
                 max_flips=self.max_flips, screen_alpha=self.screen_alpha,
+                early_exit=self.early_exit, exit_group=self.exit_group,
+                exit_slack=self.exit_slack,
             )
-        return QuerySpec(k=self.k, mode="probe", screen_alpha=self.screen_alpha)
+        return QuerySpec(
+            k=self.k, mode="probe", screen_alpha=self.screen_alpha,
+            early_exit=self.early_exit, exit_group=self.exit_group,
+            exit_slack=self.exit_slack,
+        )
 
     def effective_config(self, cfg):
         """``cfg`` with this plan's probe window applied (never wider than

@@ -155,11 +155,19 @@ class QueryResult(NamedTuple):
     iff ``ids == -1`` iff ``dists == +inf``. ``-1`` is the ONLY user-facing
     invalid sentinel — the internal candidate sentinels (``n``, ``n + C``)
     used by the probe/dedupe stages never escape a QueryResult.
+
+    ``tables_probed``/``stop_reason`` are populated only by the streamed
+    early-exit tail (None on the monolithic paths, keeping their pytree
+    structure unchanged). Stop-reason codes: 0 = exhausted every group,
+    1 = geometric stop (running kth distance provably unbeatable),
+    2 = confidence stop (Eq 25/27 miss estimate under the slack budget).
     """
 
     dists: jax.Array  # (b, k) ascending d_w^l1 (+inf where fewer than k found)
     ids: jax.Array  # (b, k) point ids (-1 where invalid)
     n_candidates: jax.Array  # (b,) unique candidates examined — sublinearity metric
+    tables_probed: jax.Array | None = None  # (b,) probe windows visited (streamed tail)
+    stop_reason: jax.Array | None = None  # (b,) int32 stop code (streamed tail)
 
 
 @jax.tree_util.register_pytree_node_class

@@ -49,13 +49,26 @@ def multiprobe_keys_for(
     cfg: IndexConfig,
     n_probes: int,
     max_flips: int,
+    with_ranks: bool = False,
 ) -> jax.Array:
     """The (b, L, P) query-directed probing sequence for a query batch —
     the query's own bucket key first, then perturbed keys in increasing
     flip-cost order. P may be clamped below ``n_probes`` by the family's
     reachable-subset count. Shared by the engine's key-enumeration stage,
     the planner's calibration pass, and ``Index.explain`` window
-    diagnostics."""
+    diagnostics.
+
+    With ``with_ranks=True`` returns ``(keys, ranks)`` where ``ranks`` is
+    the (b, L, P) int32 per-window probe-quality rank. The family contract
+    (``HashFamily.multiprobe_keys``: "most-likely first") makes the P-axis
+    position the rank — rank 0 is the query's own bucket, rank p the
+    (p+1)-th most likely perturbation — so ranks is the broadcast position
+    index. The streamed early-exit tail (repro.engine.stream) relies on
+    exactly this contract to visit windows in query-directed quality order
+    (all rank-0 windows across tables before any rank-1 window) instead of
+    table order; exposing it here keeps that assumption a tested API
+    property rather than engine folklore. ``with_ranks=False`` is the
+    original single-array return — bit-identical, nothing recomputed."""
     family = get_family(cfg.family)
     if not family.supports_multiprobe:
         raise ValueError(
@@ -66,7 +79,15 @@ def multiprobe_keys_for(
     b = queries.shape[0]
     qlevels = transforms.discretize(queries, cfg.space)
     proj = ops.alsh_project(qlevels, index.tables.folded, weights)  # (b, H)
-    return family.multiprobe_keys(proj.reshape(b, cfg.L, cfg.K), n_probes, max_flips)
+    keys = family.multiprobe_keys(proj.reshape(b, cfg.L, cfg.K), n_probes, max_flips)
+    if not with_ranks:
+        return keys
+    import jax.numpy as jnp
+
+    ranks = jnp.broadcast_to(
+        jnp.arange(keys.shape[2], dtype=jnp.int32)[None, None, :], keys.shape
+    )
+    return keys, ranks
 
 
 def query_multiprobe(

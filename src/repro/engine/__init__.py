@@ -24,7 +24,14 @@ of invariants (sentinels, tombstone semantics, dedupe counts).
 See DESIGN.md §8 for the block-shape and merge-semantics contract.
 """
 
-from repro.engine.pipeline import dispatch, execute, probe_keys, query, sources_for
+from repro.engine.pipeline import (
+    dispatch,
+    execute,
+    execute_streamed,
+    probe_keys,
+    query,
+    sources_for,
+)
 from repro.engine.sources import (
     CandidateSource,
     DeltaMatchSource,
@@ -39,6 +46,7 @@ __all__ = [
     "SortedTableSource",
     "dispatch",
     "execute",
+    "execute_streamed",
     "probe_keys",
     "query",
     "sources_for",

@@ -58,20 +58,32 @@ def probe_keys(
     n_probes: int = 8,
     max_flips: int = 3,
     impl: str = "auto",
+    with_ranks: bool = False,
 ) -> jax.Array:
     """Enumerate the (b, L, P) probing sequence of a query batch.
 
     mode="probe": each query's own bucket key per table (P = 1).
     mode="multiprobe": the query-directed perturbation sequence (P <=
     n_probes, clamped by the family's reachable-subset count).
+
+    ``with_ranks=True`` returns ``(keys, ranks)`` with ranks the (b, L, P)
+    int32 per-window probe-quality rank (P-axis position — the family emits
+    keys most-likely first; rank 0 is always the query's own bucket). The
+    streamed early-exit tail consumes this contract to visit windows
+    quality-major instead of table-major.
     """
     if mode == "multiprobe":
         from repro.core.multiprobe import multiprobe_keys_for
 
-        return multiprobe_keys_for(state, queries, weights, cfg, n_probes, max_flips)
+        return multiprobe_keys_for(
+            state, queries, weights, cfg, n_probes, max_flips, with_ranks=with_ranks
+        )
     qlevels = transforms.discretize(queries, cfg.space)
     keys = _keys_for(qlevels, weights, state.tables, cfg, state.mixers, impl=impl)
-    return keys[:, :, None]  # (b, L, 1)
+    keys = keys[:, :, None]  # (b, L, 1)
+    if not with_ranks:
+        return keys
+    return keys, jnp.zeros(keys.shape, jnp.int32)  # single probe = rank 0
 
 
 def sources_for(
@@ -159,6 +171,46 @@ def execute(
     return QueryResult(dists=dists, ids=ids, n_candidates=n_candidates)
 
 
+def execute_streamed(
+    state: ALSHIndex,
+    delta: DeltaSegment | None,
+    tombstones: jax.Array | None,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig,
+    keys: jax.Array,
+    k: int,
+    exit_group: int = 8,
+    exit_slack: float = 0.0,
+) -> QueryResult:
+    """The adaptive-probing tail: stream the (b, L, P) window lattice in
+    trace-static ``exit_group``-sized groups (quality-major order) through a
+    ``lax.while_loop`` that carries the running top-k heap and a per-query
+    live mask, stopping each query as soon as the geometric bound or the
+    Eq 25/27 confidence estimate (at ``exit_slack`` miss budget) says the
+    remaining windows cannot change its answer. Stopped queries ride
+    all-sentinel blocks, so shapes — and the compiled program — are
+    identical across batch compositions and delta fill levels. See
+    :mod:`repro.engine.stream` for the algorithm and the bit-identity
+    argument; results additionally report ``tables_probed``/``stop_reason``.
+    """
+    from repro.engine import stream
+
+    return stream.stream_topk(
+        state,
+        delta,
+        tombstones,
+        queries,
+        weights,
+        cfg,
+        keys,
+        k,
+        scales=state.scales,
+        exit_group=exit_group,
+        exit_slack=exit_slack,
+    )
+
+
 def dispatch(
     state: ALSHIndex,
     delta: DeltaSegment | None,
@@ -172,6 +224,9 @@ def dispatch(
     max_flips: int = 3,
     impl: str = "auto",
     screen_alpha: float = 0.0,
+    early_exit: bool = False,
+    exit_group: int = 8,
+    exit_slack: float = 0.0,
 ) -> QueryResult:
     """One query dispatch for every index view — the single-host facade,
     the legacy ``repro.core`` entry points, and each shard's body inside
@@ -182,7 +237,11 @@ def dispatch(
     ``cfg`` may be None only for mode="exact" (no hashing happens).
     ``screen_alpha`` > 0 enables the quantized proxy screen of ``execute``
     (meaningful only for non-f32 storage; the jitted ``query`` wrapper
-    normalizes it away everywhere else). Trace-compatible: call under
+    normalizes it away everywhere else). ``early_exit=True`` routes the
+    probe/multiprobe key lattice through :func:`execute_streamed` instead of
+    the monolithic tail — the ``query`` wrapper folds it off whenever
+    streaming cannot apply (exact mode, an active quantized screen, or a
+    group covering the whole lattice). Trace-compatible: call under
     jit/shard_map freely, or use the jitted ``query`` wrapper from the
     host.
     """
@@ -219,6 +278,11 @@ def dispatch(
         state, queries, weights, cfg,
         mode=mode, n_probes=n_probes, max_flips=max_flips, impl=impl,
     )
+    if early_exit:
+        return execute_streamed(
+            state, delta, tombstones, queries, weights, cfg, keys, k,
+            exit_group=exit_group, exit_slack=exit_slack,
+        )
     srcs = sources_for(state, delta, tombstones, cfg, keys)
     return execute(
         srcs,
@@ -242,6 +306,9 @@ def normalize_static_args(
     max_flips: int,
     impl: str,
     screen_alpha: float,
+    early_exit: bool = False,
+    exit_group: int = 8,
+    exit_slack: float = 0.0,
 ) -> tuple:
     """Canonicalize the static arguments of a query BEFORE the jit
     compile-key lookup: every static a mode does not read is forced to its
@@ -254,8 +321,16 @@ def normalize_static_args(
     up there as a retrace-budget breach at review time, not as compile
     stalls in production).
 
+    Early-exit folds: streaming never applies to exact scans (the scan
+    already visits every row once) or under an active quantized screen
+    (the proxy screen is a global candidate-set stage — DESIGN.md §13), and
+    a group covering the whole L·P window lattice IS the monolithic tail,
+    so all three cases fold to ``early_exit=False``; whenever early exit is
+    off, ``exit_group``/``exit_slack`` are forced to 0 so the knobs cannot
+    mint compile keys for a program that never reads them.
+
     Returns the normalized ``(cfg, k, mode, n_probes, max_flips, impl,
-    screen_alpha)`` tuple.
+    screen_alpha, early_exit, exit_group, exit_slack)`` tuple.
     """
     if mode != "multiprobe":
         n_probes, max_flips = 1, 0
@@ -265,12 +340,41 @@ def normalize_static_args(
         cfg = None
     if mode == "exact" or jnp.dtype(storage_dtype) == jnp.dtype(jnp.float32):
         screen_alpha = 0.0
-    return cfg, k, mode, n_probes, max_flips, impl, float(screen_alpha)
+    if early_exit:
+        if mode == "exact" or screen_alpha > 0.0:
+            early_exit = False
+        else:
+            from repro.core.families import n_flip_subsets
+
+            p_eff = (
+                1
+                if mode == "probe"
+                else min(n_probes, n_flip_subsets(cfg.K, max_flips))
+            )
+            if exit_group >= cfg.L * p_eff:
+                early_exit = False  # one group == the monolithic tail
+    if not early_exit:
+        exit_group, exit_slack = 0, 0.0
+    return (
+        cfg,
+        k,
+        mode,
+        n_probes,
+        max_flips,
+        impl,
+        float(screen_alpha),
+        bool(early_exit),
+        int(exit_group),
+        float(exit_slack),
+    )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "k", "mode", "n_probes", "max_flips", "impl", "screen_alpha"),
+    static_argnames=(
+        "cfg", "k", "mode", "n_probes", "max_flips", "impl", "screen_alpha",
+        "early_exit", "exit_group", "exit_slack",
+    ),
 )
 def _query_jit(
     state: ALSHIndex,
@@ -285,11 +389,15 @@ def _query_jit(
     max_flips: int,
     impl: str,
     screen_alpha: float,
+    early_exit: bool,
+    exit_group: int,
+    exit_slack: float,
 ) -> QueryResult:
     return dispatch(
         state, delta, tombstones, queries, weights, cfg,
         k=k, mode=mode, n_probes=n_probes, max_flips=max_flips, impl=impl,
-        screen_alpha=screen_alpha,
+        screen_alpha=screen_alpha, early_exit=early_exit, exit_group=exit_group,
+        exit_slack=exit_slack,
     )
 
 
@@ -306,21 +414,30 @@ def query(
     max_flips: int = 3,
     impl: str = "auto",
     screen_alpha: float = 0.0,
+    early_exit: bool = False,
+    exit_group: int = 8,
+    exit_slack: float = 0.0,
 ) -> QueryResult:
     """Jitted ``dispatch`` — the one compiled entry point every consumer
     shares. Static args a mode does not read are normalized by
     :func:`normalize_static_args` before the compile-key lookup (probe
     ignores n_probes/max_flips, multiprobe and exact ignore impl, exact
-    ignores cfg entirely, and ``screen_alpha`` is forced to 0 whenever
-    screening cannot apply: f32-stored tables and exact scans), so two
+    ignores cfg entirely, ``screen_alpha`` is forced to 0 whenever
+    screening cannot apply: f32-stored tables and exact scans, and the
+    early-exit knobs fold off wherever streaming cannot apply), so two
     calls that trace the same program always reuse one executable —
     facade or legacy shim alike, whatever defaults their spec happened to
     carry."""
-    cfg, k, mode, n_probes, max_flips, impl, screen_alpha = normalize_static_args(
-        cfg, state.data.dtype, k, mode, n_probes, max_flips, impl, screen_alpha
+    (
+        cfg, k, mode, n_probes, max_flips, impl, screen_alpha,
+        early_exit, exit_group, exit_slack,
+    ) = normalize_static_args(
+        cfg, state.data.dtype, k, mode, n_probes, max_flips, impl, screen_alpha,
+        early_exit, exit_group, exit_slack,
     )
     return _query_jit(
         state, delta, tombstones, queries, weights, cfg,
         k=k, mode=mode, n_probes=n_probes, max_flips=max_flips, impl=impl,
-        screen_alpha=screen_alpha,
+        screen_alpha=screen_alpha, early_exit=early_exit, exit_group=exit_group,
+        exit_slack=exit_slack,
     )

@@ -1,0 +1,262 @@
+"""Streamed early-exit tail: confidence-bounded adaptive probing.
+
+The monolithic :func:`repro.engine.pipeline.execute` pays the full
+merge → dedupe → rerank cost of all L·P probe windows for EVERY query —
+the worst-case budget the planner provisioned (Eq 24/26 solve L for the
+hardest query), even though most queries meet their neighbour in the
+first handful of tables. This module streams the same windows through the
+same primitives a trace-static group at a time and stops per query as
+soon as the running top-k is final:
+
+  * **Window order** is quality-major, not table-major: visit-position
+    ``j`` maps to probe rank ``j // L`` of table ``j % L``, so every
+    query's own-bucket windows (multiprobe rank 0 — the paper's
+    single-probe lookup) are streamed across all tables before any
+    perturbed bucket. The theta multiprobe sequence emits keys in
+    increasing flip-cost order (:meth:`ThetaFamily.multiprobe_keys`), so
+    the P axis position IS the per-query quality rank — the contract
+    :func:`repro.core.multiprobe.multiprobe_keys_for` exposes via
+    ``with_ranks=True``.
+  * **The loop** is a single ``jax.lax.while_loop`` carrying the running
+    top-k heap ``(b, k)``, a per-query live mask, and the probe/stop
+    accounting. Every iteration probes one group of ``exit_group``
+    windows, masks the block of already-stopped queries to the sentinel
+    (shapes never depend on data — the program cannot retrace across
+    delta fill levels or batch compositions), re-dedupes the heap ids
+    into the block, and re-ranks the merged ``(b, k + G·C)`` candidates
+    with the group-sized fused gather kernel.
+  * **The stop predicate** is evaluated per query after each group:
+    geometric — the kth running distance is provably unbeatable by any
+    unseen window (under generalized weights the only sound bucket bound
+    is the zero bound: distances are >= 0 iff the query's weights are all
+    non-negative, so the rule fires exactly at ``kth == 0``); confidence
+    — the Eq 25/27 collision estimate at the observed running radius says
+    an unseen better-than-kth neighbour collided in none of the rank-0
+    windows probed so far with probability <= ``exit_slack`` (computed in
+    log space so a deep table budget cannot underflow the miss bound to a
+    spurious 0).
+
+Bit-identity: every selection in the engine — ``jax.lax.top_k`` over
+ascending-unique deduped ids, and the Pallas replace-max with strict
+``dist < worst`` — picks exactly the k smallest candidates under the
+(dist, id) lexicographic order. Merging the running heap into each
+group's deduped block therefore maintains, by induction, "heap == k
+smallest (dist, id) of everything seen", and a full streamed pass (no
+query stops) returns the monolithic tail's answer bit for bit. With
+``exit_slack = 0`` the confidence rule is statically disabled and the
+geometric rule fires only at distance exactly 0, so streamed results
+remain bit-identical to ``early_exit=False`` on any dataset without
+duplicate rows at distance 0 from a query (ties at 0 may reorder ids
+among equal-distance neighbours — DESIGN.md §13).
+
+``n_candidates`` stays the EXACT unique-candidate count (the paper's
+sublinearity metric): the loop carries a per-query (b, n_tot + 1) seen
+bitmask — heap evictions that get re-probed in a later group cannot be
+double-counted, so a full streamed pass reports the monolithic tail's
+count bit for bit. ``tables_probed`` counts probe WINDOWS visited
+(== tables when P = 1); ``stop_reason`` is one of the ``STOP_*`` codes
+below.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import theory
+from repro.core.index import (
+    ALSHIndex,
+    DeltaSegment,
+    IndexConfig,
+    QueryResult,
+    _dedupe_candidates,
+    _delta_candidates,
+    _mask_dead,
+    _probe_one_table,
+    delta_live_mask,
+)
+
+# stop_reason codes (stable, stamped through QueryReport / --stats)
+STOP_EXHAUSTED = 0  # every group streamed, no early stop
+STOP_GEOMETRIC = 1  # running kth distance provably unbeatable
+STOP_CONFIDENCE = 2  # Eq 25/27 miss estimate under the slack budget
+
+# Eq 25/27 clip — matches Index.explain's success stamping
+_P1_EPS = 1e-12
+
+
+def window_order(L: int, P: int, exit_group: int) -> tuple:
+    """The static quality-major visit order, padded to whole groups.
+
+    Returns ``(tables, ranks, n_windows, n_groups)`` where ``tables`` /
+    ``ranks`` are int ndarrays of length ``n_groups * exit_group`` giving
+    each visit position's (table, probe-rank) pair. Visit position ``j``
+    maps to ``(j % L, j // L)`` — all rank-0 windows first. Padding
+    repeats the LAST window: a padded slot re-probes an already-streamed
+    window, whose candidates dedupe against the heap, so the union of
+    probed windows (and therefore the result) is unchanged.
+    """
+    n_windows = L * P
+    n_groups = -(-n_windows // exit_group)
+    j = np.minimum(np.arange(n_groups * exit_group), n_windows - 1)
+    return (j % L).astype(np.int32), (j // L).astype(np.int32), n_windows, n_groups
+
+
+def _miss_log_prob(r_raw, weights, cfg: IndexConfig, tables_done):
+    """log of the Eq 25/27 miss estimate: probability a point within
+    running radius ``r_raw`` of its query collided with the query in NONE
+    of the ``tables_done`` own-bucket windows probed so far. Radii reach
+    theory in lattice units (raw distance × space.t), at each query's OWN
+    weight vector — the same stamping Index.explain applies."""
+    r = r_raw * cfg.space.t
+    if cfg.family == "l2":
+        p1 = theory.collision_prob_l2(r, cfg.M, cfg.d, weights, cfg.W)
+    else:
+        p1 = theory.collision_prob_theta(r, cfg.M, cfg.d, weights)
+    p1 = jnp.clip(p1, _P1_EPS, 1.0 - _P1_EPS)
+    return tables_done * jnp.log1p(-(p1**cfg.K))
+
+
+def stream_topk(
+    state: ALSHIndex,
+    delta: DeltaSegment | None,
+    tombstones: jax.Array | None,
+    queries: jax.Array,
+    weights: jax.Array,
+    cfg: IndexConfig,
+    keys: jax.Array,
+    k: int,
+    scales: jax.Array | None = None,
+    exit_group: int = 8,
+    exit_slack: float = 0.0,
+) -> QueryResult:
+    """The streamed adaptive-probing tail (see module docstring).
+
+    ``keys`` is the full (b, L, P) probing sequence from
+    :func:`repro.engine.pipeline.probe_keys` — P axis ordered by per-query
+    probe quality. ``exit_group`` and ``exit_slack`` must be the
+    NORMALIZED statics (``normalize_static_args`` guarantees >= 2 groups
+    and no active quantized screen on this path).
+    """
+    from repro.kernels import ops
+
+    b, L, P = keys.shape
+    n_main = state.n
+    cap = delta.capacity if delta is not None else 0
+    n_tot = n_main + cap
+    segmented = tombstones is not None or delta is not None
+    if segmented and tombstones is None:
+        tombstones = jnp.zeros((n_tot,), bool)
+    C = cfg.max_candidates
+    G = exit_group
+    tbl, _ranks, n_windows, n_groups = window_order(L, P, G)
+    tbl = jnp.asarray(tbl)
+    # per-query keys in visit order (b, n_groups*G): rank-major gather of
+    # the (b, L, P) lattice
+    kw = keys[:, tbl, jnp.asarray(_ranks)]
+
+    main_data = state.data
+    delta_data = delta.data if cap else None
+
+    # The delta segment seeds the heap OUTSIDE the loop: it is one
+    # fixed-shape key-match source, not a window stream, and folding it
+    # into the initial heap keeps every loop iteration's shapes identical.
+    # (Final result = k smallest over delta ∪ all windows either way.)
+    # seen[q, i] == candidate i already examined for query q; slot n_tot is
+    # the sentinel sink, dropped from the final count. Exact bookkeeping —
+    # heap evictions re-probed in a later group cannot double-count.
+    seen0 = jnp.zeros((b, n_tot + 1), bool)
+    mark = jax.vmap(lambda s, c: s.at[c].set(True))
+    if cap:
+        live_slots = delta_live_mask(delta, tombstones, n_main)
+        dcand = _delta_candidates(keys, delta, live_slots, n_main, n_tot)
+        cand0, _ = _dedupe_candidates(dcand, n_tot)
+        heap_d, heap_i = ops.gather_rerank_topk_group(
+            main_data, cand0, queries, weights, k, delta=delta_data, scales=scales
+        )
+        seen0 = mark(seen0, cand0)
+    else:
+        heap_d = jnp.full((b, k), jnp.inf, jnp.float32)
+        heap_i = jnp.full((b, k), -1, jnp.int32)
+
+    # geometric bound: with non-negative weights every wl1 distance is
+    # >= 0, so a full heap at kth == 0 cannot be beaten (strict-< replace).
+    # Any negative weight voids the bound — the rule never fires there.
+    w_nonneg = jnp.all(weights >= 0.0, axis=1)
+
+    probe = jax.vmap(
+        jax.vmap(_probe_one_table, in_axes=(0, 0, 0, None)),  # group windows
+        in_axes=(None, None, 0, None),  # query batch
+    )
+
+    def cond(carry):
+        g, _hd, _hi, live, _probed, _reason, _seen = carry
+        return (g < n_groups) & jnp.any(live)
+
+    def body(carry):
+        g, hd, hi, live, probed, reason, seen = carry
+        lo = g * G
+        tbl_g = jax.lax.dynamic_slice(tbl, (lo,), (G,))
+        keys_g = jax.lax.dynamic_slice(kw, (jnp.int32(0), lo), (b, G))
+        block = probe(
+            state.sorted_keys[tbl_g], state.perm[tbl_g], keys_g, C
+        ).reshape(b, G * C)
+        if segmented:
+            block = _mask_dead(block, tombstones, n_main, n_tot)
+        # stopped queries ride an all-sentinel block — frozen result, same
+        # shapes, no retrace
+        block = jnp.where(live[:, None], block, n_tot)
+        heap_ids = jnp.where(hi >= 0, hi, n_tot).astype(jnp.int32)
+        cand, _ = _dedupe_candidates(
+            jnp.concatenate([heap_ids, block], axis=1), n_tot
+        )
+        nd, ni = ops.gather_rerank_topk_group(
+            main_data, cand, queries, weights, k, delta=delta_data, scales=scales
+        )
+        hd = jnp.where(live[:, None], nd, hd)
+        hi = jnp.where(live[:, None], ni, hi)
+        seen = mark(seen, block)
+        probed = probed + jnp.where(
+            live, jnp.minimum(G, n_windows - lo).astype(jnp.int32), 0
+        )
+
+        rk = hd[:, k - 1]
+        heap_full = hi[:, k - 1] >= 0
+        geo = heap_full & w_nonneg & (rk <= 0.0)
+        if exit_slack > 0.0:
+            rk_safe = jnp.where(jnp.isfinite(rk), rk, 0.0)
+            tables_done = jnp.minimum(probed, L).astype(jnp.float32)
+            log_miss = _miss_log_prob(rk_safe, weights, cfg, tables_done)
+            conf = heap_full & (log_miss <= math.log(exit_slack))
+        else:
+            # slack 0 statically disables the confidence rule — an
+            # underflowed miss estimate must never read as "certain"
+            conf = jnp.zeros_like(geo)
+        reason = jnp.where(live & geo, STOP_GEOMETRIC, reason)
+        reason = jnp.where(live & conf & ~geo, STOP_CONFIDENCE, reason)
+        live = live & ~(geo | conf)
+        return g + 1, hd, hi, live, probed, reason, seen
+
+    init = (
+        jnp.int32(0),
+        heap_d,
+        heap_i,
+        jnp.ones((b,), bool),
+        jnp.zeros((b,), jnp.int32),
+        jnp.full((b,), STOP_EXHAUSTED, jnp.int32),
+        seen0,
+    )
+    _g, heap_d, heap_i, _live, probed, reason, seen = jax.lax.while_loop(
+        cond, body, init
+    )
+    return QueryResult(
+        dists=heap_d,
+        ids=heap_i,
+        n_candidates=jnp.sum(seen[:, :n_tot], axis=1).astype(jnp.int32),
+        tables_probed=probed,
+        stop_reason=reason,
+    )

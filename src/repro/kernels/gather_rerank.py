@@ -435,6 +435,40 @@ def gather_rerank_topk_auto(
     )
 
 
+# The streamed early-exit tail merges (b, k + G·C) blocks per group — far
+# smaller than a full-plan candidate tensor, but re-ranked once per
+# while_loop iteration, so the chunked fori_loop's per-chunk bookkeeping is
+# paid n_groups times over. The group entry therefore prefers the monolithic
+# fusion up to a 2x wider footprint before falling back to chunking.
+GROUP_MONOLITH_BYTES = 2 * MONOLITH_BYTES
+
+
+def gather_rerank_topk_group(
+    data: jax.Array,
+    ids: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+    delta: jax.Array | None = None,
+    scales: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Group-sized fused tail for the streamed early-exit loop: the same
+    contract (and bit-identical selection — both schedules are tested
+    equal) as :func:`gather_rerank_topk_auto`, with the monolith/chunked
+    crossover moved to ``GROUP_MONOLITH_BYTES`` because the caller invokes
+    it once per while_loop iteration on heap+group-sized blocks."""
+    b, P = ids.shape
+    d = data.shape[1]
+    working_set = b * P * d * 4 * (3 if delta is not None else 1)
+    if working_set <= GROUP_MONOLITH_BYTES:
+        return _gather_rerank_topk_monolith(
+            data, ids, queries, weights, k, delta=delta, scales=scales
+        )
+    return gather_rerank_topk_chunked(
+        data, ids, queries, weights, k, delta=delta, scales=scales
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("k", "chunk"))
 def gather_rerank_topk_chunked(
     data: jax.Array,

@@ -141,3 +141,29 @@ def gather_rerank_topk(
     return _ref.gather_rerank_topk_segmented(
         data, delta, ids, queries, weights, k, scales=scales
     )
+
+
+def gather_rerank_topk_group(
+    data: jax.Array,
+    ids: jax.Array,
+    queries: jax.Array,
+    weights: jax.Array,
+    k: int,
+    force: str | None = None,
+    delta: jax.Array | None = None,
+    scales: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused tail entry for GROUP-sized candidate blocks — the per-iteration
+    merge of the streamed early-exit loop (repro.engine.stream). Identical
+    id/sentinel/top-k contract to :func:`gather_rerank_topk`; on CPU the
+    dispatch crossover is widened (see ``gather_rerank.GROUP_MONOLITH_BYTES``)
+    so the small heap+group blocks stay in the monolithic fusion instead of
+    paying the chunked schedule's bookkeeping once per while_loop step."""
+    mode = force or ("pallas" if _on_tpu() else "group")
+    if mode == "group":
+        return _gr.gather_rerank_topk_group(
+            data, ids, queries, weights, k, delta=delta, scales=scales
+        )
+    return gather_rerank_topk(
+        data, ids, queries, weights, k, force=mode, delta=delta, scales=scales
+    )

@@ -94,6 +94,13 @@ def serve_alsh(args):
         # quantized tier: screen against compressed rows, exact-rerank the
         # top k*alpha survivors
         spec = dataclasses.replace(spec, screen_alpha=args.screen_alpha)
+    if args.early_exit and spec.mode != "exact" and spec.screen_alpha == 0.0:
+        # adaptive probing: stream probe windows, stop per query once the
+        # running top-k clears the confidence bound (DESIGN §13)
+        spec = dataclasses.replace(
+            spec, early_exit=True, exit_group=args.exit_group,
+            exit_slack=args.exit_slack,
+        )
     exact = QuerySpec(k=svc.topk, mode="exact")
     print(f"[alsh] serving policy: {spec}")
 
@@ -127,6 +134,14 @@ def serve_alsh(args):
                   f"rows_screened~{float(np.mean(rep.rows_screened)):.1f} "
                   f"rows_reranked~{float(np.mean(rep.rows_reranked)):.1f} "
                   f"bytes_gathered~{float(np.mean(rep.bytes_gathered)):.0f}")
+            if rep.tables_probed is not None:
+                # adaptive-probing accounting: windows visited + stop mix
+                d = rep.to_dict()
+                n_win = cfg.L * (spec.n_probes if spec.mode == "multiprobe"
+                                 else 1)
+                print(f"[alsh]   stats: tables_probed~"
+                      f"{d['mean_tables_probed']:.1f}/{n_win} "
+                      f"stop_reasons={d['stop_reasons']}")
 
 
 def serve_alsh_stream(args):
@@ -365,6 +380,18 @@ def main():
                     help="alsh mode: print storage-tier accounting "
                          "(table_bytes, rows screened/reranked, bytes "
                          "gathered) per batch")
+    ap.add_argument("--early-exit", action="store_true",
+                    help="alsh mode: adaptive probing — stream probe "
+                         "windows in trace-static groups and stop per "
+                         "query at the confidence bound (f32 tables only; "
+                         "folds off under an active quantized screen)")
+    ap.add_argument("--exit-group", type=int, default=8,
+                    help="alsh mode: probe windows per streamed group "
+                         "(with --early-exit)")
+    ap.add_argument("--exit-slack", type=float, default=0.1,
+                    help="alsh mode: acceptable miss probability for the "
+                         "confidence stop; 0 disables it (geometric-only, "
+                         "bit-identical results)")
     ap.add_argument("--multiprobe", action="store_true",
                     help="serve with QuerySpec(mode='multiprobe')")
     ap.add_argument("--probes", type=int, default=8,

@@ -38,11 +38,20 @@ TABLE_VERSION = 1
 OBJECTIVES = (("recall", -1), ("cost", 1), ("mem_bytes", 1))
 
 # fields copied from a trial record into a frontier entry — deterministic
-# only (us_per_query is deliberately absent; see module docstring)
+# only (us_per_query is deliberately absent; see module docstring).
+# early-exit knobs ride along so the planner prior can replay them;
+# tables_probed is informational (the cost column already embeds it).
 _ENTRY_FIELDS = (
     "trial_id", "family", "K", "L", "W", "n_probes", "max_flips",
     "window", "k", "shards", "recall", "cand_frac", "cost", "mem_bytes",
+    "early_exit", "exit_group", "exit_slack", "tables_probed",
 )
+
+# defaults for records written before the early-exit axes existed
+_ENTRY_DEFAULTS = {
+    "early_exit": False, "exit_group": 0, "exit_slack": 0.0,
+    "tables_probed": None,
+}
 
 
 def _objective_vector(rec: dict) -> tuple:
@@ -88,7 +97,10 @@ def pareto_front(records: list) -> list:
 
 
 def _entry(rec: dict) -> dict:
-    return {k: rec[k] for k in _ENTRY_FIELDS}
+    return {
+        k: rec.get(k, _ENTRY_DEFAULTS[k]) if k in _ENTRY_DEFAULTS else rec[k]
+        for k in _ENTRY_FIELDS
+    }
 
 
 @dataclasses.dataclass

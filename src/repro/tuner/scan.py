@@ -51,9 +51,25 @@ __all__ = ["TrialStore", "run_trial", "run_scan", "resolve_width", "scan_is_comp
 SLOT_COST = 0.02
 
 
-def trial_cost(L: int, n_probes: int, window: int, mean_cand: float) -> float:
-    """The deterministic latency proxy used for Pareto dominance."""
-    return float(mean_cand) + SLOT_COST * L * n_probes * window
+def trial_cost(
+    L: int,
+    n_probes: int,
+    window: int,
+    mean_cand: float,
+    mean_tables: float | None = None,
+) -> float:
+    """The deterministic latency proxy used for Pareto dominance.
+
+    ``mean_tables`` is the measured mean probe windows visited (early-exit
+    trials): the slot term then charges only the expected fraction of the
+    L·n_probes lattice the streamed tail actually touched — the
+    expected-tables-probed cost column dominance runs over. None (or a
+    full sweep) charges the whole lattice, exactly the pre-streaming
+    model."""
+    slots = float(L * n_probes * window)
+    if mean_tables is not None:
+        slots *= min(1.0, float(mean_tables) / float(L * n_probes))
+    return float(mean_cand) + SLOT_COST * slots
 
 
 def resolve_width(trial: TrialSpec, data, key) -> float:
@@ -137,6 +153,8 @@ def run_trial(trial_dict: dict, real_data=None) -> dict:
         k=trial.k, mode="multiprobe" if trial.n_probes > 1 else "probe",
         n_probes=trial.n_probes if trial.n_probes > 1 else 1,
         max_flips=trial.max_flips, max_candidates=trial.window,
+        early_exit=trial.early_exit, exit_group=trial.exit_group,
+        exit_slack=trial.exit_slack,
     )
     handle = index
     if trial.shards > 1:
@@ -146,6 +164,11 @@ def run_trial(trial_dict: dict, real_data=None) -> dict:
     exact = handle.query(qs, ws, QuerySpec(k=trial.k, mode="exact"))
     recall = float(recall_at_k(res.ids, exact.ids, trial.k))
     mean_cand = float(jnp.mean(res.n_candidates))
+    mean_tables = (
+        float(jnp.mean(res.tables_probed))
+        if res.tables_probed is not None
+        else None
+    )
 
     # advisory wall time: median of 3 warm calls (compile excluded)
     times = []
@@ -159,9 +182,14 @@ def run_trial(trial_dict: dict, real_data=None) -> dict:
         family=trial.family, K=trial.K, L=trial.L, W=float(W),
         n_probes=trial.n_probes, max_flips=trial.max_flips,
         window=trial.window, k=trial.k, shards=trial.shards,
+        early_exit=trial.early_exit, exit_group=trial.exit_group,
+        exit_slack=trial.exit_slack,
+        tables_probed=mean_tables,
         recall=recall,
         cand_frac=mean_cand / trial.profile.n,
-        cost=trial_cost(trial.L, trial.n_probes, trial.window, mean_cand),
+        cost=trial_cost(
+            trial.L, trial.n_probes, trial.window, mean_cand, mean_tables
+        ),
         mem_bytes=int(
             sum(x.nbytes for x in jax.tree_util.tree_leaves(index.state))
         ),

@@ -161,6 +161,9 @@ class TrialSpec:
     M: int = 32
     shards: int = 1
     base_seed: int = 0
+    early_exit: bool = False
+    exit_group: int = 8
+    exit_slack: float = 0.0
 
     def payload(self) -> dict:
         """The semantic content the trial id hashes (everything that can
@@ -179,6 +182,9 @@ class TrialSpec:
             "M": self.M,
             "shards": self.shards,
             "base_seed": self.base_seed,
+            "early_exit": self.early_exit,
+            "exit_group": self.exit_group,
+            "exit_slack": self.exit_slack,
         }
 
     @property
@@ -226,10 +232,14 @@ class ScanSpace:
     M: int = 32
     shards: int = 1
     base_seed: int = 0
+    early_exit: tuple = (False,)
+    exit_group: tuple = (8,)
+    exit_slack: float = 0.1
 
     def __post_init__(self):
         # normalize axes to tuples so the space hashes/serializes stably
-        for f in ("profiles", "families", "K", "L", "W", "n_probes", "window"):
+        for f in ("profiles", "families", "K", "L", "W", "n_probes", "window",
+                  "early_exit", "exit_group"):
             object.__setattr__(self, f, tuple(getattr(self, f)))
         if not self.profiles:
             raise ValueError("ScanSpace.profiles must name at least one DataProfile")
@@ -259,6 +269,9 @@ class ScanSpace:
             "M": self.M,
             "shards": self.shards,
             "base_seed": self.base_seed,
+            "early_exit": list(self.early_exit),
+            "exit_group": list(self.exit_group),
+            "exit_slack": self.exit_slack,
         }
 
     @classmethod
@@ -267,6 +280,9 @@ class ScanSpace:
         d["profiles"] = tuple(DataProfile.from_dict(p) for p in d["profiles"])
         for f in ("families", "K", "L", "W", "n_probes", "window"):
             d[f] = tuple(d[f])
+        for f in ("early_exit", "exit_group"):
+            if f in d:
+                d[f] = tuple(d[f])
         return cls(**d)
 
     def trials(self) -> tuple:
@@ -281,6 +297,12 @@ class ScanSpace:
           * K above a family's cap (theta: 31) is dropped.
           * windows below k, and profiles smaller than the held-out query
             draw, are dropped.
+          * early-exit points whose L·n_probes lattice spans fewer than two
+            ``exit_group`` groups are dropped (the engine's normalization
+            folds them onto the monolithic program — measuring them would
+            duplicate the early_exit=False point); when early exit is off
+            the group/slack knobs collapse to their defaults for the same
+            reason.
         """
         out, seen = [], set()
         for profile in self.profiles:
@@ -302,18 +324,30 @@ class ScanSpace:
                                 for C in self.window:
                                     if C < self.k or self.k >= profile.n:
                                         continue
-                                    t = TrialSpec(
-                                        profile=profile, family=fam, K=K, L=L,
-                                        W=W, n_probes=p,
-                                        max_flips=max_flips if p > 1 else 0,
-                                        window=C, k=self.k,
-                                        queries=self.queries, M=self.M,
-                                        shards=self.shards,
-                                        base_seed=self.base_seed,
-                                    )
-                                    if t.trial_id not in seen:
-                                        seen.add(t.trial_id)
-                                        out.append(t)
+                                    for early in self.early_exit:
+                                        for G in self.exit_group:
+                                            if not early:
+                                                G, slack = 8, 0.0  # collapse
+                                            else:
+                                                slack = self.exit_slack
+                                                if L * p < 2 * G:
+                                                    continue  # folds to off
+                                            t = TrialSpec(
+                                                profile=profile, family=fam,
+                                                K=K, L=L, W=W, n_probes=p,
+                                                max_flips=(
+                                                    max_flips if p > 1 else 0
+                                                ),
+                                                window=C, k=self.k,
+                                                queries=self.queries, M=self.M,
+                                                shards=self.shards,
+                                                base_seed=self.base_seed,
+                                                early_exit=early, exit_group=G,
+                                                exit_slack=slack,
+                                            )
+                                            if t.trial_id not in seen:
+                                                seen.add(t.trial_id)
+                                                out.append(t)
         return tuple(out)
 
 

@@ -332,9 +332,23 @@ def test_normalize_static_args_folds_redundant_axes():
     a = normalize_static_args(cfg, f32, 3, "probe", 8, 3, "auto", 2.0)
     b = normalize_static_args(cfg, f32, 3, "probe", 1, 0, "auto", 0.0)
     assert a == b
-    # exact drops cfg, impl, alpha entirely
+    # exact drops cfg, impl, alpha entirely (and the early-exit knobs)
     a = normalize_static_args(cfg, i8, 3, "exact", 8, 3, "gather", 2.0)
-    assert a == (None, 3, "exact", 1, 0, "auto", 0.0)
+    assert a == (None, 3, "exact", 1, 0, "auto", 0.0, False, 0, 0.0)
     # int8 keeps a real alpha; multiprobe folds impl but keeps probes
     a = normalize_static_args(cfg, i8, 3, "multiprobe", 4, 2, "gather", 2.0)
-    assert a == (cfg, 3, "multiprobe", 4, 2, "auto", 2.0)
+    assert a == (cfg, 3, "multiprobe", 4, 2, "auto", 2.0, False, 0, 0.0)
+    # early exit: dead knobs zero while off; an active screen folds it off;
+    # a single group folds it off; a live streamed point keeps its knobs
+    a = normalize_static_args(cfg, f32, 3, "probe", 1, 0, "auto", 0.0,
+                              False, 16, 0.5)
+    assert a == b
+    a = normalize_static_args(cfg, i8, 3, "probe", 1, 0, "auto", 2.0,
+                              True, 4, 0.1)
+    assert a[7:] == (False, 0, 0.0)
+    a = normalize_static_args(cfg, f32, 3, "probe", 1, 0, "auto", 0.0,
+                              True, cfg.L, 0.1)
+    assert a == b
+    a = normalize_static_args(cfg, f32, 3, "probe", 1, 0, "auto", 0.0,
+                              True, 4, 0.1)
+    assert a[7:] == (True, 4, 0.1)

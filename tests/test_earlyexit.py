@@ -1,0 +1,320 @@
+"""Adaptive probing (engine early exit): parity, stopping, and contracts.
+
+The streamed tail (:mod:`repro.engine.stream`) replays the monolithic
+pipeline's windows a trace-static group at a time and stops per query at
+the geometric / Eq 25-27 confidence bound. Its correctness contract is
+pinned here:
+
+  * at ``exit_slack=0`` on duplicate-free data the streamed result is
+    BIT-IDENTICAL (ids, dists, n_candidates) to ``early_exit=False`` —
+    which the test_engine suite already pins to the PR 5 legacy oracle —
+    across both families × sealed/segmented/quantized views and
+    group sizes that do and do not divide the window count;
+  * the streamed program never retraces across delta fill levels,
+    tombstone churn, or batch content, and dead knobs (exit_group /
+    exit_slack while ``early_exit=False``) do not mint compile keys;
+  * adversarial stopping: all queries stopping in the FIRST group
+    (duplicate rows at distance 0 → geometric) and NO query stopping
+    (slack 0, distinct rows → exhausted) both return correct results with
+    correctly stamped ``tables_probed`` / ``stop_reason``;
+  * the multiprobe rank contract ``probe_keys(..., with_ranks=True)``
+    exposes: P-axis position is the per-query probe quality rank, and the
+    keys are bit-identical to the rank-free call.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.api import (
+    BoundedSpace,
+    Index,
+    IndexConfig,
+    QuerySpec,
+    UpdateSpec,
+)
+from repro.engine.stream import (
+    STOP_CONFIDENCE,
+    STOP_EXHAUSTED,
+    STOP_GEOMETRIC,
+    window_order,
+)
+
+N = 400
+D = 8
+CAP = 64
+
+
+def _cfg(family="theta", **kw):
+    kw.setdefault("max_candidates", N + CAP)  # no window truncation (parity)
+    kw.setdefault("space", BoundedSpace(0.0, 1.0, 8.0))
+    kw.setdefault("W", 8.0)
+    kw.setdefault("K", 6)
+    kw.setdefault("L", 10)
+    return IndexConfig(d=D, M=8, family=family, **kw)
+
+
+def _problem(rng, salt=0, m=37, b=5):
+    data = jax.random.uniform(jax.random.fold_in(rng, salt), (N, D))
+    extra = jax.random.uniform(jax.random.fold_in(rng, salt + 1), (m, D))
+    q = jax.random.uniform(jax.random.fold_in(rng, salt + 2), (b, D))
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, salt + 3), (b, D))) + 0.2
+    return data, extra, q, w
+
+
+def _index_for(rng, data, extra, family, view):
+    bkey = jax.random.fold_in(rng, 9)
+    if view == "sealed":
+        return Index.build(bkey, data, _cfg(family=family))
+    if view == "quantized":
+        return Index.build(bkey, data, _cfg(family=family, storage="int8"))
+    index = Index.build(
+        bkey, data, _cfg(family=family), update=UpdateSpec(delta_capacity=CAP)
+    )
+    index, ids = index.insert(extra)
+    return index.delete(
+        jnp.asarray([0, 5, 17, int(ids[3]), int(ids[11])], jnp.int32)
+    )
+
+
+def _assert_bit_identical(got, want):
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(want.ids))
+    np.testing.assert_array_equal(np.asarray(got.dists), np.asarray(want.dists))
+    np.testing.assert_array_equal(
+        np.asarray(got.n_candidates), np.asarray(want.n_candidates)
+    )
+
+
+# ---------------------------------------------------------------------------
+# slack-0 bit-identity: streamed == monolithic, the full matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["theta", "l2"])
+@pytest.mark.parametrize("mode", ["probe", "multiprobe"])
+@pytest.mark.parametrize("view", ["sealed", "segmented", "quantized"])
+def test_slack_zero_streamed_matches_monolithic(rng, family, mode, view):
+    if family == "l2" and mode == "multiprobe":
+        pytest.skip("l2 family does not support multiprobe")
+    data, extra, q, w = _problem(rng)
+    index = _index_for(rng, data, extra, family, view)
+    off = QuerySpec(k=7, mode=mode)
+    on = QuerySpec(k=7, mode=mode, early_exit=True, exit_group=4,
+                   exit_slack=0.0)
+    res_on = index.query(q, w, on)
+    _assert_bit_identical(res_on, index.query(q, w, off))
+    # full pass: every query exhausts every window, stamped as such
+    P = 1 if mode == "probe" else int(
+        engine.probe_keys(index.state, q, w, index.config, mode=mode,
+                          n_probes=on.n_probes, max_flips=on.max_flips).shape[2]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res_on.tables_probed), index.config.L * P
+    )
+    np.testing.assert_array_equal(np.asarray(res_on.stop_reason), STOP_EXHAUSTED)
+
+
+def test_slack_zero_identical_for_nondividing_group(rng):
+    """Group sizes that do NOT divide L·P exercise the padded last group —
+    the repeated window must dedupe away without changing the result."""
+    data, extra, q, w = _problem(rng)
+    index = _index_for(rng, data, extra, "theta", "segmented")
+    want = index.query(q, w, QuerySpec(k=7))
+    for G in (3, 4, 7):  # L=10: 10 % G != 0 for 3, 4, 7
+        got = index.query(
+            q, w, QuerySpec(k=7, early_exit=True, exit_group=G, exit_slack=0.0)
+        )
+        _assert_bit_identical(got, want)
+
+
+def test_negative_weights_disable_geometric_stop(rng):
+    """Negative weights can make distances negative — the zero bound is
+    unsound there, so streamed results must still match the monolithic
+    tail bit for bit (the rule never fires)."""
+    data, extra, q, _ = _problem(rng)
+    w = jax.random.normal(jax.random.fold_in(rng, 77), q.shape)  # mixed sign
+    index = _index_for(rng, data, extra, "theta", "sealed")
+    on = QuerySpec(k=7, early_exit=True, exit_group=4, exit_slack=0.0)
+    res = index.query(q, w, on)
+    _assert_bit_identical(res, index.query(q, w, QuerySpec(k=7)))
+    np.testing.assert_array_equal(np.asarray(res.stop_reason), STOP_EXHAUSTED)
+
+
+# ---------------------------------------------------------------------------
+# adversarial stopping
+# ---------------------------------------------------------------------------
+
+
+def test_all_queries_stop_in_first_group(rng):
+    """Every query finds k exact duplicates at distance 0 in its own
+    bucket: the geometric bound fires after the FIRST group for all of
+    them, and the answers are exactly those duplicates."""
+    k, b = 4, 3
+    q = jax.random.uniform(jax.random.fold_in(rng, 0), (b, D))
+    filler = jax.random.uniform(jax.random.fold_in(rng, 1), (N - b * k, D))
+    # k copies of each query, then filler; ids of q[i]'s copies are known
+    data = jnp.concatenate([jnp.repeat(q, k, axis=0), filler])
+    index = Index.build(jax.random.fold_in(rng, 9), data, _cfg())
+    w = jnp.ones((b, D))
+    res = index.query(
+        q, w, QuerySpec(k=k, early_exit=True, exit_group=4, exit_slack=0.0)
+    )
+    np.testing.assert_array_equal(np.asarray(res.stop_reason), STOP_GEOMETRIC)
+    np.testing.assert_array_equal(np.asarray(res.tables_probed), 4)
+    np.testing.assert_array_equal(np.asarray(res.dists), 0.0)
+    want_ids = np.arange(b * k).reshape(b, k)  # ascending id among dist ties
+    np.testing.assert_array_equal(np.asarray(res.ids), want_ids)
+
+
+def test_confidence_stop_fires_and_stays_correct(rng):
+    """A loose slack stops easy queries early (reason CONFIDENCE, fewer
+    windows) while the returned neighbours still match the exact oracle on
+    clustered data where rank-0 probes find the true neighbour."""
+    # tight cluster around each query: its neighbour is in its own bucket
+    q = jax.random.uniform(jax.random.fold_in(rng, 0), (4, D)) * 0.8 + 0.1
+    near = q[:, None, :] + 1e-3 * jax.random.normal(
+        jax.random.fold_in(rng, 1), (4, 8, D)
+    )
+    filler = jax.random.uniform(jax.random.fold_in(rng, 2), (N - 32, D))
+    data = jnp.concatenate([near.reshape(-1, D), filler])
+    index = Index.build(jax.random.fold_in(rng, 9), data, _cfg(L=16))
+    w = jnp.ones((4, D))
+    res = index.query(
+        q, w, QuerySpec(k=3, early_exit=True, exit_group=4, exit_slack=0.4)
+    )
+    probed = np.asarray(res.tables_probed)
+    reasons = np.asarray(res.stop_reason)
+    assert (reasons == STOP_CONFIDENCE).any(), (probed, reasons)
+    assert probed[reasons == STOP_CONFIDENCE].max() < index.config.L
+    # stopped early, still right: top-1 is each query's nearest cluster row
+    exact = index.query(q, w, QuerySpec(k=3, mode="exact"))
+    np.testing.assert_array_equal(
+        np.asarray(res.ids[:, 0]), np.asarray(exact.ids[:, 0])
+    )
+
+
+# ---------------------------------------------------------------------------
+# trace contract: one program across fills, batches, and dead knobs
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_no_retrace_across_fills_and_batches(rng):
+    """One compiled streamed program per (geometry, spec) across the
+    index's whole mutable life AND across query batch contents."""
+    from repro.analysis import cache_size
+
+    data, extra, q, w = _problem(rng)
+    index = Index.build(
+        jax.random.fold_in(rng, 9), data, _cfg(),
+        update=UpdateSpec(delta_capacity=CAP),
+    )
+    spec = QuerySpec(k=5, early_exit=True, exit_group=4, exit_slack=0.1)
+    jq = jax.jit(lambda ix, q, w: ix.query(q, w, spec))
+    jins = jax.jit(lambda ix, rows: ix.insert(rows))
+    jdel = jax.jit(lambda ix, ids: ix.delete(ids))
+    for i in range(4):
+        index, _ = jins(index, extra[i * 8 : (i + 1) * 8])
+        index = jdel(index, jnp.asarray([i * 3], jnp.int32))
+        qb = jax.random.uniform(jax.random.fold_in(rng, 100 + i), q.shape)
+        jq(index, qb, w)
+    assert cache_size(jq) == 1
+
+
+def test_dead_exit_knobs_share_compiled_program(rng):
+    """exit_group / exit_slack are normalized away while early_exit=False,
+    and fold-to-off corners (single group, exact mode) reuse the
+    monolithic program instead of minting streamed keys."""
+    from repro.analysis import RetraceGuard
+
+    data, extra, q, w = _problem(rng)
+    index = _index_for(rng, data, extra, "theta", "sealed")
+    r1 = index.query(q, w, QuerySpec(k=3))
+    with RetraceGuard() as guard:
+        r2 = index.query(
+            q, w, QuerySpec(k=3, early_exit=False, exit_group=16, exit_slack=0.5)
+        )
+        guard.assert_no_retrace(context="dead knobs while early_exit=False")
+    _assert_bit_identical(r1, r2)
+    with RetraceGuard() as guard:
+        r3 = index.query(
+            q, w,
+            # exit_group >= L·P ⇒ one group ⇒ normalized back to monolithic
+            QuerySpec(k=3, early_exit=True, exit_group=64, exit_slack=0.1),
+        )
+        guard.assert_no_retrace(context="single-group early exit folds to off")
+    _assert_bit_identical(r1, r3)
+
+
+def test_early_exit_spec_validation():
+    with pytest.raises(ValueError, match="exact"):
+        QuerySpec(k=3, mode="exact", early_exit=True)
+    with pytest.raises(ValueError, match="exit_group"):
+        QuerySpec(k=3, early_exit=True, exit_group=0)
+    with pytest.raises(ValueError, match="exit_slack"):
+        QuerySpec(k=3, early_exit=True, exit_slack=1.0)
+
+
+# ---------------------------------------------------------------------------
+# window order + multiprobe rank contract
+# ---------------------------------------------------------------------------
+
+
+def test_window_order_is_quality_major_and_padded():
+    tbl, ranks, n_windows, n_groups = window_order(L=10, P=3, exit_group=4)
+    assert n_windows == 30 and n_groups == 8
+    assert tbl.shape == (32,) and ranks.shape == (32,)
+    # all rank-0 windows stream before any rank-1 window
+    np.testing.assert_array_equal(tbl[:10], np.arange(10))
+    np.testing.assert_array_equal(ranks[:10], 0)
+    np.testing.assert_array_equal(ranks[10:20], 1)
+    # padding repeats the LAST real window
+    np.testing.assert_array_equal(tbl[30:], 9)
+    np.testing.assert_array_equal(ranks[30:], 2)
+
+
+def test_probe_keys_rank_contract(rng):
+    """with_ranks=True: keys bit-identical to the rank-free call, ranks
+    are the P-axis position (the multiprobe family emits most-likely
+    first), zeros in probe mode."""
+    data, extra, q, w = _problem(rng)
+    index = _index_for(rng, data, extra, "theta", "sealed")
+    state, cfg = index.state, index.config
+    plain = engine.probe_keys(state, q, w, cfg, mode="multiprobe",
+                              n_probes=4, max_flips=2)
+    keys, ranks = engine.probe_keys(state, q, w, cfg, mode="multiprobe",
+                                    n_probes=4, max_flips=2, with_ranks=True)
+    np.testing.assert_array_equal(np.asarray(keys), np.asarray(plain))
+    assert ranks.shape == keys.shape
+    np.testing.assert_array_equal(
+        np.asarray(ranks),
+        np.broadcast_to(np.arange(keys.shape[2])[None, None, :], keys.shape),
+    )
+    pkeys, pranks = engine.probe_keys(state, q, w, cfg, with_ranks=True)
+    assert pkeys.shape == (q.shape[0], cfg.L, 1)
+    np.testing.assert_array_equal(np.asarray(pranks), 0)
+
+
+# ---------------------------------------------------------------------------
+# reporting: the stamps ride QueryReport / explain
+# ---------------------------------------------------------------------------
+
+
+def test_explain_stamps_tables_probed_and_stop_reason(rng):
+    data, extra, q, w = _problem(rng)
+    index = _index_for(rng, data, extra, "theta", "sealed")
+    on = QuerySpec(k=5, early_exit=True, exit_group=4, exit_slack=0.1)
+    rep = index.explain(q, w, on)
+    assert rep.tables_probed is not None and rep.stop_reason is not None
+    assert rep.tables_probed.shape == (q.shape[0],)
+    d = rep.to_dict()
+    assert d["mean_tables_probed"] == pytest.approx(
+        float(np.mean(rep.tables_probed))
+    )
+    assert sum(d["stop_reasons"].values()) == q.shape[0]
+    # monolithic plans stamp None — the report distinguishes "probed all
+    # by design" from "streamed and exhausted"
+    rep_off = index.explain(q, w, QuerySpec(k=5))
+    assert rep_off.tables_probed is None and rep_off.stop_reason is None
+    assert rep_off.to_dict()["mean_tables_probed"] is None
